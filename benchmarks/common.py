@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: datasets, timing, CSV rows."""
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+from repro.data import vectors
+
+# Scaled statistical twins of Table 1 (full-size shapes live in the dry-run).
+BENCH_N = int(os.environ.get("BENCH_N", 8000))
+# LeanVec-Sphering requires m >~ D learning queries: K_Q = QQ^T must have
+# full rank or W's pseudo-inverse collapses the query projection (measured:
+# m=128 at D=512 flips the Fig-5 ordering). The paper uses 10k.
+BENCH_QUERIES = int(os.environ.get("BENCH_QUERIES", 1024))
+
+ROWS: List[str] = []
+
+
+@functools.lru_cache(maxsize=None)
+def dataset(name: str):
+    spec = dict(vectors.DATASETS[name])
+    spec["n"] = min(spec["n"], BENCH_N)
+    return vectors.make_dataset(name, n=spec["n"], d=spec["d"],
+                                n_queries=BENCH_QUERIES, ood=spec["ood"],
+                                seed=17)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time in microseconds (post-compile)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)

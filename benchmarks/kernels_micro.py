@@ -1,0 +1,54 @@
+"""Kernel microbenchmarks: jnp reference path wall-time on CPU plus the
+HBM-bytes-per-query analytic model that determines TPU throughput (the
+quantity the paper's DR reduces). Pallas kernels themselves are validated in
+interpret mode by the test suite; their VMEM tiling is recorded here."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.quantization import quantize
+from repro.kernels import (gleanvec_ip_ref, ip_topk_ref, kmeans_assign_ref,
+                           sq_dot_ref)
+
+
+def run(n: int = 100_000, dim: int = 512, d: int = 160, c: int = 48,
+        m: int = 64):
+    rng = np.random.default_rng(0)
+    x_full = jnp.asarray(rng.standard_normal((n, dim)).astype(np.float32))
+    x_low = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    q_full = jnp.asarray(rng.standard_normal((m, dim)).astype(np.float32))
+    q_low = jnp.asarray(rng.standard_normal((m, d)).astype(np.float32))
+    tags = jnp.asarray(rng.integers(0, c, n).astype(np.int32))
+    q_views = jnp.asarray(rng.standard_normal((m, c, d)).astype(np.float32))
+    cent = jnp.asarray(rng.standard_normal((c, dim)).astype(np.float32))
+
+    f_full = jax.jit(lambda q, x: ip_topk_ref(q, x, 10))
+    us = time_fn(f_full, q_full, x_full)
+    emit("kernel/ip_topk/fullD", us,
+         f"bytes_per_vec={dim * 4};tile=(128,512)xD")
+
+    us = time_fn(f_full, q_low, x_low)
+    emit("kernel/ip_topk/reduced", us,
+         f"bytes_per_vec={d * 4};bw_saving={dim / d:.2f}x")
+
+    f_gv = jax.jit(lambda qv, t, x: gleanvec_ip_ref(qv, t, x))
+    us = time_fn(f_gv, q_views, tags, x_low)
+    emit("kernel/gleanvec_ip/reduced", us,
+         f"bytes_per_vec={d * 4 + 4};vmem_qviews_kb={c * d * 4 // 1024}")
+
+    db = quantize(x_low)
+    f_sq = jax.jit(lambda q, cds, lo, dl: sq_dot_ref(q, cds, lo, dl))
+    us = time_fn(f_sq, q_low, db.codes, db.lo, db.delta)
+    emit("kernel/sq_dot/int8", us,
+         f"bytes_per_vec={d + 8};bw_saving={dim * 4 / (d + 8):.1f}x")
+
+    f_km = jax.jit(lambda x, ce: kmeans_assign_ref(x, ce))
+    us = time_fn(f_km, x_full, cent)
+    emit("kernel/kmeans_assign", us, f"C={c};D={dim}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit) and
+writes them to results/bench.csv.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks import (common, fig4_fig5_linear, fig6_cluster_structure,
+                            fig7_tag_access, fig8_gleanvec, kernels_micro,
+                            table1_search)
+    print("name,us_per_call,derived")
+    fig4_fig5_linear.run()
+    fig6_cluster_structure.run()
+    fig7_tag_access.run()
+    fig8_gleanvec.run()
+    table1_search.run()
+    kernels_micro.run()
+    out = os.path.join(os.path.dirname(__file__), "..", "results")
+    os.makedirs(out, exist_ok=True)
+    with open(os.path.join(out, "bench.csv"), "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.write("\n".join(common.ROWS) + "\n")
+    print(f"# wrote {len(common.ROWS)} rows to results/bench.csv")
+
+
+if __name__ == '__main__':
+    main()

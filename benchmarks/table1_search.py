@@ -1,0 +1,101 @@
+"""Paper Table 1 / throughput axis: end-to-end multi-step search QPS and
+recall at the paper's operating point (10-recall@10 target ~0.9) for
+full-precision vs LeanVec-Sphering vs GleanVec databases, flat and graph
+indices, plus the int8-quantized variant (LVQ on top of Bx).
+
+CPU wall times characterize relative speedups (D/d bandwidth scaling);
+absolute TPU numbers come from the roofline analysis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import dataset, emit, time_fn
+from repro.core import gleanvec as gv, leanvec_sphering as lvs, metrics
+from repro.core.quantization import quantize
+from repro.index import bruteforce, graph
+
+
+def run():
+    ds = dataset("laion-OOD")
+    X = jnp.asarray(ds.database)
+    Q = jnp.asarray(ds.queries_learn)
+    QT = jnp.asarray(ds.queries_test)
+    gt = jnp.asarray(ds.gt[:, :10])
+    dim = X.shape[1]
+    d = dim // 4
+    kappa = 50
+    nq = QT.shape[0]
+
+    def finish(cand):
+        vecs = X[jnp.where(cand >= 0, cand, 0)]
+        full = jnp.einsum("mkd,md->mk", vecs, QT)
+        top = jax.lax.top_k(jnp.where(cand >= 0, full, -3.4e38), 10)[1]
+        return jnp.take_along_axis(cand, top, axis=1)
+
+    # full-D flat (baseline search)
+    us = time_fn(lambda: bruteforce.search(QT, X, 10)[1])
+    _, ids = bruteforce.search(QT, X, 10)
+    emit("table1/flat/fullD", us,
+         f"recall10={float(metrics.recall_at_k(ids, gt)):.3f};"
+         f"qps={nq / (us / 1e6):.0f}")
+
+    # sphering flat + rerank
+    m = lvs.fit(Q, X, d)
+    q_low = QT @ m.a.T
+    x_low = X @ m.b.T
+
+    def sphering_search():
+        _, cand = bruteforce.search(q_low, x_low, kappa)
+        return finish(cand)
+
+    us = time_fn(sphering_search)
+    emit(f"table1/flat/sphering-d{d}", us,
+         f"recall10={float(metrics.recall_at_k(sphering_search(), gt)):.3f};"
+         f"qps={nq / (us / 1e6):.0f}")
+
+    # gleanvec flat + rerank
+    model = gv.fit(jax.random.PRNGKey(0), Q, X, c=48, d=d)
+    tags, xg_low = gv.encode_database(model, X)
+    q_views = gv.project_queries_eager(model, QT)
+
+    def gleanvec_search():
+        _, cand = bruteforce.search_gleanvec(q_views, tags, xg_low, kappa)
+        return finish(cand)
+
+    us = time_fn(gleanvec_search)
+    emit(f"table1/flat/gleanvec-d{d}", us,
+         f"recall10={float(metrics.recall_at_k(gleanvec_search(), gt)):.3f};"
+         f"qps={nq / (us / 1e6):.0f}")
+
+    # int8-quantized sphering (compounded compression)
+    db = quantize(x_low)
+
+    def sq_search():
+        _, cand = bruteforce.search_quantized(q_low, db.codes, db.lo,
+                                              db.delta, kappa)
+        return finish(cand)
+
+    us = time_fn(sq_search)
+    emit(f"table1/flat/sphering-d{d}-int8", us,
+         f"recall10={float(metrics.recall_at_k(sq_search(), gt)):.3f};"
+         f"qps={nq / (us / 1e6):.0f}")
+
+    # graph index (reduced space) + rerank
+    g = graph.build(np.asarray(xg_low), r=24, n_iters=5, seed=0)
+
+    def graph_search():
+        _, cand = graph.beam_search_gleanvec(q_views, tags, xg_low, g,
+                                             k=kappa, beam=96, max_hops=200)
+        return finish(cand)
+
+    us = time_fn(graph_search)
+    emit(f"table1/graph/gleanvec-d{d}", us,
+         f"recall10={float(metrics.recall_at_k(graph_search(), gt)):.3f};"
+         f"qps={nq / (us / 1e6):.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,7 @@
+"""repro: GleanVec/LeanVec-Sphering vector-search acceleration framework (JAX).
+
+Layers: core (paper algorithms), index (vector-search substrate), kernels
+(Pallas TPU), models (assigned architectures), train/serve (runtime),
+configs (architecture registry), launch (mesh/dryrun/drivers).
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""Per-architecture configuration modules (assignment + paper's own)."""
+from repro.configs import registry
+
+__all__ = ["registry"]

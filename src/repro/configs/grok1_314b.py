@@ -1,0 +1,34 @@
+"""grok-1-314b [moe]: 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8 experts top-2. Experts do not divide the 16-way model
+axis -> tp-sharded experts (d_ff tensor-parallel) + FSDP.
+[hf:xai-org/grok-1; unverified]"""
+import jax.numpy as jnp
+
+from repro.configs.lm_common import FULL_ATTN_LONG_SKIP, LM_SHAPES
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+
+ARCH_ID = "grok-1-314b"
+FAMILY = "lm"
+SHAPES = {k: v for k, v in LM_SHAPES.items() if k != "long_500k"}
+TRAIN_ACCUM = 16
+OPTIMIZER = "adafactor"
+ACCUM_DTYPE = "bfloat16"
+SKIPS = dict(FULL_ATTN_LONG_SKIP)
+
+
+def make_config(smoke: bool = False) -> TransformerConfig:
+    if smoke:
+        return TransformerConfig(
+            name=ARCH_ID + "-smoke", n_layers=2, d_model=64, n_heads=4,
+            n_kv_heads=2, d_head=16, d_ff=128, vocab=256,
+            moe=MoEConfig(n_experts=4, top_k=2, group_size=32,
+                          sharding="tp"),
+            q_chunk=32, loss_chunks=2, remat_policy="dots")
+    return TransformerConfig(
+        name=ARCH_ID, n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+        d_head=128, d_ff=32768, vocab=131072,
+        moe=MoEConfig(n_experts=8, top_k=2, group_size=256, sharding="tp"),
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+        q_chunk=512, loss_chunks=16, remat_policy="nothing",
+        remat_block=8)

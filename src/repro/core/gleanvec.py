@@ -1,0 +1,169 @@
+"""GleanVec (paper Section 4, Algorithm 5): piecewise-linear query-aware DR.
+
+Learning (Algorithm 5):
+  1. spherical k-means on normalized database -> landmarks {mu_c};
+  2. partition X by Eq. (19);
+  3. per cluster, LeanVec-Sphering (Algorithm 2) -> (A_c, B_c).
+
+Encoding: x_i -> (c_i, B_{c_i} x_i) stored contiguously (Eq. 14-15).
+Query-side: lazy (Alg. 3) or eager (Alg. 4) selection of A_{c_i} q.
+
+The per-cluster fits share the sphering matrix W (it depends on the queries
+only), so learning computes one (D,D) eigh for W plus a batched (vmapped)
+eigh over the C per-cluster sphered moments W K_X^c W.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linalg, spherical_kmeans
+from repro.core.leanvec_sphering import SpheringModel
+
+__all__ = ["GleanVecModel", "fit", "fit_from_moments", "encode_database",
+           "sort_by_tag",
+           "project_queries_eager", "inner_products_lazy",
+           "inner_products_eager", "per_cluster_moments"]
+
+
+class GleanVecModel(NamedTuple):
+    """Learned GleanVec transform.
+
+    ``centers``: (C, D) unit landmarks;  ``a``: (C, d, D);  ``b``: (C, d, D);
+    ``w`` / ``w_pinv``: (D, D) shared sphering (query-side).
+    """
+
+    centers: jax.Array
+    a: jax.Array
+    b: jax.Array
+    w: jax.Array
+    w_pinv: jax.Array
+
+    @property
+    def n_clusters(self) -> int:
+        return self.centers.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.a.shape[1]
+
+    def truncate(self, d: int) -> "GleanVecModel":
+        """Runtime target-d selection (Section 3.1 carries over per cluster)."""
+        return GleanVecModel(self.centers, self.a[:, :d], self.b[:, :d],
+                             self.w, self.w_pinv)
+
+
+def per_cluster_moments(x: jax.Array, tags: jax.Array, c: int) -> jax.Array:
+    """K_X^c = sum_{x in X_c} x x^T for each cluster: (C, D, D).
+
+    One einsum; shards over rows of ``x`` under pjit (psum on output).
+    """
+    onehot = jax.nn.one_hot(tags, c, dtype=jnp.float32)
+    return jnp.einsum("nc,nd,ne->cde", onehot, x.astype(jnp.float32),
+                      x.astype(jnp.float32))
+
+
+def fit_from_moments(centers: jax.Array, k_q: jax.Array,
+                     k_x_per_cluster: jax.Array, d: int,
+                     rel_eps: float = 1e-4) -> GleanVecModel:
+    """Per-cluster LeanVec-Sphering given precomputed moments."""
+    w, w_pinv = linalg.sphering_from_moment(k_q, rel_eps)
+
+    def fit_one(k_x_c):
+        m = w @ k_x_c @ w
+        m = 0.5 * (m + m.T)
+        p = linalg.topk_eigvecs(m, d)
+        return p @ w_pinv, p @ w
+
+    a, b = jax.vmap(fit_one)(k_x_per_cluster)
+    return GleanVecModel(centers=centers, a=a, b=b, w=w, w_pinv=w_pinv)
+
+
+@functools.partial(jax.jit, static_argnames=("c", "d", "kmeans_iters"))
+def fit(key: jax.Array, queries: jax.Array, database: jax.Array, c: int,
+        d: int, kmeans_iters: int = 25, rel_eps: float = 1e-4
+        ) -> GleanVecModel:
+    """Algorithm 5. ``queries: (m, D)``, ``database: (n, D)``."""
+    km = spherical_kmeans.fit(key, database, c, kmeans_iters)
+    x_unit = spherical_kmeans.normalize_rows(database.astype(jnp.float32))
+    tags = spherical_kmeans.assign(x_unit, km.centers)
+    k_q = linalg.second_moment(queries)
+    k_x_c = per_cluster_moments(database, tags, c)
+    return fit_from_moments(km.centers, k_q, k_x_c, d, rel_eps)
+
+
+def encode_database(model: GleanVecModel, database: jax.Array):
+    """Eq. (14)-(15): tags ``c_i`` and reduced vectors ``x_i_low = B_{c_i} x_i``.
+
+    Returns ``(tags: (n,) int32, x_low: (n, d))``. The pair is what a
+    deployment stores contiguously per vector.
+    """
+    x_unit = spherical_kmeans.normalize_rows(database.astype(jnp.float32))
+    tags = spherical_kmeans.assign(x_unit, model.centers)
+    # x_low_i = B_{tags_i} x_i: gather the (d, D) block then contract.
+    x_low = jnp.einsum("ndk,nk->nd", model.b[tags], database.astype(jnp.float32))
+    return tags, x_low
+
+
+def project_queries_eager(model: GleanVecModel, queries: jax.Array):
+    """Alg. 4 preprocess: all views q_c = A_c q. (m, C, d)."""
+    return jnp.einsum("cdk,mk->mcd", model.a, queries.astype(jnp.float32))
+
+
+def inner_products_lazy(model: GleanVecModel, query: jax.Array,
+                        tags: jax.Array, x_low: jax.Array) -> jax.Array:
+    """Alg. 3: per-vector on-the-fly A_{c_i} q. query: (D,) -> (n,) scores."""
+    a_sel = model.a[tags]                      # (n, d, D) gather
+    q_proj = jnp.einsum("ndk,k->nd", a_sel, query.astype(jnp.float32))
+    return jnp.sum(q_proj * x_low, axis=-1)
+
+
+def inner_products_eager(q_views: jax.Array, tags: jax.Array,
+                         x_low: jax.Array) -> jax.Array:
+    """Alg. 4: select precomputed view q_{c_i}. q_views: (C, d) for one query."""
+    return jnp.sum(q_views[tags] * x_low, axis=-1)
+
+
+def sort_by_tag(tags, x_low, x_full=None, block: int = 4096):
+    """Cluster-contiguous layout for the sorted scan (see
+    index.bruteforce.search_gleanvec_sorted): sorts rows by tag, pads each
+    cluster boundary... (simple variant: global sort + per-block majority
+    tag; exact single-tag blocks require per-cluster padding, done here).
+
+    Returns (x_low_sorted, block_tags, perm, x_full_sorted) where
+    ``perm[i_sorted] = original id`` (padding rows map to id -1 and are
+    filled with zeros so they never win a max-inner-product).
+    """
+    import numpy as np
+    tags_np = np.asarray(tags)
+    x_low_np = np.asarray(x_low)
+    n, d = x_low_np.shape
+    order = np.argsort(tags_np, kind="stable")
+    sorted_tags = tags_np[order]
+    c = int(tags_np.max()) + 1 if n else 1
+    rows, perm, blk_tags = [], [], []
+    full_rows = None if x_full is None else []
+    x_full_np = None if x_full is None else np.asarray(x_full)
+    for ci in range(c):
+        sel = order[sorted_tags == ci]
+        pad = (-len(sel)) % block
+        rows.append(x_low_np[sel])
+        perm.append(sel.astype(np.int64))
+        if full_rows is not None:
+            full_rows.append(x_full_np[sel])
+        if pad:
+            rows.append(np.zeros((pad, d), x_low_np.dtype))
+            perm.append(np.full(pad, -1, np.int64))
+            if full_rows is not None:
+                full_rows.append(
+                    np.zeros((pad, x_full_np.shape[1]), x_full_np.dtype))
+        blk_tags.extend([ci] * ((len(sel) + pad) // block))
+    x_low_sorted = jnp.asarray(np.concatenate(rows, axis=0))
+    perm = jnp.asarray(np.concatenate(perm))
+    block_tags = jnp.asarray(np.asarray(blk_tags, np.int32))
+    x_full_sorted = (None if full_rows is None
+                     else jnp.asarray(np.concatenate(full_rows, axis=0)))
+    return x_low_sorted, block_tags, perm, x_full_sorted

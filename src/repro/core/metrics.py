@@ -1,0 +1,41 @@
+"""Evaluation metrics (paper Section 5 "Metrics")."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["recall_at_k", "leanvec_loss", "ip_relative_error",
+           "captured_variance_profile"]
+
+
+def recall_at_k(retrieved: jax.Array, ground_truth: jax.Array) -> jax.Array:
+    """K-recall@k = |S intersect G| / K, averaged over queries.
+
+    ``retrieved``: (nq, k) ids; ``ground_truth``: (nq, K) ids.
+    """
+    k_gt = ground_truth.shape[1]
+    hits = (retrieved[:, :, None] == ground_truth[:, None, :])
+    return jnp.mean(jnp.sum(jnp.any(hits, axis=1), axis=-1) / k_gt)
+
+
+def leanvec_loss(a: jax.Array, b: jax.Array, queries: jax.Array,
+                 database: jax.Array) -> jax.Array:
+    """Problem (3) loss, normalized per (q, x) pair, computed via moments."""
+    k_q = jnp.einsum("nd,ne->de", queries, queries)
+    k_x = jnp.einsum("nd,ne->de", database, database)
+    m = a.T @ b - jnp.eye(a.shape[1], dtype=a.dtype)
+    val = jnp.trace(m.T @ k_q @ m @ k_x)
+    return val / (queries.shape[0] * database.shape[0])
+
+
+def ip_relative_error(approx: jax.Array, exact: jax.Array) -> jax.Array:
+    """Mean |approx - exact| / (|exact| + eps) over a score matrix."""
+    return jnp.mean(jnp.abs(approx - exact) / (jnp.abs(exact) + 1e-6))
+
+
+def captured_variance_profile(k_x: jax.Array) -> jax.Array:
+    """Cumulative normalized eigenvalue profile (Figure 6, right)."""
+    evals = jnp.linalg.eigvalsh(k_x)
+    evals = jnp.sort(evals)[::-1]
+    csum = jnp.cumsum(jnp.maximum(evals, 0.0))
+    return csum / jnp.maximum(csum[-1], 1e-12)

@@ -1,0 +1,56 @@
+"""Scalar quantization of reduced database vectors (paper Section 3: "we could
+apply scalar quantization to the database vectors Bx ... as in LeanVec").
+
+PER-DIMENSION affine int8: sphering-reduced vectors are strongly anisotropic
+(leading principal dims carry most variance), so per-vector ranges (LVQ on
+raw data) destroy the low-variance dims -- measured 10-recall@10 collapse
+from 0.99 to 0.14 on the laion twin. Per-dimension scales keep every dim at
+8-bit resolution AND fold into the query:
+
+    <q, u * delta + lo> = <q * delta, u> + <q, lo>
+
+so the fused kernel (kernels/sq_dot) is a pure int8 matmul with a
+query-side pre-scale -- zero extra work per database byte.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SQDatabase", "quantize", "dequantize", "quantized_inner_products"]
+
+
+class SQDatabase(NamedTuple):
+    codes: jax.Array   # (n, d) uint8 codes
+    lo: jax.Array      # (d,) per-dimension lower bound
+    delta: jax.Array   # (d,) per-dimension step
+
+    @property
+    def bits(self) -> int:
+        return 8
+
+
+def quantize(x: jax.Array, bits: int = 8) -> SQDatabase:
+    """Per-dimension affine quantization to ``bits`` (<=8) levels."""
+    levels = (1 << bits) - 1
+    lo = jnp.min(x, axis=0)
+    hi = jnp.max(x, axis=0)
+    delta = jnp.maximum(hi - lo, 1e-12) / levels
+    codes = jnp.clip(jnp.round((x - lo[None, :]) / delta[None, :]), 0,
+                     levels).astype(jnp.uint8)
+    return SQDatabase(codes=codes, lo=lo, delta=delta)
+
+
+def dequantize(db: SQDatabase) -> jax.Array:
+    return db.codes.astype(jnp.float32) * db.delta[None, :] + db.lo[None, :]
+
+
+def quantized_inner_products(query: jax.Array, db: SQDatabase) -> jax.Array:
+    """<q, dequant(x)> without materializing the dequantized matrix.
+
+    ``query (d,)`` -> scores ``(n,)``.
+    """
+    q_scaled = query * db.delta
+    return db.codes.astype(jnp.float32) @ q_scaled + query @ db.lo

@@ -1,0 +1,100 @@
+"""Multi-step vector search (paper Algorithm 1) and the GleanVec inner-product
+modes (Algorithms 3-4), index-agnostic.
+
+The main search runs in the reduced d-dimensional space through any index
+(flat scan / IVF / graph from ``repro.index``); the postprocessing step
+re-ranks the kappa candidates with full-precision inner products. With the
+flexible-d storage of Section 3.1 (full rotation P'), the rerank uses the
+*same* stored vectors (Eq. 10) -- no secondary database.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gleanvec as gv
+from repro.core.gleanvec import GleanVecModel
+from repro.core.leanvec_sphering import SpheringModel
+
+__all__ = ["SearchArtifacts", "build_artifacts_sphering",
+           "build_artifacts_gleanvec", "multi_step_search", "rerank"]
+
+
+class SearchArtifacts(NamedTuple):
+    """Everything the serving path needs, already reduced/encoded.
+
+    ``x_low``: (n, d) reduced database; ``tags``: (n,) or None (linear model);
+    ``x_full``: (n, D) full-precision vectors for reranking (or the (n, D)
+    rotated x' of Section 3.1 -- reranking is exact either way);
+    ``model``: SpheringModel | GleanVecModel.
+    """
+
+    x_low: jax.Array
+    tags: Optional[jax.Array]
+    x_full: jax.Array
+    model: object
+
+
+def build_artifacts_sphering(model: SpheringModel, database: jax.Array,
+                             use_rotated_full: bool = True) -> SearchArtifacts:
+    """Linear path. With ``use_rotated_full`` the full vectors are stored as
+    x' = P'Wx (requires d == D model; Section 3.1) so the reduced view is a
+    prefix of the stored vector."""
+    x_low = database @ model.b.T
+    if use_rotated_full and model.dim == database.shape[1]:
+        x_full = x_low  # x' = B'x; reduced view = prefix of x'
+    else:
+        x_full = database
+    return SearchArtifacts(x_low=x_low, tags=None, x_full=x_full, model=model)
+
+
+def build_artifacts_gleanvec(model: GleanVecModel,
+                             database: jax.Array) -> SearchArtifacts:
+    tags, x_low = gv.encode_database(model, database)
+    return SearchArtifacts(x_low=x_low, tags=tags, x_full=database,
+                           model=model)
+
+
+def _query_low(artifacts: SearchArtifacts, queries: jax.Array):
+    """Preprocessing (Alg. 1 line 1): reduce the queries.
+
+    For GleanVec this is the eager precompute (Alg. 4): all C views. The main
+    index search then consumes per-candidate tag-selected scores.
+    """
+    model = artifacts.model
+    if isinstance(model, GleanVecModel):
+        return gv.project_queries_eager(model, queries)  # (m, C, d)
+    return queries @ model.a.T                           # (m, d)
+
+
+def rerank(queries: jax.Array, artifacts: SearchArtifacts,
+           candidates: jax.Array, k: int):
+    """Postprocessing (Alg. 1 line 3): exact top-k among candidates.
+
+    ``candidates``: (m, kappa) ids. When x_full stores the rotated x'
+    (Section 3.1), queries must be rotated too: q' = A'q = P'W^{-1}q; that is
+    exactly ``model.a @ q`` for the d == D model, handled transparently.
+    """
+    model = artifacts.model
+    if (isinstance(model, SpheringModel)
+            and artifacts.x_full is artifacts.x_low):
+        q_full = queries @ model.a.T        # rotated query (Eq. 10)
+    else:
+        q_full = queries
+    cand_vecs = artifacts.x_full[candidates]             # (m, kappa, D)
+    scores = jnp.einsum("mkd,md->mk", cand_vecs, q_full)
+    top = jax.lax.top_k(scores, k)[1]                    # (m, k)
+    return jnp.take_along_axis(candidates, top, axis=1)
+
+
+def multi_step_search(queries: jax.Array, artifacts: SearchArtifacts,
+                      index_search: Callable, k: int, kappa: int):
+    """Algorithm 1. ``index_search(q_low, artifacts, kappa) -> (m, kappa) ids``.
+
+    ``kappa >= k`` trades accuracy for rerank cost.
+    """
+    q_low = _query_low(artifacts, queries)
+    candidates = index_search(q_low, artifacts, kappa)
+    return rerank(queries, artifacts, candidates, k)

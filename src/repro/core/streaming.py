@@ -1,0 +1,95 @@
+"""Streaming vector search support (paper Section 3.2).
+
+Maintains the D x D summary statistics
+
+    K_Q(t) = sum_{q in Q_t} q q^T,   K_X(t) = sum_{x in X_t} x x^T
+
+under vector insertions/removals (rank-1 updates, Eq. 11), refreshes the
+projections every ``s`` updates by eigendecomposition (replacing the SVDs of
+Algorithm 2), and re-projects stored database vectors with the transition
+matrix  T = P_{t+1} W_{t+1} (P_t W_t)^{-1}  (Eq. 12) -- either eagerly over
+the whole store or lazily on access (``pending`` mask).
+
+Functional style: every operation returns a new state (JAX arrays are
+immutable); the launcher owns the loop.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linalg
+from repro.core.leanvec_sphering import SpheringModel, fit_from_moments
+
+__all__ = ["StreamingState", "init", "insert", "remove", "observe_queries",
+           "needs_refresh", "refresh", "transition_matrix", "reproject"]
+
+
+class StreamingState(NamedTuple):
+    k_q: jax.Array           # (D, D) query second moment
+    k_x: jax.Array           # (D, D) database second moment
+    model: SpheringModel     # current projections (full rotation, d == D ok)
+    prev_bw: jax.Array       # (d, D) B = P W at the last refresh (for Eq. 12)
+    updates_since: jax.Array  # scalar int32: updates since last refresh
+    refresh_every: int       # s
+
+
+def init(k_q: jax.Array, k_x: jax.Array, d: int,
+         refresh_every: int = 1024) -> StreamingState:
+    model = fit_from_moments(k_q, k_x, d)
+    return StreamingState(k_q=k_q, k_x=k_x, model=model, prev_bw=model.b,
+                          updates_since=jnp.zeros((), jnp.int32),
+                          refresh_every=refresh_every)
+
+
+def insert(state: StreamingState, x: jax.Array) -> StreamingState:
+    """X_t = X_{t-1} u {x}: rank-1 update of K_X."""
+    return state._replace(k_x=state.k_x + jnp.outer(x, x),
+                          updates_since=state.updates_since + 1)
+
+
+def remove(state: StreamingState, x: jax.Array) -> StreamingState:
+    """X_t = X_{t-1} \\ {x}: rank-1 downdate of K_X."""
+    return state._replace(k_x=state.k_x - jnp.outer(x, x),
+                          updates_since=state.updates_since + 1)
+
+
+def observe_queries(state: StreamingState, q: jax.Array) -> StreamingState:
+    """Fold a batch of observed queries into K_Q (Q_t evolves over time)."""
+    return state._replace(k_q=state.k_q + linalg.second_moment(q))
+
+
+def needs_refresh(state: StreamingState) -> jax.Array:
+    return state.updates_since >= state.refresh_every
+
+
+def refresh(state: StreamingState) -> StreamingState:
+    """Recompute W, P from the current moments (s | t boundary)."""
+    d = state.model.dim
+    new_model = fit_from_moments(state.k_q, state.k_x, d)
+    return state._replace(model=new_model, prev_bw=state.model.b,
+                          updates_since=jnp.zeros((), jnp.int32))
+
+
+def transition_matrix(state: StreamingState) -> jax.Array:
+    """T = P_{t'} W_{t'} (P_{t-1} W_{t-1})^+  (Eq. 12), (d, d).
+
+    Valid exactly when d == D (full rotation storage, Section 3.1); for d < D
+    it is the least-squares re-projection onto the new basis.
+    """
+    prev = state.prev_bw
+    new = state.model.b
+    prev_pinv = jnp.linalg.pinv(prev)
+    return new @ prev_pinv
+
+
+def reproject(state: StreamingState, x_low: jax.Array,
+              pending: Optional[jax.Array] = None) -> jax.Array:
+    """Apply Eq. (12) to stored vectors; ``pending`` selects lazy subsets."""
+    t = transition_matrix(state)
+    new = x_low @ t.T
+    if pending is None:
+        return new
+    return jnp.where(pending[:, None], new, x_low)

@@ -1,0 +1,4 @@
+"""Vector-search substrate: flat, IVF and graph indices + distributed merge."""
+from repro.index import bruteforce, distributed, graph, ivf, topk
+
+__all__ = ["bruteforce", "distributed", "graph", "ivf", "topk"]

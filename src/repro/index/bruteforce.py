@@ -1,0 +1,112 @@
+"""Flat (exact within the reduced space) index: blocked brute-force MIPS.
+
+Supports three database representations:
+  * plain:     scores = q_low @ x_low^T                     (linear DR)
+  * gleanvec:  scores = <q_views[tags_i], x_low_i>          (Alg. 4, eager)
+  * quantized: scores = delta_i <q, u_i> + lo_i sum(q)      (int8 SQ)
+
+Blocked over the database so peak memory is (batch, block); this is the
+pure-JAX mirror of the ``ip_topk`` / ``gleanvec_ip`` / ``sq_dot`` Pallas
+kernels (kernels/__init__ dispatches to them on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.index import topk
+
+__all__ = ["search", "search_gleanvec", "search_gleanvec_sorted",
+           "search_quantized"]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def search(q_low: jax.Array, x_low: jax.Array, k: int, block: int = 4096):
+    """Linear path: ``q_low (m, d)``, ``x_low (n, d)`` -> (vals, ids) (m, k)."""
+    m, _ = q_low.shape
+    n = x_low.shape[0]
+
+    def score_block(start):
+        blk = jax.lax.dynamic_slice_in_dim(x_low, start, block, axis=0)
+        return q_low @ blk.T
+
+    pad = (-n) % block
+    if pad:
+        x_low = jnp.pad(x_low, ((0, pad), (0, 0)))
+    return topk.blocked_topk(score_block, n, k, block, m)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def search_gleanvec(q_views: jax.Array, tags: jax.Array, x_low: jax.Array,
+                    k: int, block: int = 4096):
+    """Eager GleanVec path (Alg. 4): ``q_views (m, C, d)``, ``tags (n,)``."""
+    m = q_views.shape[0]
+    n = x_low.shape[0]
+    pad = (-n) % block
+    if pad:
+        x_low = jnp.pad(x_low, ((0, pad), (0, 0)))
+        tags = jnp.pad(tags, (0, pad))
+
+    def score_block(start):
+        blk = jax.lax.dynamic_slice_in_dim(x_low, start, block, axis=0)
+        tag_blk = jax.lax.dynamic_slice_in_dim(tags, start, block, axis=0)
+        # (m, block, d) gather of the tag-selected query views, then contract.
+        q_sel = q_views[:, tag_blk, :]            # (m, block, d)
+        return jnp.einsum("mbd,bd->mb", q_sel, blk)
+
+    return topk.blocked_topk(score_block, n, k, block, m)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def search_gleanvec_sorted(q_views: jax.Array, block_tags: jax.Array,
+                           x_low: jax.Array, k: int, block: int = 4096):
+    """Eager GleanVec over a TAG-SORTED (cluster-contiguous) database.
+
+    With the database sorted by cluster tag (clusters padded to ``block``
+    multiples), every block has ONE tag, so scoring degenerates to a single
+    (m, d) x (d, block) matmul per block -- no per-row view gather, no
+    one-hot: exactly the FLOPs and bytes of the plain LeanVec scan plus one
+    tag lookup per block. This is the beyond-paper layout optimization the
+    Perf log quantifies (13x lower HBM writes than the gather formulation).
+
+    ``block_tags (n_blocks,)``: tag of each block. Returned ids live in the
+    sorted space; translate through the sort permutation.
+    """
+    m = q_views.shape[0]
+    n = x_low.shape[0]
+    assert n % block == 0, "pad the sorted database to a block multiple"
+
+    def score_block(start):
+        blk = jax.lax.dynamic_slice_in_dim(x_low, start, block, axis=0)
+        tag = jax.lax.dynamic_index_in_dim(block_tags, start // block,
+                                           keepdims=False)
+        q_sel = jax.lax.dynamic_index_in_dim(q_views, tag, axis=1,
+                                             keepdims=False)  # (m, d)
+        return q_sel @ blk.T
+
+    return topk.blocked_topk(score_block, n, k, block, m)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def search_quantized(q_low: jax.Array, codes: jax.Array, lo: jax.Array,
+                     delta: jax.Array, k: int, block: int = 4096):
+    """Int8 scalar-quantized path: codes (n, d) uint8, lo/delta (d,).
+
+    Per-dimension scales fold into the query: scores = <q*delta, u> + <q, lo>.
+    """
+    m = q_low.shape[0]
+    n = codes.shape[0]
+    qf = q_low.astype(jnp.float32)
+    q_scaled = qf * delta[None, :]
+    q_lo = (qf @ lo)[:, None]                        # (m, 1)
+    pad = (-n) % block
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+
+    def score_block(start):
+        c = jax.lax.dynamic_slice_in_dim(codes, start, block, axis=0)
+        return q_scaled @ c.astype(jnp.float32).T + q_lo
+
+    return topk.blocked_topk(score_block, n, k, block, m)

@@ -1,0 +1,291 @@
+"""Vamana-style graph index: vectorized NN-descent build + RobustPrune
+(numpy, offline) and a batched best-first beam search (JAX, online).
+
+TPU adaptation (DESIGN.md section 2): the paper's CPU graph traversal is
+memory-latency-bound with per-vector random fetches; here beams for a whole
+query batch advance in lockstep, each hop gathering (batch, R) neighbors and
+scoring them with one MXU-friendly contraction. The scoring function is
+pluggable so the same traversal serves plain LeanVec (q_low . x_low), eager
+GleanVec (Alg. 4: per-tag query views) and int8-quantized databases.
+
+The traversal also (optionally) records the cluster tag of every expanded
+vertex -- the data behind the paper's Figure 7 (tag access pattern favoring
+eager execution).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index.topk import NEG_INF
+
+__all__ = ["GraphIndex", "build", "beam_search", "beam_search_gleanvec",
+           "beam_search_traced"]
+
+
+class GraphIndex(NamedTuple):
+    neighbors: jax.Array  # (n, R) int32, -1 padded
+    entries: jax.Array    # (E,) int32 entry points (medoid + per-cluster)
+
+
+# ---------------------------------------------------------------------------
+# Build (offline, numpy): NN-descent for candidates + RobustPrune for edges.
+# ---------------------------------------------------------------------------
+
+
+def _chunked_l2(x: np.ndarray, cand: np.ndarray, chunk: int = 2048):
+    """d2[i, j] = ||x_i - x_cand[i, j]||^2, chunked over rows."""
+    n, k = cand.shape
+    out = np.empty((n, k), np.float32)
+    x_sq = np.sum(x * x, axis=1)
+    for s in range(0, n, chunk):
+        e = min(s + chunk, n)
+        c = cand[s:e]
+        diff_ip = np.einsum("bkd,bd->bk", x[c], x[s:e])
+        out[s:e] = x_sq[c] - 2.0 * diff_ip + x_sq[s:e, None]
+    return out
+
+
+def _nn_descent(x: np.ndarray, r: int, n_iters: int, rng) -> np.ndarray:
+    """Approximate 2R-NN lists via neighbor-of-neighbor refinement."""
+    n = x.shape[0]
+    k = 2 * r
+    nbrs = rng.integers(0, n, size=(n, k), dtype=np.int64)
+    self_ids = np.arange(n)[:, None]
+    for it in range(n_iters):
+        # candidates = current + neighbors-of-neighbors (sampled) + random
+        nn = nbrs[nbrs[:, rng.permutation(k)[: max(2, k // 4)]]]
+        nn = nn.reshape(n, -1)
+        rand = rng.integers(0, n, size=(n, r // 2), dtype=np.int64)
+        cand = np.concatenate([nbrs, nn, rand], axis=1)
+        # dedupe by sorting; keep first occurrence (stable unique per row)
+        cand.sort(axis=1)
+        dup = np.concatenate(
+            [np.zeros((n, 1), bool), cand[:, 1:] == cand[:, :-1]], axis=1)
+        d2 = _chunked_l2(x, cand)
+        d2[dup] = np.inf
+        d2[cand == self_ids] = np.inf
+        sel = np.argpartition(d2, k - 1, axis=1)[:, :k]
+        nbrs = np.take_along_axis(cand, sel, axis=1)
+        row_d = np.take_along_axis(d2, sel, axis=1)
+        order = np.argsort(row_d, axis=1)
+        nbrs = np.take_along_axis(nbrs, order, axis=1)
+    return nbrs
+
+
+def _robust_prune(x: np.ndarray, cand: np.ndarray, r: int, alpha: float,
+                  chunk: int = 1024) -> np.ndarray:
+    """Vamana RobustPrune, vectorized over nodes (inner loop over K slots).
+
+    ``cand`` (n, K) sorted by distance ascending. Keeps <= r diverse edges:
+    a candidate c survives iff for every previously kept edge e,
+    alpha * d(e, c) >= d(p, c).
+    """
+    n, k = cand.shape
+    out = np.full((n, r), -1, np.int64)
+    for s in range(0, n, chunk):
+        e = min(s + chunk, n)
+        c = cand[s:e]                        # (b, K) sorted by d(p, .)
+        b = c.shape[0]
+        vecs = x[c]                          # (b, K, D)
+        # pairwise distances among candidates: (b, K, K)
+        sq = np.sum(vecs * vecs, axis=2)
+        pair = sq[:, :, None] - 2 * np.einsum("bkd,bld->bkl", vecs, vecs) \
+            + sq[:, None, :]
+        d_p = np.sum((vecs - x[s:e][:, None, :]) ** 2, axis=2)  # (b, K)
+        kept = np.zeros((b, k), bool)
+        pruned = np.zeros((b, k), bool)
+        n_kept = np.zeros(b, np.int32)
+        for j in range(k):
+            take = (~pruned[:, j]) & (n_kept < r)
+            kept[:, j] = take
+            n_kept += take
+            # prune later candidates too close to j (relative to p)
+            closer = alpha * pair[:, j, :] < d_p
+            pruned |= closer & take[:, None]
+        for row in range(b):
+            ids = c[row][kept[row]][:r]
+            out[s + row, : len(ids)] = ids
+    return out
+
+
+def build(x: np.ndarray, r: int = 32, alpha: float = 1.2, n_iters: int = 6,
+          n_random: int = 4, n_entries: int = 16, seed: int = 0
+          ) -> GraphIndex:
+    """Build a degree-(R + n_random) navigable graph over ``x``.
+
+    Two connectivity safeguards beyond plain NN-descent (clustered data --
+    e.g. the paper's multi-modal embeddings -- yields *disconnected* kNN
+    graphs, on which greedy search provably stalls):
+      * ``n_random`` NSW-style long-range out-edges appended per node;
+      * ``n_entries`` search entry points: the medoid plus the database
+        vectors nearest to spherical k-means centroids (the same clustering
+        GleanVec uses), so every mixture component is reachable in one hop.
+    """
+    x = np.asarray(x, np.float32)
+    n = x.shape[0]
+    rng = np.random.default_rng(seed)
+    cand = _nn_descent(x, r, n_iters, rng)          # (n, 2R) sorted
+    nbrs = _robust_prune(x, cand, r, alpha)         # (n, R), -1 padded
+    # add reverse edges where slots remain (improves connectivity)
+    slots = np.sum(nbrs >= 0, axis=1)
+    rev_src = nbrs.ravel()
+    rev_dst = np.repeat(np.arange(n), r)
+    ok = rev_src >= 0
+    for srcv, dstv in zip(rev_src[ok], rev_dst[ok]):
+        s = slots[srcv]
+        if s < r and dstv != srcv:
+            row = nbrs[srcv]
+            if dstv not in row[:s]:
+                nbrs[srcv, s] = dstv
+                slots[srcv] += 1
+    if n_random > 0:
+        rand_edges = rng.integers(0, n, size=(n, n_random), dtype=np.int64)
+        nbrs = np.concatenate([nbrs, rand_edges], axis=1)
+    entries = [int(np.argmin(
+        np.sum((x - x.mean(0, keepdims=True)) ** 2, axis=1)))]
+    if n_entries > 1:
+        import jax.random as jrandom
+        from repro.core import spherical_kmeans
+        km = spherical_kmeans.fit(jrandom.PRNGKey(seed), jnp.asarray(x),
+                                  min(n_entries - 1, max(2, n // 64)),
+                                  n_iters=10)
+        x_unit = x / np.maximum(
+            np.linalg.norm(x, axis=1, keepdims=True), 1e-12)
+        sims = x_unit @ np.asarray(km.centers).T
+        entries.extend(int(i) for i in np.argmax(sims, axis=0))
+    entries = np.unique(np.asarray(entries, np.int32))
+    return GraphIndex(neighbors=jnp.asarray(nbrs.astype(np.int32)),
+                      entries=jnp.asarray(entries))
+
+
+# ---------------------------------------------------------------------------
+# Search (online, JAX): batched best-first beam search.
+# ---------------------------------------------------------------------------
+
+
+def _beam_loop(score_ids, graph: GraphIndex, batch: int, beam: int,
+               max_hops: int, trace_tags: Optional[jax.Array] = None):
+    """Shared traversal. ``score_ids(ids) -> (batch, k) scores`` for id >= 0.
+
+    Returns (scores, ids, n_hops, tag_trace) with tag_trace (batch, max_hops)
+    = tag of the vertex expanded at each hop (-1 = no hop), for Figure 7.
+    """
+    nbr_tbl = graph.neighbors
+    r = nbr_tbl.shape[1]
+
+    n_entry = graph.entries.shape[0]
+    assert n_entry <= beam, "beam must hold all entry points"
+    entry = jnp.broadcast_to(graph.entries[None, :], (batch, n_entry))
+    e_scores = score_ids(entry)
+    cand_ids = jnp.concatenate(
+        [entry, jnp.full((batch, beam - n_entry), -1, jnp.int32)], axis=1)
+    cand_scores = jnp.concatenate(
+        [e_scores, jnp.full((batch, beam - n_entry), NEG_INF)], axis=1)
+    visited = jnp.zeros((batch, beam), bool)
+    tag_hist = jnp.full((batch, max_hops), -1, jnp.int32)
+
+    def cond(state):
+        _, scores, ids, visited, hop, _ = state
+        expandable = (~visited) & (ids >= 0)
+        return jnp.logical_and(hop < max_hops, jnp.any(expandable))
+
+    def body(state):
+        key_unused, scores, ids, visited, hop, tag_hist = state
+        expandable = (~visited) & (ids >= 0)
+        masked = jnp.where(expandable, scores, NEG_INF)
+        best = jnp.argmax(masked, axis=1)                      # (batch,)
+        has_work = jnp.any(expandable, axis=1)
+        best_ids = jnp.take_along_axis(ids, best[:, None], axis=1)[:, 0]
+        visited = visited.at[jnp.arange(batch), best].set(
+            visited[jnp.arange(batch), best] | has_work)
+        # expand: gather neighbors of the chosen vertex
+        nbrs = nbr_tbl[jnp.where(best_ids >= 0, best_ids, 0)]  # (batch, R)
+        nbrs = jnp.where((nbrs >= 0) & has_work[:, None], nbrs, -1)
+        nscores = score_ids(nbrs)
+        nscores = jnp.where(nbrs >= 0, nscores, NEG_INF)
+        # dedupe against current beam
+        present = jnp.any(nbrs[:, :, None] == ids[:, None, :], axis=2)
+        nscores = jnp.where(present, NEG_INF, nscores)
+        # merge and keep top-beam
+        all_scores = jnp.concatenate([scores, nscores], axis=1)
+        all_ids = jnp.concatenate([ids, nbrs], axis=1)
+        all_vis = jnp.concatenate(
+            [visited, jnp.zeros((batch, r), bool)], axis=1)
+        top_scores, sel = jax.lax.top_k(all_scores, beam)
+        top_ids = jnp.take_along_axis(all_ids, sel, axis=1)
+        top_vis = jnp.take_along_axis(all_vis, sel, axis=1)
+        if trace_tags is not None:
+            tag = jnp.where(best_ids >= 0,
+                            trace_tags[jnp.where(best_ids >= 0, best_ids, 0)],
+                            -1)
+            tag = jnp.where(has_work, tag, -1)
+            tag_hist = tag_hist.at[:, hop].set(tag)
+        return (key_unused, top_scores, top_ids, top_vis, hop + 1, tag_hist)
+
+    state = (jnp.zeros(()), cand_scores, cand_ids, visited,
+             jnp.zeros((), jnp.int32), tag_hist)
+    state = jax.lax.while_loop(cond, body, state)
+    _, scores, ids, _, hops, tag_hist = state
+    return scores, ids, hops, tag_hist
+
+
+@functools.partial(jax.jit, static_argnames=("k", "beam", "max_hops"))
+def beam_search(q_low: jax.Array, x_low: jax.Array, graph: GraphIndex,
+                k: int, beam: int = 64, max_hops: int = 256):
+    """Linear scoring: q_low (m, d), x_low (n, d) -> ids (m, k)."""
+    m = q_low.shape[0]
+
+    def score_ids(ids):
+        vecs = x_low[jnp.where(ids >= 0, ids, 0)]          # (m, k, d)
+        return jnp.einsum("mkd,md->mk", vecs, q_low)
+
+    scores, ids, _, _ = _beam_loop(score_ids, graph, m, beam, max_hops)
+    top, sel = jax.lax.top_k(scores, k)
+    return top, jnp.take_along_axis(ids, sel, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "beam", "max_hops"))
+def beam_search_gleanvec(q_views: jax.Array, tags: jax.Array,
+                         x_low: jax.Array, graph: GraphIndex, k: int,
+                         beam: int = 64, max_hops: int = 256):
+    """Eager GleanVec scoring (Alg. 4): q_views (m, C, d), tags (n,)."""
+    m = q_views.shape[0]
+    midx = jnp.arange(m)
+
+    def score_ids(ids):
+        safe = jnp.where(ids >= 0, ids, 0)
+        vecs = x_low[safe]                                  # (m, k, d)
+        tag = tags[safe]                                    # (m, k)
+        q_sel = q_views[midx[:, None], tag]                 # (m, k, d)
+        return jnp.sum(q_sel * vecs, axis=-1)
+
+    scores, ids, _, _ = _beam_loop(score_ids, graph, m, beam, max_hops)
+    top, sel = jax.lax.top_k(scores, k)
+    return top, jnp.take_along_axis(ids, sel, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "beam", "max_hops"))
+def beam_search_traced(q_views: jax.Array, tags: jax.Array, x_low: jax.Array,
+                       graph: GraphIndex, k: int, beam: int = 64,
+                       max_hops: int = 256):
+    """GleanVec search that also returns the per-hop expanded-vertex tag
+    sequence (m, max_hops) -- the measurement behind Figure 7."""
+    m = q_views.shape[0]
+    midx = jnp.arange(m)
+
+    def score_ids(ids):
+        safe = jnp.where(ids >= 0, ids, 0)
+        vecs = x_low[safe]
+        tag = tags[safe]
+        q_sel = q_views[midx[:, None], tag]
+        return jnp.sum(q_sel * vecs, axis=-1)
+
+    scores, ids, hops, tag_hist = _beam_loop(score_ids, graph, m, beam,
+                                             max_hops, trace_tags=tags)
+    top, sel = jax.lax.top_k(scores, k)
+    return top, jnp.take_along_axis(ids, sel, axis=1), hops, tag_hist

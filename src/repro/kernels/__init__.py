@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+Each kernel package ships <name>.py (pl.pallas_call + BlockSpec tiling),
+ops.py (dispatching jit wrapper) and ref.py (pure-jnp oracle used by tests
+and as the differentiable/CPU fallback).
+"""
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.gleanvec_ip import gleanvec_ip, gleanvec_ip_ref
+from repro.kernels.ip_topk import ip_topk, ip_topk_ref
+from repro.kernels.kmeans_assign import kmeans_assign, kmeans_assign_ref
+from repro.kernels.sq_dot import sq_dot, sq_dot_ref
+
+__all__ = [
+    "flash_attention", "flash_attention_ref",
+    "gleanvec_ip", "gleanvec_ip_ref",
+    "ip_topk", "ip_topk_ref",
+    "kmeans_assign", "kmeans_assign_ref",
+    "sq_dot", "sq_dot_ref",
+]

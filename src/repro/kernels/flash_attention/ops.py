@@ -1,0 +1,29 @@
+"""Public op: fused attention with Pallas kernel + differentiable fallback.
+
+The Pallas kernel is forward-only (serving / dry-run artifact); training uses
+the reference path whose VJP XLA derives (models/attention.py additionally
+provides a memory-bounded chunked jnp implementation used when lowering the
+assigned architectures).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention as _pallas_flash_attention)
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: Optional[int] = None,
+                    bq: int = 512, bk: int = 512,
+                    use_pallas: bool | None = None, interpret: bool = False):
+    """``q (B, H, S, dh)``, ``k/v (B, KV, S, dh)`` -> (B, H, S, dh)."""
+    if use_pallas is None:
+        use_pallas = interpret or jax.default_backend() == "tpu"
+    if use_pallas:
+        return _pallas_flash_attention(q, k, v, causal=causal, window=window,
+                                       bq=bq, bk=bk, interpret=interpret)
+    return flash_attention_ref(q, k, v, causal=causal, window=window)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA + causal + SWA)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """``q (B, H, S, dh)``, ``k/v (B, KV, S, dh)`` with H % KV == 0.
+
+    Sliding window: position i attends to j in (i - window, i]. ``window``
+    None = full (causal) attention.
+    """
+    b, h, s, dh = q.shape
+    kv = k.shape[1]
+    group = h // kv
+    qf = q.astype(jnp.float32) / jnp.sqrt(dh).astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= qi >= kj
+    if window is not None:
+        mask &= (qi - kj) < window
+    scores = jnp.where(mask[None, None], scores, -3.4e38)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vf).astype(q.dtype)

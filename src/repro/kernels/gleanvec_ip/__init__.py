@@ -1,0 +1,4 @@
+from repro.kernels.gleanvec_ip.ops import gleanvec_ip
+from repro.kernels.gleanvec_ip.ref import gleanvec_ip_ref
+
+__all__ = ["gleanvec_ip", "gleanvec_ip_ref"]

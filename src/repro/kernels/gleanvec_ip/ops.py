@@ -1,0 +1,20 @@
+"""Public op: eager GleanVec scoring with Pallas kernel + fallback."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.gleanvec_ip.gleanvec_ip import (gleanvec_ip
+                                                   as _pallas_gleanvec_ip)
+from repro.kernels.gleanvec_ip.ref import gleanvec_ip_ref
+
+
+def gleanvec_ip(q_views: jax.Array, tags: jax.Array, x_low: jax.Array,
+                tm: int = 8, tn: int = 512, use_pallas: bool | None = None,
+                interpret: bool = False):
+    """``q_views (M, C, d)``, ``tags (N,)``, ``x_low (N, d)`` -> (M, N)."""
+    if use_pallas is None:
+        use_pallas = interpret or jax.default_backend() == "tpu"
+    if use_pallas:
+        return _pallas_gleanvec_ip(q_views, tags, x_low, tm=tm, tn=tn,
+                                   interpret=interpret)
+    return gleanvec_ip_ref(q_views, tags, x_low)

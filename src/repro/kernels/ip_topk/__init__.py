@@ -1,0 +1,4 @@
+from repro.kernels.ip_topk.ops import ip_topk
+from repro.kernels.ip_topk.ref import ip_topk_ref
+
+__all__ = ["ip_topk", "ip_topk_ref"]

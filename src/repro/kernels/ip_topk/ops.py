@@ -1,0 +1,22 @@
+"""Public op: fused MIPS top-k with TPU Pallas kernel + portable fallback."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ip_topk.ip_topk import ip_topk as _pallas_ip_topk
+from repro.kernels.ip_topk.ref import ip_topk_ref
+
+
+def ip_topk(q: jax.Array, x: jax.Array, k: int, tm: int = 128, tn: int = 512,
+            use_pallas: bool | None = None, interpret: bool = False):
+    """``q (M, d)``, ``x (N, d)`` -> (vals (M, k) f32, ids (M, k) i32).
+
+    ``use_pallas=None`` auto-selects: Pallas on TPU backends, reference jnp
+    otherwise (interpret=True forces the Pallas path in Python emulation,
+    used by the test suite).
+    """
+    if use_pallas is None:
+        use_pallas = interpret or jax.default_backend() == "tpu"
+    if use_pallas:
+        return _pallas_ip_topk(q, x, k, tm=tm, tn=tn, interpret=interpret)
+    return ip_topk_ref(q, x, k)

@@ -1,0 +1,4 @@
+from repro.kernels.kmeans_assign.ops import kmeans_assign
+from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
+
+__all__ = ["kmeans_assign", "kmeans_assign_ref"]

@@ -1,0 +1,18 @@
+"""Public op: k-means assignment with Pallas kernel + fallback."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.kmeans_assign.kmeans_assign import (
+    kmeans_assign as _pallas_kmeans_assign)
+from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
+
+
+def kmeans_assign(x: jax.Array, centers: jax.Array, tn: int = 1024,
+                  use_pallas: bool | None = None, interpret: bool = False):
+    """``x (N, D)``, ``centers (C, D)`` -> (tags, maxsim)."""
+    if use_pallas is None:
+        use_pallas = interpret or jax.default_backend() == "tpu"
+    if use_pallas:
+        return _pallas_kmeans_assign(x, centers, tn=tn, interpret=interpret)
+    return kmeans_assign_ref(x, centers)

@@ -1,0 +1,4 @@
+from repro.kernels.sq_dot.ops import sq_dot
+from repro.kernels.sq_dot.ref import sq_dot_ref
+
+__all__ = ["sq_dot", "sq_dot_ref"]

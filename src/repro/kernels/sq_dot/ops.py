@@ -1,0 +1,19 @@
+"""Public op: int8 scalar-quantized scoring with Pallas kernel + fallback."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.sq_dot.ref import sq_dot_ref
+from repro.kernels.sq_dot.sq_dot import sq_dot as _pallas_sq_dot
+
+
+def sq_dot(q: jax.Array, codes: jax.Array, lo: jax.Array, delta: jax.Array,
+           tm: int = 128, tn: int = 512, use_pallas: bool | None = None,
+           interpret: bool = False):
+    """``q (M, d)``, ``codes (N, d)``, ``lo/delta (N,)`` -> scores (M, N)."""
+    if use_pallas is None:
+        use_pallas = interpret or jax.default_backend() == "tpu"
+    if use_pallas:
+        return _pallas_sq_dot(q, codes, lo, delta, tm=tm, tn=tn,
+                              interpret=interpret)
+    return sq_dot_ref(q, codes, lo, delta)

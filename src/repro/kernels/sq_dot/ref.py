@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the int8 scalar-quantized dot kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sq_dot_ref(q: jax.Array, codes: jax.Array, lo: jax.Array,
+               delta: jax.Array):
+    """``q (M, d)``, ``codes (N, d) u8``, ``lo/delta (d,)`` -> scores (M, N).
+
+    scores[m, n] = <q_m, codes_n * delta + lo>
+                 = <q_m * delta, codes_n> + <q_m, lo>.
+    """
+    qf = q.astype(jnp.float32)
+    q_scaled = qf * delta[None, :]
+    return q_scaled @ codes.astype(jnp.float32).T \
+        + (qf @ lo)[:, None]

@@ -1,0 +1,76 @@
+"""Render the dry-run / roofline results into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.report [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def load(mesh: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return [r for r in rows if r.get("ok")]
+
+
+def fmt_bytes(b):
+    return f"{b / 1e9:.2f}"
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | compile s | peak GB/dev | fits 16G | "
+           "HLO GFLOP/dev | coll GB/dev | top collectives |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        c = r["collectives"]
+        kinds = sorted(c["by_kind"].items(), key=lambda kv: -kv[1])[:2]
+        kinds_s = " ".join(f"{k}:{v/1e9:.1f}G" for k, v in kinds) or "-"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']} | "
+            f"{fmt_bytes(r['memory']['peak_bytes'])} | "
+            f"{'Y' if r['memory']['fits_v5e_16g'] else 'N'} | "
+            f"{r['roofline']['hlo_flops'] / 1e9:.1f} | "
+            f"{c['bytes'] / 1e9:.2f} | {kinds_s} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | MODEL_FLOPS | useful | peak frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3e} | "
+            f"{rf['memory_s']:.3e} | {rf['collective_s']:.3e} | "
+            f"**{rf['bottleneck']}** | {rf['model_flops_total']:.2e} | "
+            f"{rf['useful_flops_ratio']:.2f} | {rf['peak_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--table", default="both",
+                    choices=["dryrun", "roofline", "both"])
+    args = ap.parse_args()
+    rows = load(args.mesh)
+    if args.table in ("dryrun", "both"):
+        print(f"### Dry-run ({args.mesh} mesh, {rows[0]['n_chips'] if rows else '?'} chips)\n")
+        print(dryrun_table(rows))
+        print()
+    if args.table in ("roofline", "both"):
+        print(f"### Roofline ({args.mesh} mesh)\n")
+        print(roofline_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,624 @@
+"""Step bundles: (architecture x input-shape) -> lowerable jitted step.
+
+Every dry-run cell, training driver and smoke test goes through
+``build_bundle(arch_id, shape_name, mesh, smoke)`` which returns the step
+function, abstract arguments (ShapeDtypeStructs -- no allocation), the
+in/out PartitionSpecs for pjit, per-scan trip counts for the roofline
+correction, and the analytic MODEL_FLOPS of the step.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.core import gleanvec as gv_mod
+from repro.core import linalg, spherical_kmeans
+from repro.models import gnn, recsys, transformer as tfm
+from repro.models.sharding import MeshRules, logical_to_spec
+from repro.train import data as data_mod
+from repro.train.optimizer import (AdafactorConfig, AdafactorState,
+                                   AdamWConfig, AdamWState, adafactor_init,
+                                   adamw_init)
+from repro.train.trainstep import make_train_step
+
+__all__ = ["StepBundle", "build_bundle"]
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    trip_counts: Dict[str, int] = field(default_factory=dict)
+    model_flops: float = 0.0
+    notes: str = ""
+
+
+def _dp_spec(rules: MeshRules, *rest):
+    return P(rules.dp if rules.dp else None, *rest)
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _pad_up(n: int, mult: int) -> int:
+    return -(-n // max(mult, 1)) * max(mult, 1)
+
+
+def _opt_specs(param_specs):
+    return AdamWState(step=P(), mu=param_specs, nu=param_specs)
+
+
+def _spec_tuple(spec, ndim):
+    t = tuple(spec) if spec is not None else ()
+    return t + (None,) * (ndim - len(t))
+
+
+def _adafactor_specs(p_specs, p_shapes, momentum: bool):
+    def vr(spec, p):
+        t = _spec_tuple(spec, p.ndim)
+        return P(*t[:-1]) if p.ndim >= 2 else P(*t)
+
+    def vc(spec, p):
+        t = _spec_tuple(spec, p.ndim)
+        return P(*(t[:-2] + t[-1:])) if p.ndim >= 2 else P(None)
+
+    def mu(spec, p):
+        return spec if momentum else P(None)
+
+    is_spec = lambda x: isinstance(x, P)  # noqa: E731
+    return AdafactorState(
+        step=P(),
+        vr=jax.tree.map(vr, p_specs, p_shapes, is_leaf=is_spec),
+        vc=jax.tree.map(vc, p_specs, p_shapes, is_leaf=is_spec),
+        mu=jax.tree.map(mu, p_specs, p_shapes, is_leaf=is_spec))
+
+
+def _opt_setup(module, p_shapes, p_specs, smoke: bool):
+    """(opt_shapes, opt_specs, opt_cfg, accum_dtype) per config module."""
+    name = getattr(module, "OPTIMIZER", "adamw") if not smoke else "adamw"
+    accum_dtype = jnp.bfloat16 if (
+        getattr(module, "ACCUM_DTYPE", "") == "bfloat16" and not smoke) \
+        else jnp.float32
+    if name == "adafactor":
+        cfg = AdafactorConfig(lr=1e-2)
+        shapes = jax.eval_shape(lambda p: adafactor_init(p, cfg), p_shapes)
+        specs = _adafactor_specs(p_specs, p_shapes,
+                                 cfg.momentum is not None)
+        return shapes, specs, cfg, accum_dtype
+    return (jax.eval_shape(adamw_init, p_shapes), _opt_specs(p_specs),
+            AdamWConfig(), accum_dtype)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+
+def _lm_active_params(cfg: tfm.TransformerConfig) -> Tuple[float, float]:
+    """(active_params, total_params) excluding embeddings, including head."""
+    dq, dkv = cfg.qkv_dims
+    attn = cfg.d_model * dq * 2 + cfg.d_model * dkv * 2
+    n_mats = 3 if cfg.glu else 2
+    if cfg.moe is not None:
+        router = cfg.d_model * cfg.moe.n_experts
+        expert = n_mats * cfg.d_model * cfg.d_ff
+        mlp_total = router + cfg.moe.n_experts * expert
+        mlp_active = router + cfg.moe.top_k * expert
+    else:
+        mlp_total = mlp_active = n_mats * cfg.d_model * cfg.d_ff
+    head = cfg.d_model * cfg.vocab
+    total = cfg.n_layers * (attn + mlp_total) + head
+    active = cfg.n_layers * (attn + mlp_active) + head
+    return float(active), float(total)
+
+
+def _lm_attn_flops_train(cfg, batch, seq) -> float:
+    kv_avg = seq / 2 if cfg.swa_window is None else min(cfg.swa_window, seq)
+    # qk + pv = 2 matmuls x 2 flops; fwd + bwd = 3x
+    return 3.0 * 2 * 2 * batch * seq * kv_avg * cfg.n_heads * cfg.d_head
+
+
+def _lm_bundle(module, shape_name: str, mesh: Mesh, rules: MeshRules,
+               smoke: bool) -> StepBundle:
+    cfg = module.make_config(smoke)
+    shape = dict(module.SHAPES[shape_name])
+    if smoke:
+        shape["seq"] = min(shape["seq"], 64)
+        shape["batch"] = min(shape["batch"], 4)
+    b, s = shape["batch"], shape["seq"]
+    kind = shape["kind"]
+    active, _ = _lm_active_params(cfg)
+    p_shapes = jax.eval_shape(
+        lambda: tfm.init(jax.random.PRNGKey(0), cfg))
+    p_specs = tfm.param_specs(cfg, rules)
+
+    if kind == "train":
+        opt_shapes, o_specs, opt_cfg, accum_dtype = _opt_setup(
+            module, p_shapes, p_specs, smoke)
+        batch_shapes = {"tokens": SDS((b, s), jnp.int32),
+                        "labels": SDS((b, s), jnp.int32)}
+        b_specs = {"tokens": _dp_spec(rules, None),
+                   "labels": _dp_spec(rules, None)}
+        accum = 1 if smoke else getattr(module, "TRAIN_ACCUM", 1)
+        # microbatch must stay divisible by the data-parallel degree
+        dp_size = max(_axes_size(mesh, rules.dp), 1)
+        while accum > 1 and (b // accum) % dp_size != 0:
+            accum //= 2
+        step = make_train_step(
+            lambda p, bt: tfm.train_loss(p, bt, cfg, rules),
+            opt_cfg, accum_steps=accum, accum_dtype=accum_dtype)
+        flops = 6.0 * active * b * s + _lm_attn_flops_train(cfg, b, s)
+        return StepBundle(
+            name=f"{module.ARCH_ID}:{shape_name}", fn=step,
+            args=(p_shapes, opt_shapes, batch_shapes),
+            in_shardings=(p_specs, o_specs, b_specs),
+            out_shardings=(p_specs, o_specs, P()),
+            trip_counts={"layers": cfg.n_layers,
+                         "loss_chunks": cfg.loss_chunks,
+                         "q_chunks": max(1, s // cfg.q_chunk)},
+            model_flops=flops)
+
+    if kind == "prefill":
+        # serving uses the flat layer layout (params are re-laid-out once at
+        # serving load time; the blocked layout exists for training remat)
+        import dataclasses
+        cfg = dataclasses.replace(cfg, remat_block=0)
+        p_shapes = jax.eval_shape(lambda: tfm.init(jax.random.PRNGKey(0),
+                                                   cfg))
+        p_specs = tfm.param_specs(cfg, rules)
+        batch_shapes = SDS((b, s), jnp.int32)
+        cache_shapes = jax.eval_shape(
+            lambda: tfm.init_cache(cfg, b, s))
+        step = lambda p, t: tfm.prefill_step(p, t, cfg, rules)  # noqa: E731
+        flops = 2.0 * active * b * s \
+            + _lm_attn_flops_train(cfg, b, s) / 3.0
+        return StepBundle(
+            name=f"{module.ARCH_ID}:{shape_name}", fn=step,
+            args=(p_shapes, batch_shapes),
+            in_shardings=(p_specs, _dp_spec(rules, None)),
+            out_shardings=(logical_to_spec(rules, ("batch", "vocab")),
+                           tfm.cache_specs(cfg, rules)),
+            trip_counts={"layers": cfg.n_layers,
+                         "q_chunks": max(1, s // cfg.q_chunk)},
+            model_flops=flops)
+
+    # decode: 1 new token against a seq-long cache (flat layer layout --
+    # see the prefill note)
+    import dataclasses
+    cfg = dataclasses.replace(cfg, remat_block=0)
+    p_shapes = jax.eval_shape(lambda: tfm.init(jax.random.PRNGKey(0), cfg))
+    dp_size = _axes_size(mesh, rules.dp)
+    dp_eff = rules.dp if (b % max(dp_size, 1) == 0) else ()
+    decode_rules = MeshRules(
+        dp=dp_eff, fsdp=(rules.fsdp if cfg.moe is not None else ()),
+        tp=rules.tp, ep=rules.ep)
+    p_specs_d = tfm.param_specs(cfg, decode_rules)
+    cache_shapes = jax.eval_shape(lambda: tfm.init_cache(cfg, b, s))
+    c_specs = tfm.cache_specs(cfg, decode_rules)
+    tok = SDS((b,), jnp.int32)
+    pos = SDS((), jnp.int32)
+    step = (lambda p, c, t, q:
+            tfm.decode_step(p, c, t, q, cfg, decode_rules))
+    kv_len = tfm.cache_len(cfg, s)
+    flops = 2.0 * active * b \
+        + 2 * 2 * b * kv_len * cfg.n_heads * cfg.d_head
+    return StepBundle(
+        name=f"{module.ARCH_ID}:{shape_name}", fn=step,
+        args=(p_shapes, cache_shapes, tok, pos),
+        in_shardings=(p_specs_d, c_specs, _dp_spec(decode_rules), P()),
+        out_shardings=(logical_to_spec(decode_rules, ("batch", "vocab")),
+                       c_specs),
+        trip_counts={"layers": cfg.n_layers},
+        model_flops=flops,
+        notes="serve_step (decode)")
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+
+def _gnn_bundle(module, shape_name: str, mesh: Mesh, rules: MeshRules,
+                smoke: bool) -> StepBundle:
+    shape = dict(module.SHAPES[shape_name])
+    if smoke:
+        for k_ in ("n_nodes", "n_edges"):
+            if k_ in shape:
+                shape[k_] = min(shape[k_], 512)
+        shape["batch_nodes"] = min(shape.get("batch_nodes", 64), 64)
+        shape["batch"] = min(shape.get("batch", 8), 8)
+        shape["d_feat"] = min(shape["d_feat"], 32)
+    cfg = module.make_config(smoke=False, d_feat=shape["d_feat"],
+                             n_classes=shape["n_classes"])
+    kind = shape["kind"]
+    p_shapes = jax.eval_shape(lambda: gnn.init(jax.random.PRNGKey(0), cfg))
+    p_specs = jax.tree.map(lambda _: P(), p_shapes)
+    opt_shapes = jax.eval_shape(adamw_init, p_shapes)
+    o_specs = _opt_specs(p_specs)
+    h = cfg.d_hidden
+
+    if kind == "gnn_full":
+        n, e = shape["n_nodes"], shape["n_edges"]
+        e = _pad_up(e, _axes_size(mesh, rules.dp))  # pjit-divisible edges
+        batch_shapes = {"feats": SDS((n, shape["d_feat"]), jnp.float32),
+                        "edges": SDS((2, e), jnp.int32),
+                        "labels": SDS((n,), jnp.int32),
+                        "mask": SDS((n,), jnp.float32)}
+        b_specs = {"feats": P(), "edges": P(None, rules.dp or None),
+                   "labels": P(), "mask": P()}
+        loss_fn = lambda p, bt: gnn.full_graph_loss(p, bt, cfg, rules)  # noqa
+        flops = 3.0 * (2 * n * shape["d_feat"] * h + 2 * n * h
+                       * shape["n_classes"] + 2 * e * (h + shape["n_classes"]))
+    elif kind == "gnn_minibatch":
+        n, e, bn = shape["n_nodes"], shape["n_edges"], shape["batch_nodes"]
+        f1, f2 = shape["fanouts"]
+        batch_shapes = {"feats": SDS((n, shape["d_feat"]), jnp.float32),
+                        "indptr": SDS((n + 1,), jnp.int32),
+                        "indices": SDS((e,), jnp.int32),
+                        "seeds": SDS((bn,), jnp.int32),
+                        "labels": SDS((bn,), jnp.int32),
+                        "rng": SDS((2,), jnp.uint32)}
+        b_specs = {"feats": P(), "indptr": P(), "indices": P(),
+                   "seeds": _dp_spec(rules), "labels": _dp_spec(rules),
+                   "rng": P()}
+
+        def loss_fn(p, bt):
+            bt = dict(bt)
+            bt["rng"] = jax.random.wrap_key_data(bt["rng"])
+            return gnn.minibatch_loss(p, bt, cfg, rules)
+
+        flops = 3.0 * 2 * bn * (f1 * f2 + 2 * f1 + 2) * shape["d_feat"] * h
+    else:  # gnn_batched (molecule)
+        g_, nn_, ee = shape["batch"], shape["n_nodes"], shape["n_edges"]
+        batch_shapes = {"feats": SDS((g_, nn_, shape["d_feat"]), jnp.float32),
+                        "edges": SDS((g_, ee, 2), jnp.int32),
+                        "labels": SDS((g_,), jnp.int32)}
+        b_specs = {"feats": _dp_spec(rules, None, None),
+                   "edges": _dp_spec(rules, None, None),
+                   "labels": _dp_spec(rules)}
+        loss_fn = lambda p, bt: gnn.batched_graphs_loss(p, bt, cfg, rules)  # noqa
+        flops = 3.0 * 2 * g_ * (nn_ * shape["d_feat"] * h
+                                + nn_ * h * shape["n_classes"] + ee * h)
+
+    step = make_train_step(loss_fn, AdamWConfig(lr=1e-2))
+    return StepBundle(
+        name=f"{module.ARCH_ID}:{shape_name}", fn=step,
+        args=(p_shapes, opt_shapes, batch_shapes),
+        in_shardings=(p_specs, o_specs, b_specs),
+        out_shardings=(p_specs, o_specs, P()),
+        trip_counts={}, model_flops=flops)
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+_RECSYS_MODELS = {"dlrm": recsys.dlrm, "fm": recsys.fm, "bst": recsys.bst,
+                  "mind": recsys.mind}
+
+
+def _mlp_flops(dims) -> float:
+    return float(sum(2 * a * b_ for a, b_ in zip(dims[:-1], dims[1:])))
+
+
+def _recsys_batch(model_name: str, cfg, b: int):
+    if model_name == "dlrm":
+        shapes = {"dense": SDS((b, cfg.n_dense), jnp.float32),
+                  "sparse": SDS((b, cfg.n_sparse), jnp.int32),
+                  "label": SDS((b,), jnp.int32)}
+    elif model_name == "fm":
+        shapes = {"sparse": SDS((b, cfg.n_sparse), jnp.int32),
+                  "label": SDS((b,), jnp.int32)}
+    elif model_name == "bst":
+        shapes = {"seq": SDS((b, cfg.seq_len), jnp.int32),
+                  "target": SDS((b,), jnp.int32),
+                  "label": SDS((b,), jnp.int32)}
+    else:  # mind
+        shapes = {"seq": SDS((b, cfg.seq_len), jnp.int32),
+                  "target": SDS((b,), jnp.int32)}
+    return shapes
+
+
+def _recsys_flops(model_name: str, cfg, b: int) -> float:
+    if model_name == "dlrm":
+        d = cfg.embed_dim
+        f = cfg.n_sparse + 1
+        return 3.0 * b * (_mlp_flops((cfg.n_dense,) + cfg.bot_mlp)
+                          + 2 * f * f * d
+                          + _mlp_flops((f * (f - 1) // 2 + cfg.bot_mlp[-1],)
+                                       + cfg.top_mlp))
+    if model_name == "fm":
+        return 3.0 * b * (2 * cfg.n_sparse * cfg.embed_dim)
+    if model_name == "bst":
+        d, s = cfg.embed_dim, cfg.seq_len + 1
+        blk = 4 * 2 * s * d * d + 2 * 2 * s * s * d \
+            + 2 * s * d * cfg.ff_dim * 2
+        return 3.0 * b * (cfg.n_blocks * blk
+                          + _mlp_flops((s * d,) + cfg.mlp))
+    d, s, k_ = cfg.embed_dim, cfg.seq_len, cfg.n_interests
+    return 3.0 * b * cfg.capsule_iters * (2 * 2 * s * k_ * d + 2 * d * d)
+
+
+def _recsys_param_specs(model_name: str, p_shapes, rules: MeshRules):
+    tp = rules.tp
+    dp = rules.dp if rules.dp else None
+
+    def spec_for(path, leaf):
+        name = jax.tree_util.keystr(path)
+        if "table" in name and model_name == "dlrm":
+            return P(tp, dp)          # 2D: rows x model, dim x data
+        if "item_emb" in name or ("'v'" in name) or ("'w'" in name
+                                                     and leaf.ndim == 1):
+            return P(tp) if leaf.ndim == 1 else P(tp, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, p_shapes)
+
+
+def _recsys_bundle(module, shape_name: str, mesh: Mesh, rules: MeshRules,
+                   smoke: bool) -> StepBundle:
+    model_name = module.MODEL
+    model = _RECSYS_MODELS[model_name]
+    cfg = module.make_config(smoke)
+    shape = dict(module.SHAPES[shape_name])
+    if smoke:
+        shape["batch"] = min(shape["batch"], 32)
+        shape["n_candidates"] = min(shape.get("n_candidates", 4096), 4096)
+    b = shape["batch"]
+    kind = shape["kind"]
+    p_shapes = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), cfg))
+    p_specs = _recsys_param_specs(model_name, p_shapes, rules)
+    batch_shapes = _recsys_batch(model_name, cfg, b)
+    b_specs = {k_: _dp_spec(rules, *([None] * (len(v.shape) - 1)))
+               for k_, v in batch_shapes.items()}
+    flops = _recsys_flops(model_name, cfg, b)
+
+    lookup_fn = None
+    if model_name == "dlrm" and rules.tp is not None and not smoke:
+        from repro.models.embedding import make_sharded_lookup
+        lookup_fn = make_sharded_lookup(mesh, cfg.padded_total_vocab,
+                                        cfg.embed_dim)
+
+    if kind == "recsys_train":
+        opt_shapes = jax.eval_shape(adamw_init, p_shapes)
+        o_specs = _opt_specs(p_specs)
+        if model_name == "dlrm":
+            loss_fn = (lambda p, bt: model.ctr_loss(p, bt, cfg, rules,
+                                                    lookup_fn=lookup_fn))
+        else:
+            loss_fn = lambda p, bt: model.ctr_loss(p, bt, cfg, rules)  # noqa
+        step = make_train_step(loss_fn, AdamWConfig(lr=1e-3))
+        return StepBundle(
+            name=f"{module.ARCH_ID}:{shape_name}", fn=step,
+            args=(p_shapes, opt_shapes, batch_shapes),
+            in_shardings=(p_specs, o_specs, b_specs),
+            out_shardings=(p_specs, o_specs, P()),
+            trip_counts={}, model_flops=flops)
+
+    if kind == "recsys_serve":
+        if model_name == "dlrm":
+            def serve(p, bt):
+                from repro.models import embedding as emb_mod
+                idx = bt["sparse"] + jnp.asarray(
+                    recsys.dlrm.offsets(cfg))[None, :]
+                emb = (emb_mod.embedding_lookup(p["table"], idx)
+                       if lookup_fn is None else lookup_fn(p["table"], idx))
+                return model.forward(p, bt["dense"], emb, cfg, rules)
+        elif model_name == "mind":
+            def serve(p, bt):
+                caps = model.interests(p, bt["seq"], cfg, rules)
+                t_emb = jnp.take(p["item_emb"], bt["target"],
+                                 axis=0).astype(jnp.float32)
+                return model.score_against(caps, t_emb, cfg.pow_p)
+        else:
+            def serve(p, bt):
+                bt = dict(bt)
+                lbl = bt.pop("label", None)
+                del lbl
+                if model_name == "fm":
+                    return model.logits(p, bt["sparse"], cfg, rules)
+                h = model._encode(p, bt["seq"], bt["target"], cfg, rules)
+                from repro.models import layers as lyr
+                return lyr.mlp_apply(p["mlp"], h.reshape(h.shape[0], -1),
+                                     act="relu",
+                                     compute_dtype=cfg.compute_dtype)[:, 0]
+        return StepBundle(
+            name=f"{module.ARCH_ID}:{shape_name}", fn=serve,
+            args=(p_shapes, batch_shapes),
+            in_shardings=(p_specs, b_specs),
+            out_shardings=_dp_spec(rules),
+            trip_counts={}, model_flops=flops / 3.0)
+
+    # retrieval_cand: 1 user vs n_candidates item vectors (the paper's MIPS)
+    n_cand = shape["n_candidates"]
+    user_dim = (cfg.bot_mlp[-1] if model_name == "dlrm"
+                else cfg.embed_dim)
+    all_axes = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+    n_cand = _pad_up(n_cand, _axes_size(mesh, all_axes))
+    cand_shapes = SDS((n_cand, user_dim), jnp.float32)
+    cand_spec = P(all_axes or None, None)
+    if b % max(_axes_size(mesh, rules.dp), 1) != 0:
+        b_specs = {k_: P(*([None] * len(v.shape)))
+                   for k_, v in batch_shapes.items()}
+
+    def retrieval(p, bt, candidates):
+        user = model.user_embedding(p, bt, cfg, rules)     # (B, d)
+        scores = jnp.einsum("nd,bd->bn", candidates, user)
+        _, ids = jax.lax.top_k(scores, 10)
+        return ids
+
+    return StepBundle(
+        name=f"{module.ARCH_ID}:{shape_name}", fn=retrieval,
+        args=(p_shapes, batch_shapes, cand_shapes),
+        in_shardings=(p_specs, b_specs, cand_spec),
+        out_shardings=P(),
+        trip_counts={},
+        model_flops=flops / 3.0 + 2.0 * b * n_cand * user_dim,
+        notes="baseline full-D retrieval; GleanVec variant in serve/")
+
+
+# ---------------------------------------------------------------------------
+# Vector-search family (the paper's own workload)
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def _vs_bundle(module, shape_name: str, mesh: Mesh, rules: MeshRules,
+               smoke: bool) -> StepBundle:
+    shape = dict(module.SHAPES[shape_name])
+    all_axes = tuple(a for a in ("pod", "data", "model")
+                     if a in mesh.axis_names)
+    n_shards = int(np.prod([mesh.shape[a] for a in all_axes])) \
+        if all_axes else 1
+    if smoke:
+        shape["n"] = min(shape["n"], 2048)
+        shape["m_queries"] = min(shape.get("m_queries", 256), 256)
+        shape["batch"] = min(shape.get("batch", 32), 32)
+    dim, d_low, c = shape["D"], shape["d"], shape["C"]
+    rows_spec = P(all_axes or None, None)
+
+    if shape["kind"] == "vs_learn":
+        n = _pad_to(min(shape["n"], 1_000_000), max(n_shards, 1) * 512)
+        m = _pad_to(shape["m_queries"], max(n_shards, 1))
+        x_sds = SDS((n, dim), jnp.float32)
+        q_sds = SDS((m, dim), jnp.float32)
+        cent_sds = SDS((c, dim), jnp.float32)
+
+        def learn_step(x, q, centers):
+            """One full Algorithm-5 data pass: EM update + moments + fits."""
+            x_unit = spherical_kmeans.normalize_rows(x)
+            sims = x_unit @ centers.T
+            tags = jnp.argmax(sims, axis=-1)
+            onehot = jax.nn.one_hot(tags, c, dtype=jnp.float32)
+            sums = onehot.T @ x_unit
+            new_centers = spherical_kmeans.normalize_rows(sums)
+            k_q = linalg.second_moment(q)
+            # per-cluster moments via a scan over clusters (bounded memory)
+            def one_cluster(c_idx):
+                mask = (tags == c_idx).astype(jnp.float32)
+                xm = x * mask[:, None]
+                return xm.T @ x
+            k_x_c = jax.lax.map(one_cluster, jnp.arange(c))
+            model = gv_mod.fit_from_moments(new_centers, k_q, k_x_c, d_low)
+            return new_centers, model.a, model.b
+
+        flops = (2.0 * n * c * dim            # assignment
+                 + 2.0 * m * dim * dim        # K_Q
+                 + 2.0 * c * n * dim * dim    # per-cluster moments
+                 + 2.0 * n * dim)             # masks/normalize
+        return StepBundle(
+            name=f"{module.ARCH_ID}:{shape_name}", fn=learn_step,
+            args=(x_sds, q_sds, cent_sds),
+            in_shardings=(rows_spec, _dp_spec(rules, None), P()),
+            out_shardings=(P(), P(), P()),
+            trip_counts={"clusters": c}, model_flops=flops,
+            notes="Algorithm 5 data pass (train_step analogue)")
+
+    # vs_search: Algorithm 1 with eager GleanVec scoring + local rerank;
+    # "vs_search_sorted" uses the cluster-contiguous layout (one tag per
+    # 4096-row block -> plain matmul scan, no per-row view gather).
+    sorted_layout = shape["kind"] == "vs_search_sorted"
+    n = _pad_to(shape["n"], max(n_shards, 1) * 4096)
+    b, k_, kappa = shape["batch"], shape["k"], shape["kappa"]
+    q_sds = SDS((b, dim), jnp.float32)
+    tags_sds = SDS((n // 4096,) if sorted_layout else (n,), jnp.int32)
+    xlow_sds = SDS((n, d_low), jnp.float32)
+    xfull_sds = SDS((n, dim), jnp.float32)
+    a_sds = SDS((c, d_low, dim), jnp.float32)
+
+    from repro.index import bruteforce
+
+    def search_step(q, tags, x_low, x_full, a_mats):
+        q_views = jnp.einsum("cdk,mk->mcd", a_mats, q)     # (B, C, d)
+
+        def local(q_, qv, tg, xl, xf):
+            if sorted_layout:
+                vals, ids = bruteforce.search_gleanvec_sorted(
+                    qv, tg, xl, kappa, block=4096)
+            else:
+                vals, ids = bruteforce.search_gleanvec(qv, tg, xl, kappa,
+                                                       block=4096)
+            # local full-precision rerank (Alg. 1 line 3, shard-local part)
+            safe = jnp.where(ids >= 0, ids, 0)
+            cand = xf[safe]                                # (B, kappa, D)
+            full = jnp.einsum("bkd,bd->bk", cand, q_)
+            full = jnp.where(ids >= 0, full, -3.4e38)
+            if all_axes:
+                idx = jnp.zeros((), jnp.int32)
+                for ax in all_axes:
+                    idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
+                gids = jnp.where(ids >= 0, ids + idx * xl.shape[0], -1)
+                full = jax.lax.all_gather(full, all_axes, axis=1, tiled=True)
+                gids = jax.lax.all_gather(gids, all_axes, axis=1, tiled=True)
+            else:
+                gids = ids
+            top, sel = jax.lax.top_k(full, k_)
+            return top, jnp.take_along_axis(gids, sel, axis=1)
+
+        if all_axes:
+            fn = jax.shard_map(
+                local, mesh=mesh,
+                in_specs=(P(), P(), P(all_axes), P(all_axes, None),
+                          P(all_axes, None)),
+                out_specs=(P(), P()),
+                check_vma=False)  # tags spec covers both layouts (rows or
+                                  # blocks -- both shard over all axes)
+        else:
+            fn = local
+        return fn(q, q_views, tags, x_low, x_full)
+
+    flops = (2.0 * b * c * d_low * dim        # eager views
+             + 2.0 * b * n * d_low            # reduced scan
+             + 2.0 * b * kappa * n_shards * dim)  # rerank
+    return StepBundle(
+        name=f"{module.ARCH_ID}:{shape_name}", fn=search_step,
+        args=(q_sds, tags_sds, xlow_sds, xfull_sds, a_sds),
+        in_shardings=(P(), P(all_axes or None), rows_spec, rows_spec, P()),
+        out_shardings=(P(), P()),
+        trip_counts={"db_blocks": n // max(n_shards, 1) // 4096},
+        model_flops=flops,
+        notes="Algorithm 1 multi-step search (serve_step analogue)")
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def build_bundle(arch_id: str, shape_name: str, mesh: Mesh,
+                 smoke: bool = False) -> StepBundle:
+    module = registry.get(arch_id)
+    if shape_name in getattr(module, "SKIPS", {}):
+        raise ValueError(
+            f"{arch_id}:{shape_name} skipped: {module.SKIPS[shape_name]}")
+    rules = MeshRules.for_mesh(mesh)
+    if module.FAMILY == "lm":
+        return _lm_bundle(module, shape_name, mesh, rules, smoke)
+    if module.FAMILY == "gnn":
+        return _gnn_bundle(module, shape_name, mesh, rules, smoke)
+    if module.FAMILY == "recsys":
+        return _recsys_bundle(module, shape_name, mesh, rules, smoke)
+    if module.FAMILY == "vectorsearch":
+        return _vs_bundle(module, shape_name, mesh, rules, smoke)
+    raise ValueError(f"unknown family {module.FAMILY}")

@@ -1,0 +1,6 @@
+"""Assigned-architecture model zoo + shared layers and sharding rules."""
+from repro.models import (attention, embedding, gnn, layers, moe, recsys,
+                          sharding, transformer)
+
+__all__ = ["attention", "embedding", "gnn", "layers", "moe", "recsys",
+           "sharding", "transformer"]

@@ -1,0 +1,104 @@
+"""Attention substrate for the LM architectures.
+
+Three paths, one semantics (see kernels/flash_attention/ref.py oracle):
+
+* ``chunked_attention`` -- differentiable, memory-bounded (scans over query
+  chunks; peak temp = B*H*qc*S scores). Used when lowering ``train_step`` and
+  prefill: at 32k sequence a full score tensor would not fit HBM, matching
+  what the fused kernel achieves on real TPUs.
+* ``kernels.flash_attention`` -- the Pallas TPU kernel (serving/forward).
+* ``decode_attention`` -- one-token attention against a KV cache whose
+  sequence dimension may be sharded over the ``model`` axis (flash-decoding
+  style: XLA turns the max/sum reductions over the sharded axis into small
+  (B, H) all-reduces -- the collective-light layout for long-context decode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -3.4e38
+
+__all__ = ["chunked_attention", "decode_attention"]
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True, window: Optional[int] = None,
+                      q_chunk: int = 512, constrain_fn=None) -> jax.Array:
+    """``q (B, S, H, dh)``, ``k/v (B, S, KV, dh)`` -> (B, S, H, dh).
+
+    GQA by broadcasting K/V up to H heads (K/V are computed replicated over
+    the tensor-parallel axis -- Megatron-style KV replication for
+    n_kv < tp_degree -- so the repeat is a local slice, never a collective,
+    and every attention tensor carries a clean (batch, heads) sharding).
+    Query chunks are dynamic-sliced in a scan so only one (B, H, qc, S)
+    score tile is live at a time; ``constrain_fn(x)`` (optional) pins its
+    sharding to (dp, tp, None, None).
+    """
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    scale = 1.0 / float(dh) ** 0.5
+    q_chunk = min(q_chunk, s)
+    pad = (-s) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (s + pad) // q_chunk
+
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)               # (B, S, H, dh)
+        v = jnp.repeat(v, group, axis=2)
+    k_pos = jnp.arange(s)
+
+    def body(_, ci):
+        q_c = jax.lax.dynamic_slice_in_dim(q, ci * q_chunk, q_chunk,
+                                           axis=1)     # (B, qc, H, dh)
+        scores = jnp.einsum("bqhd,bshd->bhqs",
+                            q_c.astype(jnp.float32) * scale,
+                            k.astype(jnp.float32))
+        if constrain_fn is not None:
+            scores = constrain_fn(scores)
+        q_pos = ci * q_chunk + jnp.arange(q_chunk)
+        mask = jnp.ones((q_chunk, s), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        # softmax in f32, PV matmul in the compute dtype: halves the HBM
+        # traffic of the dominant (B, H, qc, S) tensor (section Perf)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhqs,bshd->bqhd", probs, v.astype(q.dtype))
+        return None, out
+
+    _, outs = jax.lax.scan(body, None,
+                           jnp.arange(n_chunks))       # (C, B, qc, H, dh)
+    out = outs.swapaxes(0, 1).reshape(b, s + pad, h, dh)
+    return out[:, :s]
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array) -> jax.Array:
+    """One-step attention: ``q (B, H, dh)``, caches ``(B, S, KV, dh)``.
+
+    ``length``: number of valid cache entries (scalar or (B,)). The softmax
+    reduction runs over the cache sequence axis; when that axis is sharded
+    over "model", XLA emits (B, H)-sized all-reduces only.
+    """
+    b, h, dh = q.shape
+    s = k_cache.shape[1]
+    kv = k_cache.shape[2]
+    group = h // kv
+    scale = 1.0 / float(dh) ** 0.5
+    qr = q.reshape(b, kv, group, dh).astype(jnp.float32) * scale
+    scores = jnp.einsum("bkgd,bskd->bkgs", qr,
+                        k_cache.astype(jnp.float32))      # (B, KV, G, S)
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.reshape(length, (-1, 1))   # (B or 1, S)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, dh).astype(q.dtype)

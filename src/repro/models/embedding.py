@@ -1,0 +1,114 @@
+"""Sharded embedding tables and EmbeddingBag, built from scratch.
+
+JAX has no ``nn.EmbeddingBag`` and no CSR sparse; the lookup pipeline here is
+``jnp.take`` + ``jax.ops.segment_sum`` (bag reduction) and, for
+production-scale tables (DLRM's 26 Criteo tables, ~880M rows), an explicit
+shard_map implementation of the classic DLRM model-parallel lookup:
+
+  table rows   sharded over "model"   (each chip owns a vocab slice)
+  table dim    sharded over "data"    (each data-row owns an embed-dim slice)
+  batch        sharded over "data"
+
+  1. all-gather the (local-batch) indices over "data"  -> global batch ids
+  2. masked local take + psum over "model"             -> (B_global, F, D/dp)
+  3. all_to_all over "data" swapping batch <-> dim     -> (B_local, F, D)
+
+Collective bytes per step = B*F*D/dp (psum) + B*F*D/dp (a2a) -- the canonical
+DLRM all-to-all pattern. Differentiable (gather/psum/all_to_all all have
+transposes), so the same path serves training.
+
+Multiple tables with different vocab sizes are packed into ONE (sum V_i, D)
+array with per-feature row offsets.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["pack_table_offsets", "embedding_lookup", "embedding_bag",
+           "make_sharded_lookup"]
+
+
+def pack_table_offsets(vocab_sizes: Sequence[int]) -> np.ndarray:
+    """Row offsets for packing len(vocab_sizes) tables into one array."""
+    return np.concatenate([[0], np.cumsum(np.asarray(vocab_sizes))[:-1]]
+                          ).astype(np.int32)
+
+
+def embedding_lookup(table: jax.Array, idx: jax.Array,
+                     offsets: Optional[jax.Array] = None) -> jax.Array:
+    """Plain lookup. ``idx (B, F)`` + per-feature ``offsets (F,)`` ->
+    (B, F, D). Single-device / GSPMD-auto path."""
+    if offsets is not None:
+        idx = idx + offsets[None, :]
+    return jnp.take(table, idx, axis=0)
+
+
+def embedding_bag(table: jax.Array, idx: jax.Array, segment_ids: jax.Array,
+                  n_bags: int, combiner: str = "mean",
+                  weights: Optional[jax.Array] = None) -> jax.Array:
+    """EmbeddingBag: ragged multi-hot lookup reduced per bag.
+
+    ``idx (L,)`` flat ids, ``segment_ids (L,)`` bag assignment (sorted or
+    not), -> (n_bags, D). This is the take+segment_sum construction the
+    kernel-taxonomy mandates.
+    """
+    emb = jnp.take(table, idx, axis=0)                    # (L, D)
+    if weights is not None:
+        emb = emb * weights[:, None]
+    summed = jax.ops.segment_sum(emb, segment_ids, n_bags)
+    if combiner == "sum":
+        return summed
+    counts = jax.ops.segment_sum(jnp.ones_like(idx, jnp.float32),
+                                 segment_ids, n_bags)
+    if combiner == "mean":
+        return summed / jnp.maximum(counts, 1.0)[:, None]
+    raise ValueError(f"unknown combiner {combiner!r}")
+
+
+def make_sharded_lookup(mesh: Mesh, total_vocab: int, dim: int):
+    """Build the 2D-sharded DLRM lookup for the production mesh.
+
+    Returns ``lookup(table, flat_idx) -> (B_local..., D)`` to be called under
+    jit with:
+      table sharded P("model", ("pod", "data")) -- rows x dim;
+      flat_idx (B, F) sharded P(("pod", "data"), None).
+    """
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    tp = "model"
+    n_tp = mesh.shape[tp]
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= mesh.shape[a]
+    rows_per_shard = -(-total_vocab // n_tp)
+    dim_per_shard = dim // n_dp
+
+    def local_fn(table, idx):
+        # table: (rows_per_shard, dim_per_shard); idx: (B_local, F)
+        b_local, f = idx.shape
+        idx_g = jax.lax.all_gather(idx, dp_axes, axis=0, tiled=True)
+        row0 = jax.lax.axis_index(tp) * rows_per_shard
+        loc = idx_g - row0
+        hit = (loc >= 0) & (loc < rows_per_shard)
+        emb = jnp.take(table, jnp.clip(loc, 0, rows_per_shard - 1), axis=0)
+        emb = jnp.where(hit[..., None], emb, 0.0)     # (B, F, D/dp)
+        emb = jax.lax.psum(emb, tp)
+        # batch <-> dim exchange: every data shard keeps its batch slice but
+        # gains the full dim.
+        if dp_axes:
+            emb = jax.lax.all_to_all(emb, dp_axes, split_axis=0,
+                                     concat_axis=2, tiled=True)
+        return emb                                     # (B_local, F, D)
+
+    return jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(tp, dp_axes if dp_axes else None),
+                  P(dp_axes if dp_axes else None, None)),
+        out_specs=P(dp_axes if dp_axes else None, None, None),
+        check_vma=False,
+    )

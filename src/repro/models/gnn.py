@@ -1,0 +1,200 @@
+"""GCN (Kipf & Welling) in three execution regimes matching the assigned
+shapes for ``gcn-cora``:
+
+  * full-graph (full_graph_sm / ogb_products): sym-normalized message
+    passing over a global edge list via ``jax.ops.segment_sum`` -- JAX has no
+    CSR SpMM, so the gather(src) -> scale -> scatter-add(dst) pipeline IS the
+    SpMM (DESIGN.md). Edges shard over the data axes; per-shard partial
+    segment sums are combined by the psum XLA inserts for the replicated
+    output.
+  * minibatch (minibatch_lg): GraphSAGE-style two-hop uniform neighbor
+    sampling (fanout 15, 10) from CSR on-device, then a dense batched
+    aggregation -- the sampler is part of the system, not a stub.
+  * batched small graphs (molecule): vmapped per-graph message passing +
+    mean-pool readout.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.sharding import MeshRules, constrain
+
+__all__ = ["GCNConfig", "init", "full_graph_loss", "minibatch_loss",
+           "batched_graphs_loss", "sample_neighbors"]
+
+
+@dataclass(frozen=True)
+class GCNConfig:
+    name: str
+    n_layers: int = 2
+    d_hidden: int = 16
+    d_feat: int = 1433
+    n_classes: int = 7
+    aggregator: str = "mean"   # paper config: mean
+    norm: str = "sym"          # symmetric D^-1/2 (A+I) D^-1/2
+    fanouts: tuple = (15, 10)
+    param_dtype: object = jnp.float32
+    compute_dtype: object = jnp.float32
+
+
+def init(key, cfg: GCNConfig):
+    dims = [cfg.d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    keys = jax.random.split(key, len(dims) - 1)
+    return {"w": [layers.dense_init(k, dims[i], dims[i + 1], cfg.param_dtype,
+                                    with_bias=True)
+                  for i, k in enumerate(keys)]}
+
+
+# ---------------------------------------------------------------------------
+# Full-graph path
+# ---------------------------------------------------------------------------
+
+
+def _gcn_propagate(h: jax.Array, edges: jax.Array, n_nodes: int,
+                   norm: str, rules: MeshRules) -> jax.Array:
+    """One A-hat @ H product. ``edges (2, E)`` = (src, dst) with implicit
+    self-loops added analytically."""
+    src, dst = edges[0], edges[1]
+    ones = jnp.ones(src.shape, jnp.float32)
+    deg = jax.ops.segment_sum(ones, dst, n_nodes) + 1.0  # +1 self loop
+    if norm == "sym":
+        coef = jax.lax.rsqrt(deg[src]) * jax.lax.rsqrt(deg[dst])
+        self_coef = 1.0 / deg
+    else:  # mean / rw normalization
+        coef = 1.0 / deg[dst]
+        self_coef = 1.0 / deg
+    msg = h[src] * coef[:, None]
+    msg = constrain(msg, rules, ("batch", None))
+    agg = jax.ops.segment_sum(msg, dst, n_nodes)
+    return agg + h * self_coef[:, None]
+
+
+def full_graph_logits(params, feats: jax.Array, edges: jax.Array,
+                      cfg: GCNConfig, rules: MeshRules) -> jax.Array:
+    n = feats.shape[0]
+    h = feats.astype(cfg.compute_dtype)
+    for i, w in enumerate(params["w"]):
+        h = layers.dense(w, h, cfg.compute_dtype)
+        h = _gcn_propagate(h, edges, n, cfg.norm, rules)
+        if i < len(params["w"]) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def full_graph_loss(params, batch: Dict[str, jax.Array], cfg: GCNConfig,
+                    rules: MeshRules) -> jax.Array:
+    logits = full_graph_logits(params, batch["feats"], batch["edges"], cfg,
+                               rules)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Minibatch path (neighbor sampling)
+# ---------------------------------------------------------------------------
+
+
+def sample_neighbors(key, indptr: jax.Array, indices: jax.Array,
+                     nodes: jax.Array, fanout: int) -> jax.Array:
+    """Uniform-with-replacement neighbor sampling from CSR.
+
+    ``nodes (...,)`` -> ``(..., fanout)`` neighbor ids; isolated nodes
+    self-loop.
+    """
+    start = indptr[nodes]
+    deg = indptr[nodes + 1] - start
+    r = jax.random.randint(key, nodes.shape + (fanout,), 0, 1 << 30)
+    offset = r % jnp.maximum(deg[..., None], 1)
+    nbr = indices[start[..., None] + offset]
+    return jnp.where(deg[..., None] > 0, nbr, nodes[..., None])
+
+
+def minibatch_logits(params, key, feats, indptr, indices, seeds,
+                     cfg: GCNConfig, rules: MeshRules):
+    """Two-hop sampled GCN forward for ``seeds (B,)``."""
+    f1, f2 = cfg.fanouts
+    k1, k2 = jax.random.split(key)
+    hop1 = sample_neighbors(k1, indptr, indices, seeds, f1)      # (B, f1)
+    hop2 = sample_neighbors(k2, indptr, indices, hop1, f2)       # (B, f1, f2)
+
+    x_seed = feats[seeds].astype(cfg.compute_dtype)              # (B, F)
+    x1 = feats[hop1].astype(cfg.compute_dtype)                   # (B, f1, F)
+    x1 = constrain(x1, rules, ("batch", None, None))
+    x2 = feats[hop2].astype(cfg.compute_dtype)                   # (B, f1, f2, F)
+    x2 = constrain(x2, rules, ("batch", None, None, None))
+
+    w1 = params["w"][0]
+    # layer 1 for hop-1 nodes: mean over their sampled neighbors + self
+    h1_nbrs = layers.dense(w1, jnp.mean(x2, axis=2), cfg.compute_dtype)
+    h1_self = layers.dense(w1, x1, cfg.compute_dtype)
+    h1 = jax.nn.relu(0.5 * (h1_nbrs + h1_self))                  # (B, f1, H)
+    # layer 1 for seeds: mean over hop-1 + self
+    h1s = jax.nn.relu(0.5 * (
+        layers.dense(w1, jnp.mean(x1, axis=1), cfg.compute_dtype)
+        + layers.dense(w1, x_seed, cfg.compute_dtype)))          # (B, H)
+    # layer 2 for seeds
+    w2 = params["w"][1]
+    out = 0.5 * (layers.dense(w2, jnp.mean(h1, axis=1), cfg.compute_dtype)
+                 + layers.dense(w2, h1s, cfg.compute_dtype))
+    return out                                                   # (B, C)
+
+
+def minibatch_loss(params, batch, cfg: GCNConfig, rules: MeshRules):
+    logits = minibatch_logits(params, batch["rng"], batch["feats"],
+                              batch["indptr"], batch["indices"],
+                              batch["seeds"], cfg, rules)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(
+        jnp.take_along_axis(logp, batch["labels"][:, None], axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Batched small graphs (molecule)
+# ---------------------------------------------------------------------------
+
+
+def batched_graphs_logits(params, feats, edges, cfg: GCNConfig,
+                          rules: MeshRules):
+    """``feats (G, N, F)``, ``edges (G, E, 2)`` -> (G,) graph logits."""
+    n = feats.shape[1]
+
+    def one_graph(x, e):
+        h = x.astype(cfg.compute_dtype)
+        for i, w in enumerate(params["w"]):
+            h = layers.dense(w, h, cfg.compute_dtype)
+            src, dst = e[:, 0], e[:, 1]
+            deg = jax.ops.segment_sum(jnp.ones(src.shape, jnp.float32), dst,
+                                      n) + 1.0
+            coef = jax.lax.rsqrt(deg[src]) * jax.lax.rsqrt(deg[dst])
+            h = jax.ops.segment_sum(h[src] * coef[:, None], dst, n) \
+                + h / deg[:, None]
+            if i < len(params["w"]) - 1:
+                h = jax.nn.relu(h)
+        return jnp.mean(h, axis=0)                         # node mean-pool
+
+    pooled = jax.vmap(one_graph)(feats, edges)             # (G, C)
+    return pooled
+
+
+def batched_graphs_loss(params, batch, cfg: GCNConfig, rules: MeshRules):
+    out = batched_graphs_logits(params, batch["feats"], batch["edges"], cfg,
+                                rules)
+    # graph-level binary target in n_classes=1 regime, else multi-class
+    if out.shape[-1] == 1:
+        logit = out[:, 0].astype(jnp.float32)
+        y = batch["labels"].astype(jnp.float32)
+        return jnp.mean(jnp.maximum(logit, 0) - logit * y
+                        + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+    logp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+    return -jnp.mean(
+        jnp.take_along_axis(logp, batch["labels"][:, None], axis=1))

@@ -1,0 +1,96 @@
+"""Shared neural-net building blocks (pure JAX, dict params).
+
+Initializers return nested dicts of arrays; apply functions are pure. All
+matmuls go through ``dense``/einsum so dtype policy (params fp32 or bf16,
+compute bf16, accum fp32) is uniform.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dense_init", "dense", "rmsnorm_init", "rmsnorm", "rope",
+           "activation", "mlp_init", "mlp_apply", "embed_init"]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               with_bias: bool = False):
+    scale = 1.0 / math.sqrt(d_in)
+    w = jax.random.uniform(key, (d_in, d_out), dtype, -scale, scale)
+    if with_bias:
+        return {"w": w, "b": jnp.zeros((d_out,), dtype)}
+    return {"w": w}
+
+
+def dense(params, x: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x.astype(compute_dtype),
+                   params["w"].astype(compute_dtype))
+    if "b" in params:
+        y = y + params["b"].astype(compute_dtype)
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """Rotary embeddings. ``x (..., S, H, dh)``, ``positions (..., S)``."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin],
+        axis=-1).astype(x.dtype)
+
+
+def activation(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    if name == "squared_relu":  # Primer / nemotron-4
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def mlp_init(key, dims, dtype=jnp.float32, with_bias: bool = True):
+    """Plain MLP tower: dims = (d_in, h1, ..., d_out)."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {"layers": [dense_init(k, dims[i], dims[i + 1], dtype, with_bias)
+                       for i, k in enumerate(keys)]}
+
+
+def mlp_apply(params, x: jax.Array, act: str = "relu",
+              final_act: Optional[str] = None,
+              compute_dtype=jnp.bfloat16) -> jax.Array:
+    n = len(params["layers"])
+    for i, layer in enumerate(params["layers"]):
+        x = dense(layer, x, compute_dtype)
+        if i < n - 1:
+            x = activation(act, x)
+        elif final_act is not None:
+            x = activation(final_act, x)
+    return x
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}

@@ -1,0 +1,131 @@
+"""Mixture-of-Experts FFN (GShard-style grouped einsum dispatch).
+
+Supports the two assigned MoE architectures:
+  * grok-1-314b:   8 experts, top-2  -> "tp" sharding (8 experts do not divide
+                   the 16-way model axis; experts stay stacked, d_ff is
+                   tensor-parallel, params additionally FSDP over data)
+  * llama4-maverick: 128 experts, top-1 -> "ep" sharding (experts sharded over
+                   the model axis; XLA materializes the token all-to-alls)
+
+Tokens are processed in fixed-size groups (GShard): per group of T_g tokens,
+each expert has capacity C = ceil(T_g * top_k * capacity_factor / E) rounded
+up to a multiple of 4; overflow tokens are dropped (standard GShard
+semantics, the residual stream carries them unchanged). The load-balancing
+auxiliary loss follows Switch/GShard: E * sum_e f_e * p_e.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.sharding import MeshRules, constrain
+
+__all__ = ["MoEConfig", "moe_init", "moe_apply"]
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    group_size: int = 256
+    sharding: str = "ep"          # "ep" | "tp"
+    aux_loss_weight: float = 0.01
+
+
+def moe_init(key, d_model: int, d_ff: int, cfg: MoEConfig, glu: bool,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    e = cfg.n_experts
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    p = {
+        "router": jax.random.normal(ks[0], (d_model, e), dtype) * scale_in,
+        "w_up": jax.random.normal(ks[1], (e, d_model, d_ff), dtype) * scale_in,
+        "w_down": jax.random.normal(ks[2], (e, d_ff, d_model), dtype) * scale_out,
+    }
+    if glu:
+        p["w_gate"] = jax.random.normal(ks[3], (e, d_model, d_ff),
+                                        dtype) * scale_in
+    return p
+
+
+def _capacity(tg: int, cfg: MoEConfig) -> int:
+    c = int(tg * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(4, -(-c // 4) * 4)
+
+
+def moe_apply(params, x: jax.Array, cfg: MoEConfig, act: str, glu: bool,
+              rules: MeshRules, compute_dtype=jnp.bfloat16):
+    """``x (..., T, D)`` -> (y, aux_loss). Leading dims flattened to tokens."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xt = x.reshape(-1, d)
+    t = xt.shape[0]
+    tg = min(cfg.group_size, t)
+    assert t % tg == 0, f"token count {t} not divisible by group {tg}"
+    g = t // tg
+    e = cfg.n_experts
+    cap = _capacity(tg, cfg)
+
+    xg = xt.reshape(g, tg, d)
+    xg = constrain(xg, rules, ("batch", None, None))
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # (G, Tg, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, cfg.top_k)     # (G, Tg, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # per-expert positions with capacity (GShard): process the K choices in
+    # priority order so primary assignments win slots.
+    dispatch = jnp.zeros((g, tg, e, cap), compute_dtype)
+    combine = jnp.zeros((g, tg, e, cap), jnp.float32)
+    counts = jnp.zeros((g, e), jnp.int32)
+    for slot in range(cfg.top_k):
+        idx_s = gate_idx[..., slot]                           # (G, Tg)
+        onehot = jax.nn.one_hot(idx_s, e, dtype=jnp.int32)    # (G, Tg, E)
+        pos = jnp.cumsum(onehot, axis=1) - 1 + counts[:, None, :]
+        pos_tok = jnp.sum(pos * onehot, axis=-1)              # (G, Tg)
+        keep = pos_tok < cap
+        cap_oh = jax.nn.one_hot(pos_tok, cap, dtype=compute_dtype)
+        d_s = (onehot.astype(compute_dtype)[..., None] * cap_oh[:, :, None, :]
+               * keep.astype(compute_dtype)[:, :, None, None])
+        dispatch = dispatch + d_s
+        combine = combine + d_s.astype(jnp.float32) * \
+            gate_vals[..., slot][:, :, None, None]
+        counts = counts + jnp.sum(onehot * keep[..., None].astype(jnp.int32),
+                                  axis=1)
+
+    ep_axis = "ep" if cfg.sharding == "ep" else None
+    x_e = jnp.einsum("gtec,gtd->gecd", dispatch,
+                     xg.astype(compute_dtype))                # (G, E, C, D)
+    x_e = constrain(x_e, rules, ("batch", ep_axis, None, None))
+
+    w_up = params["w_up"].astype(compute_dtype)
+    h = jnp.einsum("gecd,edf->gecf", x_e, w_up)
+    if glu:
+        gate_h = jnp.einsum("gecd,edf->gecf", x_e,
+                            params["w_gate"].astype(compute_dtype))
+        h = layers.activation(act, gate_h) * h
+    else:
+        h = layers.activation(act, h)
+    tp_axis = "tp" if cfg.sharding == "tp" else None
+    h = constrain(h, rules, ("batch", ep_axis, None, tp_axis))
+    y_e = jnp.einsum("gecf,efd->gecd", h,
+                     params["w_down"].astype(compute_dtype))
+    y_e = constrain(y_e, rules, ("batch", ep_axis, None, None))
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(compute_dtype), y_e)
+    y = constrain(y, rules, ("batch", None, None))
+
+    # Switch-style load-balance loss.
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.aux_loss_weight * e * jnp.sum(frac_tokens * mean_probs)
+    return y.reshape(orig_shape).astype(x.dtype), aux

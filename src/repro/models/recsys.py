@@ -1,0 +1,383 @@
+"""The four assigned recommender architectures.
+
+  dlrm-mlperf  MLPerf DLRM (Criteo 1TB): 13 dense, 26 sparse tables
+               (exact MLPerf cardinalities, ~880M rows), dot interaction,
+               bottom 13-512-256-128, top 1024-1024-512-256-1.
+  fm           Factorization Machine (Rendle '10): 39 sparse fields,
+               k=10, pairwise term via the O(nk) sum-square identity.
+  bst          Behavior Sequence Transformer (Alibaba): 20-item behavior
+               sequence, 1 transformer block (8 heads, d=32), MLP
+               1024-512-256.
+  mind         Multi-Interest Network with Dynamic routing: 4 interest
+               capsules, 3 routing iterations, label-aware attention.
+
+All expose ``init(key, cfg)``, ``ctr_loss(params, batch, cfg, rules)`` and a
+``user_embedding`` tower used by the retrieval path (serve/retrieval.py),
+where the paper's GleanVec accelerates candidate scoring.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.sharding import MeshRules, constrain
+
+__all__ = ["DLRMConfig", "FMConfig", "BSTConfig", "MINDConfig",
+           "MLPERF_CRITEO_VOCAB_SIZES", "dlrm", "fm", "bst", "mind"]
+
+# MLPerf DLRM (Criteo Terabyte) per-table cardinalities -- the standard list.
+MLPERF_CRITEO_VOCAB_SIZES = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771, 25641295,
+    39664984, 585935, 12972, 108, 36)
+
+
+def _bce(logit: jax.Array, y: jax.Array) -> jax.Array:
+    logit = logit.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logit, 0) - logit * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+# ---------------------------------------------------------------------------
+# DLRM
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    vocab_sizes: Tuple[int, ...] = MLPERF_CRITEO_VOCAB_SIZES
+    embed_dim: int = 128
+    bot_mlp: Tuple[int, ...] = (512, 256, 128)
+    top_mlp: Tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    param_dtype: object = jnp.float32
+    compute_dtype: object = jnp.bfloat16
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def total_vocab(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+    @property
+    def padded_total_vocab(self) -> int:
+        """Rows padded to 512 so the table shards evenly on any production
+        mesh axis combination (16 / 32 / 256 / 512); pad rows are unused."""
+        return -(-self.total_vocab // 512) * 512
+
+
+class dlrm:
+    Config = DLRMConfig
+
+    @staticmethod
+    def init(key, cfg: DLRMConfig):
+        k_emb, k_bot, k_top = jax.random.split(key, 3)
+        return {
+            "table": jax.random.normal(
+                k_emb, (cfg.padded_total_vocab, cfg.embed_dim),
+                cfg.param_dtype) * (cfg.embed_dim ** -0.5),
+            "bot": layers.mlp_init(k_bot, (cfg.n_dense,) + cfg.bot_mlp,
+                                   cfg.param_dtype),
+            "top": layers.mlp_init(
+                k_top,
+                (cfg.n_sparse * (cfg.n_sparse + 1) // 2 + cfg.bot_mlp[-1],)
+                + cfg.top_mlp, cfg.param_dtype),
+        }
+
+    @staticmethod
+    def offsets(cfg: DLRMConfig) -> np.ndarray:
+        from repro.models.embedding import pack_table_offsets
+        return pack_table_offsets(cfg.vocab_sizes)
+
+    @staticmethod
+    def forward(params, dense: jax.Array, emb: jax.Array, cfg: DLRMConfig,
+                rules: MeshRules) -> jax.Array:
+        """``dense (B, 13)``, ``emb (B, 26, D)`` (already looked up)."""
+        cd = cfg.compute_dtype
+        bot = layers.mlp_apply(params["bot"], dense.astype(cd), act="relu",
+                               final_act="relu", compute_dtype=cd)  # (B, D)
+        z = jnp.concatenate([bot[:, None, :], emb.astype(cd)], axis=1)
+        z = constrain(z, rules, ("batch", None, None))
+        inter = jnp.einsum("bid,bjd->bij", z, z)            # (B, 27, 27)
+        f = z.shape[1]
+        iu, ju = jnp.triu_indices(f, k=1)
+        flat = inter[:, iu, ju]                             # (B, 351)
+        top_in = jnp.concatenate([bot, flat], axis=1)
+        logit = layers.mlp_apply(params["top"], top_in, act="relu",
+                                 compute_dtype=cd)[:, 0]
+        return logit
+
+    @staticmethod
+    def ctr_loss(params, batch: Dict[str, jax.Array], cfg: DLRMConfig,
+                 rules: MeshRules, lookup_fn=None) -> jax.Array:
+        from repro.models import embedding as emb_mod
+        idx = batch["sparse"] + jnp.asarray(dlrm.offsets(cfg))[None, :]
+        if lookup_fn is None:
+            emb = emb_mod.embedding_lookup(params["table"], idx)
+        else:
+            emb = lookup_fn(params["table"], idx)
+        emb = constrain(emb, rules, ("batch", None, None))
+        logit = dlrm.forward(params, batch["dense"], emb, cfg, rules)
+        return _bce(logit, batch["label"])
+
+    @staticmethod
+    def user_embedding(params, batch, cfg: DLRMConfig,
+                       rules: MeshRules) -> jax.Array:
+        """Bottom-MLP output as the retrieval query vector (B, D)."""
+        cd = cfg.compute_dtype
+        return layers.mlp_apply(params["bot"], batch["dense"].astype(cd),
+                                act="relu", final_act="relu",
+                                compute_dtype=cd).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# FM
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FMConfig:
+    name: str = "fm"
+    n_sparse: int = 39
+    vocab_per_field: int = 100_000
+    embed_dim: int = 10
+    param_dtype: object = jnp.float32
+    compute_dtype: object = jnp.float32
+
+    @property
+    def total_vocab(self) -> int:
+        return self.n_sparse * self.vocab_per_field
+
+
+class fm:
+    Config = FMConfig
+
+    @staticmethod
+    def init(key, cfg: FMConfig):
+        k_v, k_w = jax.random.split(key)
+        return {
+            "v": jax.random.normal(k_v, (cfg.total_vocab, cfg.embed_dim),
+                                   cfg.param_dtype) * 0.01,
+            "w": jnp.zeros((cfg.total_vocab,), cfg.param_dtype),
+            "w0": jnp.zeros((), cfg.param_dtype),
+        }
+
+    @staticmethod
+    def logits(params, sparse: jax.Array, cfg: FMConfig,
+               rules: MeshRules) -> jax.Array:
+        """``sparse (B, F)`` field-local ids -> (B,) logits.
+
+        Pairwise term via the Rendle identity:
+        sum_{i<j} <v_i, v_j> = 0.5 * (||sum_i v_i||^2 - sum_i ||v_i||^2).
+        """
+        offs = (jnp.arange(cfg.n_sparse) * cfg.vocab_per_field)[None, :]
+        idx = sparse + offs
+        v = jnp.take(params["v"], idx, axis=0)             # (B, F, k)
+        v = constrain(v, rules, ("batch", None, None))
+        w = jnp.take(params["w"], idx, axis=0)             # (B, F)
+        sum_v = jnp.sum(v, axis=1)
+        pair = 0.5 * (jnp.sum(sum_v * sum_v, axis=-1)
+                      - jnp.sum(v * v, axis=(1, 2)))
+        return params["w0"] + jnp.sum(w, axis=1) + pair
+
+    @staticmethod
+    def ctr_loss(params, batch, cfg: FMConfig, rules: MeshRules):
+        return _bce(fm.logits(params, batch["sparse"], cfg, rules),
+                    batch["label"])
+
+    @staticmethod
+    def user_embedding(params, batch, cfg: FMConfig,
+                       rules: MeshRules) -> jax.Array:
+        offs = (jnp.arange(cfg.n_sparse) * cfg.vocab_per_field)[None, :]
+        v = jnp.take(params["v"], batch["sparse"] + offs, axis=0)
+        return jnp.sum(v, axis=1).astype(jnp.float32)      # (B, k)
+
+
+# ---------------------------------------------------------------------------
+# BST
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BSTConfig:
+    name: str = "bst"
+    n_items: int = 4_000_000
+    seq_len: int = 20
+    embed_dim: int = 32
+    n_heads: int = 8
+    n_blocks: int = 1
+    ff_dim: int = 128
+    mlp: Tuple[int, ...] = (1024, 512, 256, 1)
+    param_dtype: object = jnp.float32
+    compute_dtype: object = jnp.float32
+
+
+class bst:
+    Config = BSTConfig
+
+    @staticmethod
+    def init(key, cfg: BSTConfig):
+        ks = jax.random.split(key, 8)
+        d = cfg.embed_dim
+        blocks = []
+        for i in range(cfg.n_blocks):
+            kb = jax.random.split(ks[2 + i], 6)
+            blocks.append({
+                "wq": jax.random.normal(kb[0], (d, d), cfg.param_dtype) * d ** -0.5,
+                "wk": jax.random.normal(kb[1], (d, d), cfg.param_dtype) * d ** -0.5,
+                "wv": jax.random.normal(kb[2], (d, d), cfg.param_dtype) * d ** -0.5,
+                "wo": jax.random.normal(kb[3], (d, d), cfg.param_dtype) * d ** -0.5,
+                "ln1": layers.rmsnorm_init(d, cfg.param_dtype),
+                "ln2": layers.rmsnorm_init(d, cfg.param_dtype),
+                "w_up": jax.random.normal(kb[4], (d, cfg.ff_dim),
+                                          cfg.param_dtype) * d ** -0.5,
+                "w_down": jax.random.normal(kb[5], (cfg.ff_dim, d),
+                                            cfg.param_dtype) * cfg.ff_dim ** -0.5,
+            })
+        seq_plus_target = cfg.seq_len + 1
+        return {
+            "item_emb": jax.random.normal(
+                ks[0], (cfg.n_items, d), cfg.param_dtype) * 0.02,
+            "pos_emb": jax.random.normal(
+                ks[1], (seq_plus_target, d), cfg.param_dtype) * 0.02,
+            "blocks": blocks,
+            "mlp": layers.mlp_init(ks[7], (seq_plus_target * d,) + cfg.mlp,
+                                   cfg.param_dtype),
+        }
+
+    @staticmethod
+    def _encode(params, seq_items: jax.Array, target_item: jax.Array,
+                cfg: BSTConfig, rules: MeshRules) -> jax.Array:
+        """seq (B, S), target (B,) -> transformer output (B, S+1, d)."""
+        cd = cfg.compute_dtype
+        items = jnp.concatenate([seq_items, target_item[:, None]], axis=1)
+        h = jnp.take(params["item_emb"], items, axis=0).astype(cd)
+        h = h + params["pos_emb"].astype(cd)[None]
+        h = constrain(h, rules, ("batch", None, None))
+        b, s, d = h.shape
+        nh = cfg.n_heads
+        dh = d // nh
+        for blk in params["blocks"]:
+            hn = layers.rmsnorm(blk["ln1"], h)
+            q = (hn @ blk["wq"].astype(cd)).reshape(b, s, nh, dh)
+            k = (hn @ blk["wk"].astype(cd)).reshape(b, s, nh, dh)
+            v = (hn @ blk["wv"].astype(cd)).reshape(b, s, nh, dh)
+            scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / dh ** 0.5
+            probs = jax.nn.softmax(scores.astype(jnp.float32),
+                                   axis=-1).astype(cd)
+            attn = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b, s, d)
+            h = h + attn @ blk["wo"].astype(cd)
+            hn = layers.rmsnorm(blk["ln2"], h)
+            ff = jax.nn.relu(hn @ blk["w_up"].astype(cd))
+            h = h + ff @ blk["w_down"].astype(cd)
+        return h
+
+    @staticmethod
+    def ctr_loss(params, batch, cfg: BSTConfig, rules: MeshRules):
+        h = bst._encode(params, batch["seq"], batch["target"], cfg, rules)
+        flat = h.reshape(h.shape[0], -1)
+        logit = layers.mlp_apply(params["mlp"], flat, act="relu",
+                                 compute_dtype=cfg.compute_dtype)[:, 0]
+        return _bce(logit, batch["label"])
+
+    @staticmethod
+    def user_embedding(params, batch, cfg: BSTConfig,
+                       rules: MeshRules) -> jax.Array:
+        """Mean-pooled sequence representation (target slot excluded)."""
+        dummy_target = batch["seq"][:, -1]
+        h = bst._encode(params, batch["seq"], dummy_target, cfg, rules)
+        return jnp.mean(h[:, :-1], axis=1).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MIND
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MINDConfig:
+    name: str = "mind"
+    n_items: int = 4_000_000
+    seq_len: int = 50
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    pow_p: float = 2.0    # label-aware attention sharpness
+    param_dtype: object = jnp.float32
+    compute_dtype: object = jnp.float32
+
+
+class mind:
+    Config = MINDConfig
+
+    @staticmethod
+    def init(key, cfg: MINDConfig):
+        k_emb, k_s = jax.random.split(key)
+        d = cfg.embed_dim
+        return {
+            "item_emb": jax.random.normal(
+                k_emb, (cfg.n_items, d), cfg.param_dtype) * 0.02,
+            # shared bilinear map S for B2I routing
+            "s": jax.random.normal(k_s, (d, d), cfg.param_dtype) * d ** -0.5,
+        }
+
+    @staticmethod
+    def interests(params, seq: jax.Array, cfg: MINDConfig,
+                  rules: MeshRules) -> jax.Array:
+        """Behavior-to-Interest dynamic routing -> (B, K, d) capsules."""
+        cd = cfg.compute_dtype
+        e = jnp.take(params["item_emb"], seq, axis=0).astype(cd)  # (B,S,d)
+        e = constrain(e, rules, ("batch", None, None))
+        eh = e @ params["s"].astype(cd)                           # (B,S,d)
+        b_logits = jnp.zeros(e.shape[:2] + (cfg.n_interests,), jnp.float32)
+
+        def squash(x):
+            n2 = jnp.sum(x * x, axis=-1, keepdims=True)
+            return (n2 / (1.0 + n2)) * x * jax.lax.rsqrt(n2 + 1e-9)
+
+        caps = None
+        for _ in range(cfg.capsule_iters):
+            c = jax.nn.softmax(b_logits, axis=-1)                 # (B,S,K)
+            caps = squash(jnp.einsum("bsk,bsd->bkd",
+                                     c.astype(cd), eh).astype(jnp.float32))
+            b_logits = b_logits + jnp.einsum(
+                "bkd,bsd->bsk", caps, eh.astype(jnp.float32))
+        return caps                                               # (B,K,d)
+
+    @staticmethod
+    def score_against(caps: jax.Array, target_emb: jax.Array,
+                      pow_p: float) -> jax.Array:
+        """Label-aware attention: softmax(p * <cap, e>) weighting, (B,)."""
+        sims = jnp.einsum("bkd,bd->bk", caps, target_emb)
+        w = jax.nn.softmax(pow_p * sims, axis=-1)
+        user = jnp.einsum("bk,bkd->bd", w, caps)
+        return jnp.sum(user * target_emb, axis=-1)
+
+    @staticmethod
+    def ctr_loss(params, batch, cfg: MINDConfig, rules: MeshRules):
+        """In-batch sampled softmax over targets."""
+        caps = mind.interests(params, batch["seq"], cfg, rules)
+        t_emb = jnp.take(params["item_emb"], batch["target"],
+                         axis=0).astype(jnp.float32)              # (B,d)
+        # scores of every user against every in-batch target
+        sims = jnp.einsum("bkd,cd->bck", caps, t_emb)
+        w = jax.nn.softmax(cfg.pow_p * sims, axis=-1)
+        scores = jnp.sum(w * sims, axis=-1)                       # (B,C)
+        logp = jax.nn.log_softmax(scores, axis=-1)
+        return -jnp.mean(jnp.diagonal(logp))
+
+    @staticmethod
+    def user_embedding(params, batch, cfg: MINDConfig,
+                       rules: MeshRules) -> jax.Array:
+        """Max-sim retrieval uses all K interests; export mean capsule."""
+        caps = mind.interests(params, batch["seq"], cfg, rules)
+        return jnp.mean(caps, axis=1)

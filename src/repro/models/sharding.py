@@ -1,0 +1,90 @@
+"""Sharding rules: one place mapping logical tensor roles -> PartitionSpecs.
+
+Axes (production mesh, launch/mesh.py):
+  * ``data``  -- batch / tokens / database rows (+ composed with ``pod``)
+  * ``model`` -- tensor-parallel: attention heads, FFN hidden, vocab, experts
+  * ``pod``   -- outermost data parallelism across pods (multi-pod mesh only)
+
+``MeshRules`` resolves the axis names present in the current mesh, so the
+same model code lowers on the single-pod (data, model) and the multi-pod
+(pod, data, model) meshes. On a 1-device CPU mesh every spec degenerates to
+fully-replicated, which is how the smoke tests run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+AxisSel = Union[None, str, Tuple[str, ...]]
+
+__all__ = ["MeshRules", "logical_to_spec", "constrain"]
+
+
+@dataclass(frozen=True)
+class MeshRules:
+    """Logical-axis -> mesh-axis mapping.
+
+    ``dp``: pure data parallel axes (batch dim);
+    ``fsdp``: axes that additionally shard parameters/optimizer state
+              (ZeRO-3); subset of dp in this design;
+    ``tp``: tensor-parallel axis;
+    ``ep``: expert-parallel axis (MoE; usually == tp).
+    """
+
+    dp: Tuple[str, ...] = ("data",)
+    fsdp: Tuple[str, ...] = ("data",)
+    tp: Optional[str] = "model"
+    ep: Optional[str] = "model"
+
+    @classmethod
+    def for_mesh(cls, mesh: jax.sharding.Mesh, fsdp: bool = True
+                 ) -> "MeshRules":
+        names = mesh.axis_names
+        dp = tuple(a for a in ("pod", "data") if a in names)
+        tp = "model" if "model" in names else None
+        # ZeRO-3 spans every data-parallel axis: on the multi-pod mesh the
+        # param/grad/optimizer shards halve again (pod x data = 32-way).
+        return cls(dp=dp or (), fsdp=(dp if fsdp else ()), tp=tp, ep=tp)
+
+    # -- common specs --------------------------------------------------
+    def batch(self, *rest: AxisSel) -> P:
+        return P(self.dp if self.dp else None, *rest)
+
+    def replicated(self) -> P:
+        return P()
+
+
+def logical_to_spec(rules: MeshRules, logical: Sequence[Optional[str]]) -> P:
+    """Map per-dim logical names to a PartitionSpec.
+
+    Recognized names: "batch", "fsdp", "tp", "ep", "vocab"(=tp),
+    "seq_tp" (decode KV-cache sequence dim over tp), None (replicated).
+    """
+    out = []
+    for name in logical:
+        if name is None:
+            out.append(None)
+        elif name == "batch":
+            out.append(rules.dp if rules.dp else None)
+        elif name == "fsdp":
+            out.append(rules.fsdp if rules.fsdp else None)
+        elif name in ("tp", "vocab", "seq_tp"):
+            out.append(rules.tp)
+        elif name == "ep":
+            out.append(rules.ep)
+        else:
+            raise ValueError(f"unknown logical axis {name!r}")
+    return P(*out)
+
+
+def constrain(x: jax.Array, rules: MeshRules,
+              logical: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical names (no-op without a mesh)."""
+    try:
+        spec = logical_to_spec(rules, logical)
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x

@@ -1,0 +1,494 @@
+"""Config-driven decoder-only LM covering the five assigned architectures.
+
+Features exercised per arch (configs/):
+  h2o-danube-3-4b   GQA + sliding-window attention (SWA), SwiGLU
+  qwen2-72b         GQA + QKV bias, SwiGLU, 152k vocab
+  nemotron-4-15b    GQA + squared-ReLU (no GLU), 256k vocab
+  grok-1-314b       GQA + MoE 8e top-2 (tp-sharded experts)
+  llama4-maverick   GQA + MoE 128e top-1 (ep-sharded experts)
+
+Implementation notes (these are the load-bearing scaling decisions):
+  * scan-over-layers with stacked (L, ...) params: keeps the HLO one layer
+    big (fast 512-way SPMD compiles) and gives FSDP its layer-granular
+    all-gather cadence for free.
+  * activation remat per layer, policy configurable (``nothing`` for the
+    72B/314B trainings, ``dots`` for small models).
+  * chunked attention (models/attention.py) and chunked cross-entropy: no
+    (S, S) score or (T, V) logit tensor is ever materialized.
+  * GQA with n_kv < tp_degree: K/V projections are computed replicated over
+    the model axis (Megatron-style KV replication); Q/O are head-sharded.
+  * vocab-parallel embedding + LM head: mask+psum lookup (shard_map-free,
+    einsum-based one-hot on the label side only), logits stay vocab-sharded
+    through the loss.
+  * decode: KV cache sequence axis sharded over "model" (flash-decoding);
+    SWA archs keep a ring-buffer cache of window size.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention, layers
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+from repro.models.sharding import MeshRules, constrain, logical_to_spec
+
+__all__ = ["TransformerConfig", "init", "train_loss", "decode_step",
+           "param_logical_axes", "param_specs", "init_cache",
+           "cache_specs"]
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    act: str = "silu"
+    glu: bool = True
+    qkv_bias: bool = False
+    swa_window: Optional[int] = None
+    moe: Optional[MoEConfig] = None
+    rope_theta: float = 1e4
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    q_chunk: int = 512
+    loss_chunks: int = 8
+    remat_policy: str = "nothing"    # "nothing" | "dots" | "none"
+    remat_block: int = 0             # >0: hierarchical (sqrt) remat -- scan
+                                     # over L/remat_block blocks of layers;
+                                     # only block inputs are saved
+
+    @property
+    def qkv_dims(self) -> Tuple[int, int]:
+        return self.n_heads * self.d_head, self.n_kv_heads * self.d_head
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: TransformerConfig):
+    ks = jax.random.split(key, 8)
+    dq, dkv = cfg.qkv_dims
+    dt = cfg.param_dtype
+    s = cfg.d_model ** -0.5
+    p = {
+        "ln1": layers.rmsnorm_init(cfg.d_model, dt),
+        "wq": jax.random.normal(ks[0], (cfg.d_model, dq), dt) * s,
+        "wk": jax.random.normal(ks[1], (cfg.d_model, dkv), dt) * s,
+        "wv": jax.random.normal(ks[2], (cfg.d_model, dkv), dt) * s,
+        "wo": jax.random.normal(ks[3], (dq, cfg.d_model), dt) * (dq ** -0.5),
+        "ln2": layers.rmsnorm_init(cfg.d_model, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((dq,), dt)
+        p["bk"] = jnp.zeros((dkv,), dt)
+        p["bv"] = jnp.zeros((dkv,), dt)
+    if cfg.moe is not None:
+        p["moe"] = moe_init(ks[4], cfg.d_model, cfg.d_ff, cfg.moe, cfg.glu,
+                            dt)
+    else:
+        p["w_up"] = jax.random.normal(ks[5], (cfg.d_model, cfg.d_ff), dt) * s
+        p["w_down"] = jax.random.normal(
+            ks[6], (cfg.d_ff, cfg.d_model), dt) * (cfg.d_ff ** -0.5)
+        if cfg.glu:
+            p["w_gate"] = jax.random.normal(
+                ks[7], (cfg.d_model, cfg.d_ff), dt) * s
+    return p
+
+
+def blocked_layout(cfg: TransformerConfig) -> bool:
+    """Stacked layer params live as (n_blocks, block, ...) when hierarchical
+    remat is on -- natively, so no (bitcast-defeating, sharded) reshapes ever
+    appear inside the compiled step (measured multi-GB copies otherwise)."""
+    return (cfg.remat_block > 0 and cfg.n_layers % cfg.remat_block == 0
+            and cfg.n_layers > cfg.remat_block)
+
+
+def init(key, cfg: TransformerConfig):
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    if blocked_layout(cfg):
+        nb = cfg.n_layers // cfg.remat_block
+        stacked = jax.tree.map(
+            lambda x: x.reshape((nb, cfg.remat_block) + x.shape[1:]),
+            stacked)
+    return {
+        "embed": jax.random.normal(
+            k_emb, (cfg.vocab, cfg.d_model), cfg.param_dtype) * 0.02,
+        "layers": stacked,
+        "final_norm": layers.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        "lm_head": jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab),
+            cfg.param_dtype) * (cfg.d_model ** -0.5),
+    }
+
+
+def param_logical_axes(cfg: TransformerConfig):
+    """Logical per-dim axis names mirroring ``init``'s tree."""
+    lax_ = {
+        "ln1": {"scale": (None,)},
+        "wq": (None, "fsdp", "tp"),
+        "wk": (None, "fsdp", None),   # KV replicated over tp (n_kv < tp)
+        "wv": (None, "fsdp", None),
+        "wo": (None, "tp", "fsdp"),
+        "ln2": {"scale": (None,)},
+    }
+    if cfg.qkv_bias:
+        lax_["bq"] = (None, "tp")
+        lax_["bk"] = (None, None)
+        lax_["bv"] = (None, None)
+    if cfg.moe is not None:
+        ep = cfg.moe.sharding == "ep"
+        lax_["moe"] = {
+            "router": (None, "fsdp", None),
+            "w_up": (None, "ep", "fsdp", None) if ep
+            else (None, None, "fsdp", "tp"),
+            "w_down": (None, "ep", None, "fsdp") if ep
+            else (None, None, "tp", "fsdp"),
+        }
+        if cfg.glu:
+            lax_["moe"]["w_gate"] = lax_["moe"]["w_up"]
+    else:
+        lax_["w_up"] = (None, "fsdp", "tp")
+        lax_["w_down"] = (None, "tp", "fsdp")
+        if cfg.glu:
+            lax_["w_gate"] = (None, "fsdp", "tp")
+    if blocked_layout(cfg):
+        def add_axis(t):
+            return (None,) + t
+        lax_ = jax.tree.map(add_axis, lax_,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "embed": ("vocab", None),
+        "layers": lax_,
+        "final_norm": {"scale": (None,)},
+        "lm_head": (None, "vocab"),
+    }
+
+
+def param_specs(cfg: TransformerConfig, rules: MeshRules):
+    logical = param_logical_axes(cfg)
+
+    def to_spec(x):
+        return logical_to_spec(rules, x) if isinstance(x, tuple) else x
+
+    return jax.tree.map(to_spec, logical,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / loss (vocab-parallel, chunked)
+# ---------------------------------------------------------------------------
+
+
+def _embed_lookup(table: jax.Array, tokens: jax.Array, rules: MeshRules,
+                  compute_dtype) -> jax.Array:
+    """Vocab-parallel lookup: explicit mask+psum under shard_map.
+
+    XLA's partitioned gather from a vocab-sharded table falls back to full
+    table rematerialization (verified on the 512-way dry-run); the manual
+    formulation keeps the table sharded and emits exactly one psum over the
+    model axis of the (B, S, D) activations."""
+    if rules.tp is None:
+        out = jnp.take(table, tokens, axis=0).astype(compute_dtype)
+        return constrain(out, rules, ("batch", None, None))
+    dp = rules.dp if rules.dp else None
+
+    def local(tbl, tok):
+        rows = tbl.shape[0]
+        row0 = jax.lax.axis_index(rules.tp) * rows
+        loc = tok - row0
+        hit = (loc >= 0) & (loc < rows)
+        emb = jnp.take(tbl, jnp.clip(loc, 0, rows - 1), axis=0)
+        emb = jnp.where(hit[..., None], emb.astype(compute_dtype), 0)
+        return jax.lax.psum(emb, rules.tp)
+
+    fn = jax.shard_map(local,
+                       in_specs=(P(rules.tp, None), P(dp, None)),
+                       out_specs=P(dp, None, None), check_vma=False)
+    return fn(table, tokens)
+
+
+def _chunked_xent(h: jax.Array, w_head: jax.Array, labels: jax.Array,
+                  n_chunks: int, rules: MeshRules) -> jax.Array:
+    """Cross entropy without materializing (T, V) logits: scan over
+    sequence chunks; vocab stays sharded (lse reductions -> psum)."""
+    b, s, d = h.shape
+    n_chunks = min(n_chunks, s)
+    assert s % n_chunks == 0
+    sc = s // n_chunks
+    hs = h.reshape(b, n_chunks, sc, d).swapaxes(0, 1)      # (C, B, sc, D)
+    ls = labels.reshape(b, n_chunks, sc).swapaxes(0, 1)
+    vocab = w_head.shape[1]
+
+    @jax.checkpoint
+    def body(carry, inp):
+        h_c, l_c = inp
+        logits = jnp.einsum("bsd,dv->bsv", h_c.astype(jnp.bfloat16),
+                            w_head.astype(jnp.bfloat16)).astype(jnp.float32)
+        logits = constrain(logits, rules, ("batch", None, "vocab"))
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(l_c, vocab, dtype=jnp.float32)
+        onehot = constrain(onehot, rules, ("batch", None, "vocab"))
+        label_logit = jnp.sum(logits * onehot, axis=-1)
+        return carry + jnp.sum(lse - label_logit), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls))
+    return total / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# Layer body (shared by train fwd and decode)
+# ---------------------------------------------------------------------------
+
+
+def _qkv(p, cfg: TransformerConfig, h: jax.Array):
+    cd = cfg.compute_dtype
+    q = jnp.einsum("...d,dk->...k", h, p["wq"].astype(cd))
+    k = jnp.einsum("...d,dk->...k", h, p["wk"].astype(cd))
+    v = jnp.einsum("...d,dk->...k", h, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    return q, k, v
+
+
+def _mlp(p, cfg: TransformerConfig, h: jax.Array, rules: MeshRules):
+    cd = cfg.compute_dtype
+    if cfg.moe is not None:
+        return moe_apply(p["moe"], h, cfg.moe, cfg.act, cfg.glu, rules, cd)
+    up = jnp.einsum("...d,df->...f", h, p["w_up"].astype(cd))
+    if cfg.glu:
+        gate = jnp.einsum("...d,df->...f", h, p["w_gate"].astype(cd))
+        act = layers.activation(cfg.act, gate) * up
+    else:
+        act = layers.activation(cfg.act, up)
+    act = constrain(act, rules, ("batch", None, "tp"))
+    out = jnp.einsum("...f,fd->...d", act, p["w_down"].astype(cd))
+    return out, jnp.zeros((), jnp.float32)
+
+
+def _layer_fwd(p, cfg: TransformerConfig, rules: MeshRules, h: jax.Array,
+               positions: jax.Array):
+    """One decoder layer, training/prefill form. ``h (B, S, D)``."""
+    b, s, _ = h.shape
+    hn = layers.rmsnorm(p["ln1"], h)
+    q, k, v = _qkv(p, cfg, hn)
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+    q = constrain(q, rules, ("batch", None, "tp", None))
+    attn = attention.chunked_attention(
+        q, k, v, causal=True, window=cfg.swa_window, q_chunk=cfg.q_chunk,
+        constrain_fn=lambda x: constrain(x, rules,
+                                         ("batch", "tp", None, None)))
+    attn = constrain(attn, rules, ("batch", None, "tp", None))
+    attn_flat = attn.reshape(b, s, cfg.n_heads * cfg.d_head)
+    h = h + jnp.einsum("...k,kd->...d", attn_flat,
+                       p["wo"].astype(cfg.compute_dtype))
+    h = constrain(h, rules, ("batch", None, None))
+    hn = layers.rmsnorm(p["ln2"], h)
+    mlp_out, aux = _mlp(p, cfg, hn, rules)
+    h = h + mlp_out
+    h = constrain(h, rules, ("batch", None, None))
+    return h, aux
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # "nothing": save nothing, recompute all
+
+
+# ---------------------------------------------------------------------------
+# Training forward/loss
+# ---------------------------------------------------------------------------
+
+
+def train_loss(params, batch: Dict[str, jax.Array], cfg: TransformerConfig,
+               rules: MeshRules) -> jax.Array:
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    h = _embed_lookup(params["embed"], tokens, rules, cfg.compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(carry, layer_params):
+        h, aux = carry
+        h2, aux2 = _layer_fwd(layer_params, cfg, rules, h, positions)
+        return (h2, aux + aux2), None
+
+    body_r = _remat(body, cfg.remat_policy)
+    carry0 = (h, jnp.zeros((), jnp.float32))
+    if blocked_layout(cfg):
+        # hierarchical (sqrt) remat: outer scan over blocks saves only the
+        # nb block inputs; each block recomputes its inner layer scan.
+        # params["layers"] is already (nb, block, ...) -- see init().
+        @jax.checkpoint
+        def block_body(carry, block_params):
+            out, _ = jax.lax.scan(body_r, carry, block_params)
+            return out, None
+
+        (h, aux), _ = jax.lax.scan(block_body, carry0, params["layers"])
+    else:
+        (h, aux), _ = jax.lax.scan(body_r, carry0, params["layers"])
+    h = layers.rmsnorm(params["final_norm"], h)
+    loss = _chunked_xent(h, params["lm_head"], labels, cfg.loss_chunks,
+                         rules)
+    return loss + aux / cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# Prefill (forward pass + KV cache build)
+# ---------------------------------------------------------------------------
+
+
+def prefill_step(params, tokens: jax.Array, cfg: TransformerConfig,
+                 rules: MeshRules):
+    """Inference prefill: forward over the prompt, returning the last-token
+    logits and the populated KV cache (scan ys give the (L, ...) stacking).
+    For SWA archs the cache keeps only the trailing window."""
+    b, s = tokens.shape
+    h = _embed_lookup(params["embed"], tokens, rules, cfg.compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    keep = cache_len(cfg, s)
+
+    def body(h, layer_params):
+        p = layer_params
+        hn = layers.rmsnorm(p["ln1"], h)
+        q, k, v = _qkv(p, cfg, hn)
+        q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+        k = k.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+        v = v.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+        q = layers.rope(q, positions, cfg.rope_theta)
+        k = layers.rope(k, positions, cfg.rope_theta)
+        q = constrain(q, rules, ("batch", None, "tp", None))
+        attn = attention.chunked_attention(
+            q, k, v, causal=True, window=cfg.swa_window,
+            q_chunk=cfg.q_chunk,
+            constrain_fn=lambda x: constrain(x, rules,
+                                             ("batch", "tp", None, None)))
+        attn_flat = attn.reshape(b, s, cfg.n_heads * cfg.d_head)
+        h = h + jnp.einsum("...k,kd->...d", attn_flat,
+                           p["wo"].astype(cfg.compute_dtype))
+        hn = layers.rmsnorm(p["ln2"], h)
+        mlp_out, _ = _mlp(p, cfg, hn, rules)
+        h = constrain(h + mlp_out, rules, ("batch", None, None))
+        return h, (k[:, s - keep:], v[:, s - keep:])
+
+    if blocked_layout(cfg):
+        def block_body(hh, block_params):
+            return jax.lax.scan(body, hh, block_params)
+        h, (k_cache, v_cache) = jax.lax.scan(block_body, h,
+                                             params["layers"])
+    else:
+        h, (k_cache, v_cache) = jax.lax.scan(body, h, params["layers"])
+    h = layers.rmsnorm(params["final_norm"], h[:, -1:])[:, 0]
+    logits = jnp.einsum("bd,dv->bv", h.astype(jnp.bfloat16),
+                        params["lm_head"].astype(jnp.bfloat16))
+    logits = constrain(logits, rules, ("batch", "vocab"))
+    return logits.astype(jnp.float32), {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token, KV cache)
+# ---------------------------------------------------------------------------
+
+
+def cache_len(cfg: TransformerConfig, max_seq: int) -> int:
+    if cfg.swa_window is not None:
+        return min(cfg.swa_window, max_seq)
+    return max_seq
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+               dtype=None):
+    s = cache_len(cfg, max_seq)
+    dtype = dtype or cfg.compute_dtype
+    if blocked_layout(cfg):
+        shape = (cfg.n_layers // cfg.remat_block, cfg.remat_block, batch,
+                 s, cfg.n_kv_heads, cfg.d_head)
+    else:
+        shape = (cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_specs(cfg: TransformerConfig, rules: MeshRules):
+    logical = (None, "batch", "seq_tp", None, None)
+    if blocked_layout(cfg):
+        logical = (None,) + logical
+    spec = logical_to_spec(rules, logical)
+    return {"k": spec, "v": spec}
+
+
+def decode_step(params, cache, tokens: jax.Array, pos: jax.Array,
+                cfg: TransformerConfig, rules: MeshRules):
+    """One decode step: ``tokens (B,)`` at absolute position ``pos``
+    (scalar). Returns (logits (B, V), new_cache)."""
+    b = tokens.shape[0]
+    h = _embed_lookup(params["embed"], tokens[:, None], rules,
+                      cfg.compute_dtype)                     # (B, 1, D)
+    h = h[:, 0]
+    s_cache = cache["k"].shape[2]
+    # ring-buffer slot for SWA; plain slot otherwise
+    slot = pos % s_cache if cfg.swa_window is not None else pos
+    length = jnp.minimum(pos + 1, s_cache)
+
+    def body(h, xs):
+        p, k_c, v_c = xs
+        hn = layers.rmsnorm(p["ln1"], h[:, None])[:, 0]
+        q, k, v = _qkv(p, cfg, hn)
+        q = q.reshape(b, cfg.n_heads, cfg.d_head)
+        k = k.reshape(b, cfg.n_kv_heads, cfg.d_head)
+        v = v.reshape(b, cfg.n_kv_heads, cfg.d_head)
+        pos_b = jnp.broadcast_to(pos, (b, 1))
+        q = layers.rope(q[:, None], pos_b, cfg.rope_theta)[:, 0]
+        k = layers.rope(k[:, None], pos_b, cfg.rope_theta)[:, 0]
+        # flash-decoding: the cache keeps its seq dim sharded over "model";
+        # q must be REPLICATED over that axis or XLA resolves the contraction
+        # conflict by all-gathering the (huge) cache instead (measured
+        # ~1 GB/layer at 32k). The psum of the (B, H, dh) partials is tiny.
+        q = constrain(q, rules, ("batch", None, None))
+        k_c = jax.lax.dynamic_update_slice_in_dim(
+            k_c, k.astype(k_c.dtype)[:, None], slot, axis=1)
+        v_c = jax.lax.dynamic_update_slice_in_dim(
+            v_c, v.astype(v_c.dtype)[:, None], slot, axis=1)
+        attn = attention.decode_attention(q, k_c, v_c, length)
+        h = h + jnp.einsum("bk,kd->bd",
+                           attn.reshape(b, cfg.n_heads * cfg.d_head),
+                           p["wo"].astype(cfg.compute_dtype))
+        hn = layers.rmsnorm(p["ln2"], h[:, None])[:, 0]
+        mlp_out, _ = _mlp(p, cfg, hn[:, None], rules)
+        h = h + mlp_out[:, 0]
+        return h, (k_c, v_c)
+
+    if blocked_layout(cfg):
+        def block_body(hh, xs):
+            return jax.lax.scan(body, hh, xs)
+        h, (new_k, new_v) = jax.lax.scan(
+            block_body, h, (params["layers"], cache["k"], cache["v"]))
+    else:
+        h, (new_k, new_v) = jax.lax.scan(
+            body, h, (params["layers"], cache["k"], cache["v"]))
+    h = layers.rmsnorm(params["final_norm"], h[:, None])[:, 0]
+    logits = jnp.einsum("bd,dv->bv", h.astype(jnp.bfloat16),
+                        params["lm_head"].astype(jnp.bfloat16))
+    logits = constrain(logits, rules, ("batch", "vocab"))
+    return logits.astype(jnp.float32), {"k": new_k, "v": new_v}

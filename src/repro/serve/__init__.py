@@ -1,0 +1,4 @@
+"""Serving layer: batched search engine + recsys retrieval + LM decode."""
+from repro.serve import decode, engine, retrieval
+
+__all__ = ["decode", "engine", "retrieval"]

@@ -1,0 +1,56 @@
+"""LM generation loop: prefill once, then jitted decode steps with the KV
+cache (the serve_step the decode_32k / long_500k dry-run shapes exercise).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.sharding import MeshRules
+
+__all__ = ["generate"]
+
+
+def generate(params, prompt: jax.Array, n_new: int,
+             cfg: tfm.TransformerConfig, rules: Optional[MeshRules] = None,
+             temperature: float = 0.0, rng: Optional[jax.Array] = None):
+    """``prompt (B, S0)`` -> generated tokens ``(B, S0 + n_new)``.
+
+    Greedy when temperature == 0, else categorical sampling. The cache is
+    sized for the full output (SWA archs keep only their window).
+    """
+    rules = rules or MeshRules(dp=(), fsdp=(), tp=None, ep=None)
+    b, s0 = prompt.shape
+    max_seq = s0 + n_new
+    logits, cache = tfm.prefill_step(params, prompt, cfg, rules)
+    # re-home the prefill cache into a max_seq-sized cache
+    full = tfm.init_cache(cfg, b, max_seq, dtype=cache["k"].dtype)
+    keep = cache["k"].shape[-3]
+    full = {
+        kk: jax.lax.dynamic_update_slice_in_dim(
+            full[kk], cache[kk], max(0, min(s0, tfm.cache_len(cfg, max_seq))
+                                     - keep), axis=full[kk].ndim - 3)
+        for kk in ("k", "v")
+    }
+
+    step_fn = jax.jit(lambda p, c, t, q: tfm.decode_step(p, c, t, q, cfg,
+                                                         rules))
+    tokens = prompt
+    last = jnp.argmax(logits, axis=-1).astype(prompt.dtype)
+    key = rng if rng is not None else jax.random.PRNGKey(0)
+    for i in range(n_new):
+        tokens = jnp.concatenate([tokens, last[:, None]], axis=1)
+        if i == n_new - 1:
+            break
+        logits, full = step_fn(params, full, last,
+                               jnp.asarray(s0 + i, jnp.int32))
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            last = jax.random.categorical(
+                sub, logits / temperature, axis=-1).astype(prompt.dtype)
+        else:
+            last = jnp.argmax(logits, axis=-1).astype(prompt.dtype)
+    return tokens

@@ -1,0 +1,66 @@
+"""Batched vector-search serving engine (Algorithm 1 as a service).
+
+Pulls requests from a host-side queue, pads to the compiled batch size,
+executes the jitted multi-step search, and reports per-batch latency / QPS.
+This is the measurement harness behind the paper's throughput axis; on CPU
+the numbers characterize the harness, on TPU the system.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ServeStats", "ServingEngine"]
+
+
+@dataclass
+class ServeStats:
+    n_queries: int = 0
+    n_batches: int = 0
+    total_s: float = 0.0
+    latencies_ms: List[float] = field(default_factory=list)
+
+    @property
+    def qps(self) -> float:
+        return self.n_queries / self.total_s if self.total_s else 0.0
+
+    def percentile_ms(self, p: float) -> float:
+        return float(np.percentile(self.latencies_ms, p)) \
+            if self.latencies_ms else 0.0
+
+
+class ServingEngine:
+    """search_fn(queries (B, D)) -> ids (B, k); fixed compiled batch B."""
+
+    def __init__(self, search_fn: Callable, batch_size: int, dim: int):
+        self.search_fn = jax.jit(search_fn)
+        self.batch_size = batch_size
+        self.dim = dim
+        self.stats = ServeStats()
+        # warmup/compile with a dummy batch
+        dummy = jnp.zeros((batch_size, dim), jnp.float32)
+        jax.block_until_ready(self.search_fn(dummy))
+
+    def submit(self, queries: np.ndarray) -> np.ndarray:
+        """Run all queries through fixed-size batches (pad the tail)."""
+        out = []
+        n = queries.shape[0]
+        for s in range(0, n, self.batch_size):
+            chunk = queries[s:s + self.batch_size]
+            pad = self.batch_size - chunk.shape[0]
+            if pad:
+                chunk = np.pad(chunk, ((0, pad), (0, 0)))
+            t0 = time.perf_counter()
+            ids = jax.block_until_ready(self.search_fn(jnp.asarray(chunk)))
+            dt = time.perf_counter() - t0
+            self.stats.n_batches += 1
+            self.stats.n_queries += min(self.batch_size, n - s)
+            self.stats.total_s += dt
+            self.stats.latencies_ms.append(dt * 1e3)
+            out.append(np.asarray(ids)[: self.batch_size - pad])
+        return np.concatenate(out, axis=0)

@@ -1,0 +1,7 @@
+"""Training substrate: optimizer, checkpointing, data, gradient compression."""
+from repro.train import checkpoint, data, grad_compress, optimizer, trainstep
+from repro.train.optimizer import AdamWConfig, AdamWState
+from repro.train.trainstep import make_train_step
+
+__all__ = ["checkpoint", "data", "grad_compress", "optimizer", "trainstep",
+           "AdamWConfig", "AdamWState", "make_train_step"]

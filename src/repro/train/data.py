@@ -1,0 +1,60 @@
+"""Deterministic synthetic data pipelines.
+
+Every batch is a pure function of (seed, step): restarts (fault tolerance,
+elastic re-meshing) replay the exact token stream with zero pipeline state to
+checkpoint. Generation happens on-device from a folded PRNG key, so the
+pipeline itself shards with the batch (no host bottleneck in the dry-run
+model).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lm_batch", "criteo_batch", "bst_batch", "mind_batch",
+           "graph_minibatch_seeds"]
+
+
+def _key(seed: int, step, salt: int = 0):
+    return jax.random.fold_in(jax.random.fold_in(
+        jax.random.PRNGKey(seed), salt), step)
+
+
+def lm_batch(seed: int, step, batch: int, seq: int,
+             vocab: int) -> Dict[str, jax.Array]:
+    k = _key(seed, step, 1)
+    tokens = jax.random.randint(k, (batch, seq + 1), 0, vocab)
+    return {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+
+
+def criteo_batch(seed: int, step, batch: int, n_dense: int,
+                 vocab_sizes) -> Dict[str, jax.Array]:
+    k1, k2, k3 = jax.random.split(_key(seed, step, 2), 3)
+    dense = jax.random.normal(k1, (batch, n_dense))
+    maxes = jnp.asarray(list(vocab_sizes), jnp.int32)
+    sparse = (jax.random.randint(k2, (batch, len(vocab_sizes)), 0, 1 << 30)
+              % maxes[None, :])
+    label = jax.random.bernoulli(k3, 0.3, (batch,)).astype(jnp.int32)
+    return {"dense": dense, "sparse": sparse, "label": label}
+
+
+def bst_batch(seed: int, step, batch: int, seq_len: int,
+              n_items: int) -> Dict[str, jax.Array]:
+    k1, k2, k3 = jax.random.split(_key(seed, step, 3), 3)
+    return {"seq": jax.random.randint(k1, (batch, seq_len), 0, n_items),
+            "target": jax.random.randint(k2, (batch,), 0, n_items),
+            "label": jax.random.bernoulli(k3, 0.3, (batch,)).astype(jnp.int32)}
+
+
+def mind_batch(seed: int, step, batch: int, seq_len: int,
+               n_items: int) -> Dict[str, jax.Array]:
+    k1, k2 = jax.random.split(_key(seed, step, 4))
+    return {"seq": jax.random.randint(k1, (batch, seq_len), 0, n_items),
+            "target": jax.random.randint(k2, (batch,), 0, n_items)}
+
+
+def graph_minibatch_seeds(seed: int, step, batch: int,
+                          n_nodes: int) -> jax.Array:
+    return jax.random.randint(_key(seed, step, 5), (batch,), 0, n_nodes)

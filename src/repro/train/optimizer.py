@@ -1,0 +1,195 @@
+"""AdamW from scratch (no optax): pure pytree functions.
+
+Optimizer state mirrors the parameter pytree, so under pjit the moments
+inherit the parameter shardings (ZeRO: with FSDP'd params the state is FSDP'd
+too -- optimizer sharding falls out of the data layout, no extra machinery).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "AdafactorConfig", "AdafactorState", "adafactor_init",
+           "adafactor_update", "global_norm", "cosine_warmup_lr"]
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: object      # pytree like params
+    nu: object
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def cosine_warmup_lr(step: jax.Array, base_lr: float, warmup: int = 100,
+                     total: int = 10_000, min_frac: float = 0.1) -> jax.Array:
+    stepf = step.astype(jnp.float32)
+    warm = stepf / max(warmup, 1)
+    prog = jnp.clip((stepf - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(math.pi * prog))
+    return base_lr * jnp.where(stepf < warmup, warm, cos)
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: AdamWConfig,
+                 lr: Optional[jax.Array] = None):
+    """One AdamW step. Returns (new_params, new_state, grad_norm)."""
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state.step + 1
+    stepf = step.astype(jnp.float32)
+    lr_t = cfg.lr if lr is None else lr
+    bc1 = 1.0 - cfg.b1 ** stepf
+    bc2 = 1.0 - cfg.b2 ** stepf
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        mhat = m / bc1
+        vhat = v / bc2
+        new_p = (p.astype(jnp.float32)
+                 - lr_t * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                           + cfg.weight_decay * p.astype(jnp.float32)))
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_params, AdamWState(step, new_mu, new_nu), gnorm
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018): factored second moment + optional bf16
+# momentum. For a 400B-param model on 256 chips, full-fp32 Adam state alone
+# (12 bytes/param) exceeds the 16 GB/chip HBM budget; Adafactor stores
+# O(m + n) per (m, n) matrix (~0 bytes/param) and is the standard production
+# choice at this scale (T5/PaLM lineage).
+# ---------------------------------------------------------------------------
+
+
+class AdafactorConfig(NamedTuple):
+    lr: float = 1e-2
+    decay: float = 0.8            # beta2 exponent: 1 - step^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0   # update RMS clip
+    weight_decay: float = 0.0
+    momentum: Optional[float] = None    # None = no first moment
+    momentum_dtype: object = jnp.bfloat16
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: object    # row second moments (factored leaves) / full v (vectors)
+    vc: object    # col second moments (zeros-placeholder for vectors)
+    mu: object    # momentum (bf16) or zeros-placeholder
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params, cfg: AdafactorConfig = AdafactorConfig()
+                   ) -> AdafactorState:
+    def vr_init(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)       # drop cols
+        return jnp.zeros(p.shape, jnp.float32)                # full v
+
+    def vc_init(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,) * max(p.ndim, 1), jnp.float32)
+
+    def mu_init(p):
+        if cfg.momentum is None:
+            return jnp.zeros((1,), cfg.momentum_dtype)
+        return jnp.zeros(p.shape, cfg.momentum_dtype)
+
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          vr=jax.tree.map(vr_init, params),
+                          vc=jax.tree.map(vc_init, params),
+                          mu=jax.tree.map(mu_init, params))
+
+
+def adafactor_update(grads, state: AdafactorState, params,
+                     cfg: AdafactorConfig = AdafactorConfig(),
+                     lr: Optional[jax.Array] = None):
+    """One Adafactor step. Returns (new_params, new_state, grad_norm)."""
+    gnorm = global_norm(grads)
+    step = state.step + 1
+    beta2 = 1.0 - step.astype(jnp.float32) ** (-cfg.decay)
+    lr_t = cfg.lr if lr is None else lr
+
+    def upd(p, g, vr, vc, mu):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + cfg.eps
+        if _factored(p):
+            vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                cfg.eps)
+            vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+        else:
+            vr = beta2 * vr + (1 - beta2) * g2
+            vhat = vr
+        u = gf * jax.lax.rsqrt(vhat + cfg.eps)
+        # RMS clip (Adafactor's update clipping)
+        rms = jnp.sqrt(jnp.mean(u * u) + cfg.eps)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        if cfg.momentum is not None:
+            mu_f = cfg.momentum * mu.astype(jnp.float32) \
+                + (1 - cfg.momentum) * u
+            u = mu_f
+            mu = mu_f.astype(cfg.momentum_dtype)
+        new_p = (p.astype(jnp.float32) - lr_t * u
+                 - lr_t * cfg.weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), vr, vc, mu
+
+    # NOTE (Perf log): a lax.map-chunked per-layer update was tried to bound
+    # the f32 update temporaries; XLA hoists the xs convert out of the loop
+    # and materializes a full f32 copy of the stacked weights -- measured
+    # +25 GB/dev on llama4. Reverted to whole-leaf updates.
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_vr = treedef.flatten_up_to(state.vr)
+    flat_vc = treedef.flatten_up_to(state.vc)
+    flat_mu = treedef.flatten_up_to(state.mu)
+    out = [upd(p, g, vr, vc, mu) for p, g, vr, vc, mu
+           in zip(flat_p, flat_g, flat_vr, flat_vc, flat_mu)]
+    return (treedef.unflatten([o[0] for o in out]),
+            AdafactorState(step,
+                           treedef.unflatten([o[1] for o in out]),
+                           treedef.unflatten([o[2] for o in out]),
+                           treedef.unflatten([o[3] for o in out])),
+            gnorm)

@@ -1,0 +1,3 @@
+from repro.utils import hlo_analysis, roofline
+
+__all__ = ["hlo_analysis", "roofline"]

@@ -1,0 +1,90 @@
+"""Three-term roofline model for TPU v5e (see EXPERIMENTS.md section Roofline).
+
+    compute    = HLO_FLOPs   / (chips * 197e12 FLOP/s bf16)
+    memory     = HLO_bytes   / (chips * 819e9  B/s HBM)
+    collective = coll_bytes  / (chips * 50e9   B/s per ICI link)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` CORRECTED for
+while/scan bodies being counted once: the correction adds
+(trips - 1) x body counts using the per-computation accounting from
+utils/hlo_analysis.py (dot-FLOP parser). collective_bytes is parsed from the
+HLO text (cost_analysis does not expose it).
+
+All quantities are per-device post-SPMD, so "chips" never appears again:
+the terms are per-chip step times already.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+__all__ = ["V5E", "RooflineTerms", "compute_terms"]
+
+
+@dataclass(frozen=True)
+class HWSpec:
+    peak_flops: float = 197e12      # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9           # B/s per chip
+    ici_bw: float = 50e9            # B/s per link (conservative, per spec)
+    hbm_bytes: float = 16e9         # v5e HBM capacity
+
+
+V5E = HWSpec()
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float                # per device, trip-corrected
+    hlo_bytes: float                # per device, trip-corrected
+    collective_bytes: float         # per device, trip-corrected
+    raw_cost_flops: float           # uncorrected cost_analysis numbers
+    raw_cost_bytes: float
+    model_flops_total: float        # analytic 6ND-style, whole step, all chips
+    n_chips: int
+    useful_flops_ratio: float       # MODEL_FLOPS / (HLO_FLOPs * chips)
+    bottleneck: str
+    bound_s: float
+    peak_fraction: float            # useful model FLOP/s / peak, at bound_s
+
+    def to_dict(self) -> Dict:
+        return asdict(self)
+
+
+def compute_terms(cost: Dict[str, float], hlo_stats: Dict,
+                  model_flops_total: float, n_chips: int,
+                  hw: HWSpec = V5E,
+                  flop_correction: Optional[float] = None) -> RooflineTerms:
+    """Build the three terms.
+
+    FLOPs = the HLO dot parser's count (honors while trip counts and the
+    fusion call graph; cost_analysis counts loop bodies once). Bytes =
+    2 x top-level instruction result bytes (writes ~ reads at fusion
+    granularity), same trip correction; cost_analysis bytes kept as a raw
+    reference and as a floor.
+    """
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    flops = max(float(hlo_stats.get("dot_flops", 0.0)), raw_flops)
+    bytes_ = max(2.0 * float(hlo_stats.get("write_bytes", 0.0)), raw_bytes)
+    coll = float(hlo_stats.get("collective_bytes", 0.0))
+
+    compute_s = flops / hw.peak_flops
+    memory_s = bytes_ / hw.hbm_bw
+    collective_s = coll / hw.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    bound_s = terms[bottleneck]
+    useful = model_flops_total / max(flops * n_chips, 1.0)
+    peak_fraction = (model_flops_total / max(bound_s, 1e-12)
+                     / (n_chips * hw.peak_flops))
+    return RooflineTerms(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        hlo_flops=flops, hlo_bytes=bytes_, collective_bytes=coll,
+        raw_cost_flops=raw_flops, raw_cost_bytes=raw_bytes,
+        model_flops_total=model_flops_total, n_chips=n_chips,
+        useful_flops_ratio=useful, bottleneck=bottleneck, bound_s=bound_s,
+        peak_fraction=peak_fraction)

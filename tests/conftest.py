@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run on the real (1-device) CPU platform -- the 512-device override
+# belongs to launch/dryrun.py ONLY. Keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

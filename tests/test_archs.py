@@ -1,0 +1,119 @@
+"""Per-assigned-architecture smoke tests: reduced config, one real step on
+CPU, output shapes + finiteness (assignment deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import build_bundle
+from repro.train.optimizer import AdamWState
+
+ALL_CELLS = [(a, s) for a, m in ARCHS.items() for s in m.SHAPES
+             if s not in getattr(m, "SKIPS", {})]
+
+
+def _materialize(args_tree):
+    """Concrete values for abstract args; opt-state moments must be >= 0."""
+    def mk(path, sds):
+        name = jax.tree_util.keystr(path)
+        if np.issubdtype(sds.dtype, np.integer) or sds.dtype == jnp.uint32:
+            return jnp.zeros(sds.shape, sds.dtype)
+        key = jax.random.PRNGKey(abs(hash(name)) % (1 << 31))
+        x = jax.random.normal(key, sds.shape, jnp.float32) * 0.02
+        if ".nu" in name or ".mu" in name:
+            x = jnp.abs(x)
+        return x.astype(sds.dtype)
+
+    return jax.tree_util.tree_map_with_path(
+        mk, args_tree, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+@pytest.mark.parametrize("arch,shape", ALL_CELLS,
+                         ids=[f"{a}-{s}" for a, s in ALL_CELLS])
+def test_arch_smoke(arch, shape):
+    mesh = make_host_mesh()
+    bundle = build_bundle(arch, shape, mesh, smoke=True)
+    args = _materialize(bundle.args)
+    out = jax.jit(bundle.fn)(*args)
+    out_leaves = [(jax.tree_util.keystr(kp), leaf) for kp, leaf in
+                  jax.tree_util.tree_flatten_with_path(out)[0]]
+    assert out_leaves, "step produced no outputs"
+    for name, leaf in out_leaves:
+        assert leaf.shape is not None
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            assert not bool(jnp.any(jnp.isnan(leaf))), f"NaN in {name}"
+
+
+@pytest.mark.parametrize("arch", ["h2o-danube-3-4b", "qwen2-72b",
+                                  "grok-1-314b"])
+def test_lm_decode_matches_prefill(arch):
+    """Prefill-then-decode must agree with teacher-forced decode chain."""
+    from repro.models import transformer as tfm
+    from repro.models.sharding import MeshRules
+    mod = ARCHS[arch]
+    cfg = mod.make_config(smoke=True)
+    rules = MeshRules(dp=(), fsdp=(), tp=None, ep=None)
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    logits_p, cache = tfm.prefill_step(params, tokens, cfg, rules)
+    # decode the same tokens one by one into a fresh cache
+    cache_d = tfm.init_cache(cfg, 2, 12, dtype=cache["k"].dtype)
+    logits_d = None
+    for t in range(12):
+        logits_d, cache_d = tfm.decode_step(
+            params, cache_d, tokens[:, t], jnp.asarray(t, jnp.int32), cfg,
+            rules)
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_d),
+                               rtol=2e-2, atol=2e-1)
+
+
+def test_full_configs_match_assignment():
+    """Spot-check the exact assigned hyperparameters of the full configs."""
+    q = ARCHS["qwen2-72b"].make_config()
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads, q.d_ff,
+            q.vocab, q.qkv_bias) == (80, 8192, 64, 8, 29568, 152064, True)
+    n = ARCHS["nemotron-4-15b"].make_config()
+    assert (n.n_layers, n.d_model, n.act, n.glu, n.vocab) == \
+        (32, 6144, "squared_relu", False, 256000)
+    g = ARCHS["grok-1-314b"].make_config()
+    assert (g.n_layers, g.moe.n_experts, g.moe.top_k, g.d_ff) == \
+        (64, 8, 2, 32768)
+    l4 = ARCHS["llama4-maverick-400b-a17b"].make_config()
+    assert (l4.n_layers, l4.moe.n_experts, l4.moe.top_k, l4.vocab) == \
+        (48, 128, 1, 202048)
+    d = ARCHS["h2o-danube-3-4b"].make_config()
+    assert (d.n_layers, d.d_model, d.swa_window is not None) == \
+        (24, 3840, True)
+    dl = ARCHS["dlrm-mlperf"].make_config()
+    assert dl.embed_dim == 128 and len(dl.vocab_sizes) == 26
+    assert dl.bot_mlp == (512, 256, 128)
+    fm_ = ARCHS["fm"].make_config()
+    assert fm_.n_sparse == 39 and fm_.embed_dim == 10
+    b = ARCHS["bst"].make_config()
+    assert (b.embed_dim, b.seq_len, b.n_heads, b.n_blocks) == (32, 20, 8, 1)
+    mi = ARCHS["mind"].make_config()
+    assert (mi.embed_dim, mi.n_interests, mi.capsule_iters) == (64, 4, 3)
+    gc = ARCHS["gcn-cora"].make_config()
+    assert (gc.n_layers, gc.d_hidden, gc.norm) == (2, 16, "sym")
+
+
+def test_generate_loop():
+    """serve/decode.py generation: greedy continuation is deterministic and
+    consistent with prefill+decode semantics."""
+    import jax.numpy as jnp
+    from repro.models import transformer as tfm
+    from repro.models.sharding import MeshRules
+    from repro.serve.decode import generate
+    mod = ARCHS["h2o-danube-3-4b"]
+    cfg = mod.make_config(smoke=True)
+    rules = MeshRules(dp=(), fsdp=(), tp=None, ep=None)
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, cfg.vocab)
+    out1 = generate(params, prompt, 5, cfg, rules)
+    out2 = generate(params, prompt, 5, cfg, rules)
+    assert out1.shape == (2, 11)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    np.testing.assert_array_equal(np.asarray(out1[:, :6]),
+                                  np.asarray(prompt))

@@ -1,0 +1,55 @@
+"""Benchmark harness smoke: every per-figure module runs end-to-end on a
+reduced dataset and emits CSV rows with the expected derived fields."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture(scope="module", autouse=True)
+def small_bench(monkeypatch_module=None):
+    import benchmarks.common as common
+    common.BENCH_N = 1500
+    common.BENCH_QUERIES = 32
+    common.dataset.cache_clear()
+    common.ROWS.clear()
+    yield
+    common.dataset.cache_clear()
+
+
+def test_fig4_fig5(capsys):
+    from benchmarks import fig4_fig5_linear
+    res = fig4_fig5_linear.run()
+    assert ("deep-ID", "sphering") in res
+    loss, rec = res[("laion-OOD", "sphering")]
+    assert 0 <= rec <= 1 and loss >= 0
+
+
+def test_fig6():
+    from benchmarks import fig6_cluster_structure
+    d80_global, d80_clusters = fig6_cluster_structure.run()
+    assert d80_global >= 1 and len(d80_clusters) == 16
+
+
+def test_fig7():
+    from benchmarks import fig7_tag_access
+    total, window = fig7_tag_access.run(c=16, window=5)
+    assert len(total) > 0
+    assert max(total) <= 16
+
+
+def test_fig8():
+    from benchmarks import fig8_gleanvec
+    out = fig8_gleanvec.run()
+    assert any(k[0].startswith("gleanvec") for k in out)
+
+
+def test_table1_and_kernels():
+    from benchmarks import kernels_micro, table1_search
+    table1_search.run()
+    kernels_micro.run(n=5000, dim=128, d=48, c=8, m=8)
+    from benchmarks.common import ROWS
+    assert any(r.startswith("table1/") for r in ROWS)
+    assert any(r.startswith("kernel/") for r in ROWS)

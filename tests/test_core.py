@@ -1,0 +1,199 @@
+"""Paper-algorithm correctness: LeanVec-Sphering, GleanVec, baselines,
+streaming (Sections 3-4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (baselines, gleanvec as gv, leanvec_sphering as lvs,
+                        metrics, quantization, spherical_kmeans as skm,
+                        streaming)
+from repro.data import vectors
+
+
+@pytest.fixture(scope="module")
+def ood_data():
+    return vectors.make_dataset("ood", n=3000, d=96, n_queries=192,
+                                ood=True, seed=0)
+
+
+@pytest.fixture(scope="module")
+def id_data():
+    return vectors.make_dataset("id", n=3000, d=96, n_queries=192,
+                                ood=False, seed=0)
+
+
+def _recall(ds, a, b, k=10):
+    qv = ds.queries_test @ np.asarray(a).T
+    xv = ds.database @ np.asarray(b).T
+    ids = vectors.exact_topk(qv, xv, k)
+    return float(metrics.recall_at_k(jnp.asarray(ids),
+                                     jnp.asarray(ds.gt[:, :k])))
+
+
+def test_eq10_full_rotation_is_exact(ood_data):
+    """Section 3.1: with d == D, <A'q, B'x> == <q, x> exactly (Eq. 10)."""
+    ds = ood_data
+    m = lvs.full_rotation_model(jnp.asarray(ds.queries_learn),
+                                jnp.asarray(ds.database))
+    q = ds.queries_test[:16]
+    x = ds.database[:64]
+    approx = (q @ np.asarray(m.a).T) @ (x @ np.asarray(m.b).T).T
+    exact = q @ x.T
+    assert np.abs(approx - exact).max() / np.abs(exact).max() < 1e-3
+
+
+def test_truncate_is_prefix(ood_data):
+    ds = ood_data
+    m = lvs.full_rotation_model(jnp.asarray(ds.queries_learn),
+                                jnp.asarray(ds.database))
+    m32 = m.truncate(32)
+    assert m32.a.shape == (32, 96)
+    np.testing.assert_array_equal(np.asarray(m32.a), np.asarray(m.a)[:32])
+
+
+def test_sphering_beats_svd_on_ood(ood_data):
+    """Figure 5: query-aware sphering > query-agnostic SVD for OOD."""
+    ds = ood_data
+    X, Q = jnp.asarray(ds.database), jnp.asarray(ds.queries_learn)
+    kx = jnp.einsum("nd,ne->de", X, X)
+    m_sph = lvs.fit(Q, X, 32)
+    m_svd = baselines.svd_fit(kx, 32)
+    r_sph, r_svd = _recall(ds, m_sph.a, m_sph.b), _recall(ds, m_svd.a,
+                                                          m_svd.b)
+    assert r_sph > r_svd + 0.05
+    l_sph = metrics.leanvec_loss(m_sph.a, m_sph.b, Q, X)
+    l_svd = metrics.leanvec_loss(m_svd.a, m_svd.b, Q, X)
+    assert float(l_sph) < float(l_svd)
+
+
+def test_all_methods_similar_on_id(id_data):
+    """Figure 4: in-distribution, sphering ~ SVD (both >= 0.8 recall)."""
+    ds = id_data
+    X, Q = jnp.asarray(ds.database), jnp.asarray(ds.queries_learn)
+    kx = jnp.einsum("nd,ne->de", X, X)
+    r_sph = _recall(ds, *lvs.fit(Q, X, 32)[:2])
+    r_svd = _recall(ds, *baselines.svd_fit(kx, 32))
+    assert r_sph > 0.75 and r_svd > 0.75
+    assert abs(r_sph - r_svd) < 0.15
+
+
+def test_fw_es_improve_over_svd_on_ood(ood_data):
+    ds = ood_data
+    X, Q = jnp.asarray(ds.database), jnp.asarray(ds.queries_learn)
+    kq = jnp.einsum("nd,ne->de", Q, Q)
+    kx = jnp.einsum("nd,ne->de", X, X)
+    l_svd = metrics.leanvec_loss(*baselines.svd_fit(kx, 32), Q, X)
+    l_fw = metrics.leanvec_loss(*baselines.leanvec_fw(kq, kx, 32), Q, X)
+    l_es = metrics.leanvec_loss(*baselines.leanvec_es(kq, kx, 32), Q, X)
+    assert float(l_fw) < float(l_svd)
+    assert float(l_es) < float(l_svd)
+
+
+def test_gleanvec_beats_sphering(ood_data):
+    """Figure 8: piecewise-linear > linear at equal d (OOD)."""
+    ds = ood_data
+    X, Q = jnp.asarray(ds.database), jnp.asarray(ds.queries_learn)
+    d = 24
+    m = lvs.fit(Q, X, d)
+    r_lin = _recall(ds, m.a, m.b)
+    model = gv.fit(jax.random.PRNGKey(0), Q, X, c=8, d=d)
+    tags, x_low = gv.encode_database(model, X)
+    q_views = gv.project_queries_eager(model, jnp.asarray(ds.queries_test))
+    scores = np.stack([
+        np.asarray(gv.inner_products_eager(q_views[i], tags, x_low))
+        for i in range(q_views.shape[0])])
+    ids = np.argsort(-scores, axis=1)[:, :10]
+    r_gv = float(metrics.recall_at_k(jnp.asarray(ids),
+                                     jnp.asarray(ds.gt[:, :10])))
+    assert r_gv > r_lin - 0.01  # never worse; usually strictly better
+
+
+def test_lazy_eager_equivalent(ood_data):
+    """Algorithms 3 and 4 compute the same scores."""
+    ds = ood_data
+    X, Q = jnp.asarray(ds.database), jnp.asarray(ds.queries_learn)
+    model = gv.fit(jax.random.PRNGKey(0), Q, X, c=8, d=24)
+    tags, x_low = gv.encode_database(model, X)
+    q = jnp.asarray(ds.queries_test[0])
+    lazy = gv.inner_products_lazy(model, q, tags, x_low)
+    eager = gv.inner_products_eager(
+        gv.project_queries_eager(model, q[None])[0], tags, x_low)
+    np.testing.assert_allclose(np.asarray(lazy), np.asarray(eager),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_spherical_kmeans_properties():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((2000, 32)).astype(np.float32)
+    km = skm.fit(jax.random.PRNGKey(1), jnp.asarray(x), c=8, n_iters=15)
+    norms = np.linalg.norm(np.asarray(km.centers), axis=1)
+    np.testing.assert_allclose(norms, 1.0, atol=1e-5)   # unit centers
+    tags = skm.assign(skm.normalize_rows(jnp.asarray(x)), km.centers)
+    assert len(np.unique(np.asarray(tags))) == 8        # no empty clusters
+    # objective above random-centers baseline
+    rand_centers = skm.normalize_rows(
+        jnp.asarray(rng.standard_normal((8, 32)).astype(np.float32)))
+    rand_obj = float(jnp.mean(jnp.max(
+        skm.normalize_rows(jnp.asarray(x)) @ rand_centers.T, axis=-1)))
+    assert float(km.inertia) > rand_obj
+
+
+def test_streaming_matches_batch(ood_data):
+    """Section 3.2: moment updates + refresh == batch refit."""
+    ds = ood_data
+    X = jnp.asarray(ds.database[:500])
+    Q = jnp.asarray(ds.queries_learn)
+    k_q = jnp.einsum("nd,ne->de", Q, Q)
+    k_x0 = jnp.einsum("nd,ne->de", X[:400], X[:400])
+    st = streaming.init(k_q, k_x0, d=32, refresh_every=50)
+    for i in range(400, 450):
+        st = streaming.insert(st, X[i])
+    for i in range(50):
+        st = streaming.remove(st, X[i])
+    st = streaming.refresh(st)
+    # reference: batch fit on the same effective set X[50:450]
+    k_ref = jnp.einsum("nd,ne->de", X[50:450], X[50:450])
+    m_ref = lvs.fit_from_moments(k_q, k_ref, 32)
+    np.testing.assert_allclose(np.asarray(st.k_x), np.asarray(k_ref),
+                               rtol=2e-2, atol=2e-1)
+    # A^T B products agree (up to sign/rotation of eigvecs, compare scores)
+    x = np.asarray(X[:32])
+    q = np.asarray(Q[:16])
+    s1 = (q @ np.asarray(st.model.a).T) @ (x @ np.asarray(st.model.b).T).T
+    s2 = (q @ np.asarray(m_ref.a).T) @ (x @ np.asarray(m_ref.b).T).T
+    np.testing.assert_allclose(s1, s2, rtol=0.1, atol=0.5)
+
+
+def test_streaming_reprojection():
+    """Eq. 12: reprojection of stored vectors equals direct projection
+    under the new model (full-rotation d == D case)."""
+    rng = np.random.default_rng(3)
+    d_full = 24
+    X = jnp.asarray(rng.standard_normal((300, d_full)).astype(np.float32))
+    Q = jnp.asarray(rng.standard_normal((100, d_full)).astype(np.float32))
+    k_q = jnp.einsum("nd,ne->de", Q, Q)
+    k_x = jnp.einsum("nd,ne->de", X, X)
+    st = streaming.init(k_q, k_x, d=d_full, refresh_every=10)
+    x_low = X @ st.model.b.T
+    for i in range(12):
+        st = streaming.insert(st, X[i] * 1.5)
+    st = streaming.refresh(st)
+    reproj = streaming.reproject(st, x_low)
+    direct = X @ st.model.b.T
+    np.testing.assert_allclose(np.asarray(reproj), np.asarray(direct),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_quantization_roundtrip():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((100, 64)).astype(np.float32))
+    db = quantization.quantize(x)
+    deq = quantization.dequantize(db)
+    # max error bounded by delta/2 per entry
+    err = np.abs(np.asarray(deq) - np.asarray(x))
+    assert (err <= np.asarray(db.delta) * 0.5 + 1e-6).all()
+    q = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+    s = quantization.quantized_inner_products(q, db)
+    exact = np.asarray(x) @ np.asarray(q)
+    assert np.abs(np.asarray(s) - exact).max() / np.abs(exact).max() < 0.02

@@ -1,0 +1,141 @@
+"""Index substrate: flat/IVF/graph search + multi-step (Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gleanvec as gv, leanvec_sphering as lvs, metrics
+from repro.core import search as msearch
+from repro.data import vectors
+from repro.index import bruteforce, graph, ivf, topk
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return vectors.make_dataset("idx", n=4000, d=64, n_queries=64, ood=True,
+                                seed=2)
+
+
+def test_bruteforce_exact(ds):
+    """Flat scan == numpy ground truth in full dimension."""
+    vals, ids = bruteforce.search(jnp.asarray(ds.queries_test),
+                                  jnp.asarray(ds.database), 10, block=512)
+    rec = metrics.recall_at_k(ids, jnp.asarray(ds.gt[:, :10]))
+    assert float(rec) == 1.0
+
+
+def test_merge_topk():
+    va = jnp.asarray([[5.0, 3.0]]); ia = jnp.asarray([[1, 2]])
+    vb = jnp.asarray([[4.0, 6.0]]); ib = jnp.asarray([[3, 4]])
+    v, i = topk.merge_topk(va, ia, vb, ib, 2)
+    assert v.tolist() == [[6.0, 5.0]] and i.tolist() == [[4, 1]]
+
+
+def test_multi_step_search_recall(ds):
+    """Algorithm 1 end-to-end: reduced main search + rerank ~ exact."""
+    X = jnp.asarray(ds.database)
+    Q = jnp.asarray(ds.queries_learn)
+    model = lvs.fit(Q, X, 24)
+    art = msearch.build_artifacts_sphering(model, X, use_rotated_full=False)
+
+    def index_search(q_low, artifacts, kappa):
+        _, ids = bruteforce.search(q_low, artifacts.x_low, kappa)
+        return ids
+
+    ids = msearch.multi_step_search(jnp.asarray(ds.queries_test), art,
+                                    index_search, k=10, kappa=50)
+    rec = metrics.recall_at_k(ids, jnp.asarray(ds.gt[:, :10]))
+    assert float(rec) > 0.95
+
+
+def test_multi_step_rotated_storage(ds):
+    """Section 3.1 storage: rerank from the SAME rotated vectors."""
+    X = jnp.asarray(ds.database)
+    model = lvs.full_rotation_model(jnp.asarray(ds.queries_learn), X)
+    art = msearch.build_artifacts_sphering(model, X, use_rotated_full=True)
+    assert art.x_full is art.x_low   # single storage
+
+    def index_search(q_low, artifacts, kappa):
+        _, ids = bruteforce.search(q_low[:, :24], artifacts.x_low[:, :24],
+                                   kappa)
+        return ids
+
+    ids = msearch.multi_step_search(jnp.asarray(ds.queries_test), art,
+                                    index_search, k=10, kappa=50)
+    rec = metrics.recall_at_k(ids, jnp.asarray(ds.gt[:, :10]))
+    assert float(rec) > 0.95
+
+
+def test_graph_search_recall(ds):
+    g = graph.build(ds.database, r=24, n_iters=5, seed=0)
+    model = lvs.fit(jnp.asarray(ds.queries_learn),
+                    jnp.asarray(ds.database), 32)
+    q_low = jnp.asarray(ds.queries_test) @ model.a.T
+    x_low = jnp.asarray(ds.database) @ model.b.T
+    _, ids = graph.beam_search(q_low, x_low, g, k=10, beam=96, max_hops=250)
+    rec = metrics.recall_at_k(ids, jnp.asarray(ds.gt[:, :10]))
+    assert float(rec) > 0.8
+
+
+def test_graph_search_gleanvec_traced(ds):
+    g = graph.build(ds.database, r=24, n_iters=5, seed=0)
+    model = gv.fit(jax.random.PRNGKey(0), jnp.asarray(ds.queries_learn),
+                   jnp.asarray(ds.database), c=8, d=32)
+    tags, x_low = gv.encode_database(model, jnp.asarray(ds.database))
+    q_views = gv.project_queries_eager(model, jnp.asarray(ds.queries_test))
+    _, ids, hops, tag_hist = graph.beam_search_traced(
+        q_views, tags, x_low, g, k=10, beam=96, max_hops=250)
+    rec = metrics.recall_at_k(ids, jnp.asarray(ds.gt[:, :10]))
+    assert float(rec) > 0.8
+    th = np.asarray(tag_hist)
+    assert (th < 8).all() and int(hops) > 0
+    # Figure-7 property: distinct visited tags << C * hops
+    distinct = np.mean([len(np.unique(r[r >= 0])) for r in th])
+    assert distinct <= 8
+
+
+def test_ivf_search(ds):
+    X = jnp.asarray(ds.database)
+    iv = ivf.build(jax.random.PRNGKey(0), X, n_lists=16)
+    model = lvs.fit(jnp.asarray(ds.queries_learn), X, 32)
+    q_low = jnp.asarray(ds.queries_test) @ model.a.T
+    x_low = X @ model.b.T
+    _, ids = ivf.search(q_low, jnp.asarray(ds.queries_test), x_low, iv,
+                        k=10, nprobe=8)
+    rec = metrics.recall_at_k(ids, jnp.asarray(ds.gt[:, :10]))
+    assert float(rec) > 0.7
+
+
+def test_quantized_flat_search(ds):
+    from repro.core.quantization import quantize
+    X = jnp.asarray(ds.database)
+    model = lvs.fit(jnp.asarray(ds.queries_learn), X, 32)
+    x_low = X @ model.b.T
+    db = quantize(x_low)
+    q_low = jnp.asarray(ds.queries_test) @ model.a.T
+    _, ids = bruteforce.search_quantized(q_low, db.codes, db.lo,
+                                         db.delta, 30)
+    # rerank in full precision
+    art = msearch.build_artifacts_sphering(model, X, use_rotated_full=False)
+    final = msearch.rerank(jnp.asarray(ds.queries_test), art, ids, 10)
+    rec = metrics.recall_at_k(final, jnp.asarray(ds.gt[:, :10]))
+    assert float(rec) > 0.85
+
+
+def test_sorted_gleanvec_scan_matches_unsorted(ds):
+    """Tag-sorted (cluster-contiguous) scan == gather-based scan."""
+    X = jnp.asarray(ds.database)
+    model = gv.fit(jax.random.PRNGKey(3), jnp.asarray(ds.queries_learn), X,
+                   c=8, d=24)
+    tags, x_low = gv.encode_database(model, X)
+    q_views = gv.project_queries_eager(model,
+                                       jnp.asarray(ds.queries_test[:16]))
+    v1, i1 = bruteforce.search_gleanvec(q_views, tags, x_low, 10, block=256)
+    xs, btags, perm, _ = gv.sort_by_tag(tags, x_low, block=256)
+    v2, i2s = bruteforce.search_gleanvec_sorted(q_views, btags, xs, 10,
+                                                block=256)
+    i2 = jnp.asarray(np.asarray(perm)[np.asarray(i2s)])
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4,
+                               atol=1e-4)
+    assert np.array_equal(np.sort(np.asarray(i1), 1),
+                          np.sort(np.asarray(i2), 1))

@@ -1,0 +1,110 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantization import quantize
+from repro.kernels import (flash_attention, flash_attention_ref, gleanvec_ip,
+                           gleanvec_ip_ref, ip_topk, ip_topk_ref,
+                           kmeans_assign, kmeans_assign_ref, sq_dot,
+                           sq_dot_ref)
+
+RNG = np.random.default_rng(0)
+
+
+def _randn(*shape, dtype=np.float32):
+    return jnp.asarray(RNG.standard_normal(shape).astype(dtype))
+
+
+@pytest.mark.parametrize("m,n,d,k,tm,tn", [
+    (8, 256, 32, 5, 8, 64),
+    (20, 1000, 96, 10, 8, 128),     # non-divisible m/n -> padding
+    (1, 513, 64, 16, 8, 256),
+    (33, 4096, 160, 100, 16, 512),  # paper-scale d=160, k=100
+])
+def test_ip_topk_matches_ref(m, n, d, k, tm, tn):
+    q, x = _randn(m, d), _randn(n, d)
+    v, i = ip_topk(q, x, k, tm=tm, tn=tn, interpret=True)
+    vr, ir = ip_topk_ref(q, x, k)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vr), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_ip_topk_dtypes(dtype):
+    q, x = _randn(4, 32, dtype=dtype), _randn(128, 32, dtype=dtype)
+    v, i = ip_topk(q, x, 5, tm=4, tn=64, interpret=True)
+    vr, ir = ip_topk_ref(q, x, 5)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(vr), rtol=1e-2,
+                               atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+
+
+@pytest.mark.parametrize("m,n,c,d,tm,tn", [
+    (3, 300, 8, 24, 2, 128),
+    (5, 700, 16, 48, 4, 256),
+    (1, 100, 48, 192, 1, 64),       # paper C=48, d=192 (t2i)
+])
+def test_gleanvec_ip_matches_ref(m, n, c, d, tm, tn):
+    q_views = _randn(m, c, d)
+    tags = jnp.asarray(RNG.integers(0, c, n).astype(np.int32))
+    x_low = _randn(n, d)
+    a = gleanvec_ip(q_views, tags, x_low, tm=tm, tn=tn, interpret=True)
+    b = gleanvec_ip_ref(q_views, tags, x_low)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("n,c,d,tn", [
+    (500, 13, 64, 128), (2048, 48, 200, 512), (100, 4, 16, 64)])
+def test_kmeans_assign_matches_ref(n, c, d, tn):
+    x, cent = _randn(n, d), _randn(c, d)
+    t1, s1 = kmeans_assign(x, cent, tn=tn, interpret=True)
+    t2, s2 = kmeans_assign_ref(x, cent)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("m,n,d,tm,tn", [
+    (4, 300, 48, 4, 128), (9, 1000, 160, 8, 256)])
+def test_sq_dot_matches_ref(m, n, d, tm, tn):
+    x = _randn(n, d)
+    db = quantize(x)
+    q = _randn(m, d)
+    s1 = sq_dot(q, db.codes, db.lo, db.delta, tm=tm, tn=tn,
+                interpret=True)
+    s2 = sq_dot_ref(q, db.codes, db.lo, db.delta)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("b,h,kv,s,dh,bq,bk,window", [
+    (1, 4, 4, 64, 16, 32, 32, None),     # MHA
+    (2, 4, 2, 96, 32, 32, 32, None),     # GQA
+    (2, 8, 2, 128, 16, 64, 32, None),    # GQA group 4
+    (1, 4, 2, 128, 32, 32, 32, 48),      # sliding window
+    (2, 4, 2, 80, 32, 32, 32, None),     # padded seq
+])
+def test_flash_attention_matches_ref(b, h, kv, s, dh, bq, bk, window):
+    q = _randn(b, h, s, dh)
+    k = _randn(b, kv, s, dh)
+    v = _randn(b, kv, s, dh)
+    o1 = flash_attention(q, k, v, causal=True, window=window, bq=bq, bk=bk,
+                         interpret=True)
+    o2 = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    q = _randn(1, 2, 64, 32).astype(jnp.bfloat16)
+    k = _randn(1, 2, 64, 32).astype(jnp.bfloat16)
+    v = _randn(1, 2, 64, 32).astype(jnp.bfloat16)
+    o1 = flash_attention(q, k, v, bq=32, bk=32, interpret=True)
+    o2 = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), rtol=3e-2,
+                               atol=3e-2)

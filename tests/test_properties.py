@@ -1,0 +1,125 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import assume, given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import linalg, metrics, quantization
+from repro.index import topk
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=2,
+                                               min_side=4, max_side=24),
+                  elements=st.floats(-10, 10, width=32)))
+def test_sphering_identity(x):
+    """W @ W_pinv acts as identity on the row space of K (PSD)."""
+    assume(float(np.abs(x).max()) > 1e-2)  # eigh is flaky on ~zero matrices
+    k = np.asarray(jnp.asarray(x) @ jnp.asarray(x).T)
+    w, w_pinv = linalg.sphering_from_moment(jnp.asarray(k))
+    w, w_pinv = np.asarray(w), np.asarray(w_pinv)
+    scale = max(float(np.abs(k).max()), 1.0)
+    # W^2 == K (norm-relative; hypothesis explores degenerate spectra)
+    assert np.abs(w @ w - k).max() / scale < 5e-3
+    proj = w @ w_pinv
+    # projector: idempotent and symmetric
+    assert np.abs(proj @ proj - proj).max() < 5e-2
+    assert np.abs(proj - proj.T).max() < 2e-2
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 16), st.integers(2, 10))
+def test_topk_eigvecs_orthonormal(d_full, d):
+    d = min(d, d_full)
+    rng = np.random.default_rng(d_full * 31 + d)
+    a = rng.standard_normal((d_full, d_full)).astype(np.float32)
+    m = jnp.asarray(a @ a.T)
+    p = linalg.topk_eigvecs(m, d)
+    np.testing.assert_allclose(np.asarray(p @ p.T), np.eye(d), atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(hnp.arrays(np.float32, (3, 12),
+                  elements=st.floats(-5, 5, width=32)),
+       hnp.arrays(np.float32, (3, 12),
+                  elements=st.floats(-5, 5, width=32)))
+def test_merge_topk_equals_concat_topk(va, vb):
+    """merge_topk(a, b) == top_k(concat(a, b)) by values."""
+    ia = jnp.arange(12)[None].repeat(3, 0)
+    ib = jnp.arange(12, 24)[None].repeat(3, 0)
+    v, _ = topk.merge_topk(jnp.asarray(va), ia, jnp.asarray(vb), ib, 5)
+    ref = jax.lax.top_k(jnp.concatenate([jnp.asarray(va),
+                                         jnp.asarray(vb)], 1), 5)[0]
+    np.testing.assert_allclose(np.asarray(v), np.asarray(ref), rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=2,
+                                               min_side=2, max_side=32),
+                  elements=st.floats(-100, 100, width=32)))
+def test_quantization_error_bound(x):
+    """|dequant(quant(x)) - x| <= delta / 2 elementwise (round-to-nearest)."""
+    db = quantization.quantize(jnp.asarray(x))
+    err = np.abs(np.asarray(quantization.dequantize(db)) - x)
+    bound = np.asarray(db.delta) * 0.5 + 1e-5
+    assert (err <= bound).all()
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 8), st.integers(1, 10))
+def test_recall_bounds(nq, k):
+    rng = np.random.default_rng(nq * 131 + k)
+    retrieved = jnp.asarray(rng.integers(0, 50, (nq, k)))
+    r_self = metrics.recall_at_k(retrieved, retrieved)
+    assert float(r_self) == 1.0
+    disjoint = retrieved + 100
+    assert float(metrics.recall_at_k(retrieved, disjoint)) == 0.0
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 6))
+def test_fm_sum_square_identity(n_fields):
+    """FM pairwise identity: sum_{i<j} <v_i, v_j> ==
+    0.5 (||sum v||^2 - sum ||v||^2)."""
+    rng = np.random.default_rng(n_fields)
+    v = rng.standard_normal((n_fields, 8)).astype(np.float32)
+    brute = sum(float(v[i] @ v[j]) for i in range(n_fields)
+                for j in range(i + 1, n_fields))
+    s = v.sum(0)
+    trick = 0.5 * (float(s @ s) - float((v * v).sum()))
+    np.testing.assert_allclose(brute, trick, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 1000), st.integers(1, 64))
+def test_rope_preserves_norm(pos, dh2):
+    """Rotary embedding is a rotation: preserves vector norms."""
+    from repro.models.layers import rope
+    dh = 2 * dh2
+    rng = np.random.default_rng(pos * 7 + dh)
+    x = jnp.asarray(rng.standard_normal((1, 1, 1, dh)).astype(np.float32))
+    y = rope(x, jnp.asarray([[pos]]))
+    np.testing.assert_allclose(float(jnp.linalg.norm(y)),
+                               float(jnp.linalg.norm(x)), rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 30), st.integers(1, 5))
+def test_embedding_bag_mean(n_items, bags):
+    """EmbeddingBag(take+segment_sum) == per-bag numpy mean."""
+    from repro.models.embedding import embedding_bag
+    rng = np.random.default_rng(n_items * 13 + bags)
+    table = jnp.asarray(rng.standard_normal((50, 4)).astype(np.float32))
+    idx = rng.integers(0, 50, n_items)
+    seg = np.sort(rng.integers(0, bags, n_items))
+    out = embedding_bag(table, jnp.asarray(idx), jnp.asarray(seg), bags,
+                        combiner="mean")
+    for b in range(bags):
+        rows = idx[seg == b]
+        expect = (np.asarray(table)[rows].mean(0) if len(rows)
+                  else np.zeros(4))
+        np.testing.assert_allclose(np.asarray(out[b]), expect, rtol=1e-5,
+                                   atol=1e-6)

@@ -1,0 +1,85 @@
+"""End-to-end system test: the paper's full pipeline on synthetic OOD data.
+
+learn (Alg. 5) -> encode -> index -> multi-step search (Alg. 1) -> recall,
+plus the recsys retrieval integration (GleanVec-accelerated candidate
+scoring) and the serving engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gleanvec as gv, leanvec_sphering as lvs, metrics
+from repro.data import vectors
+from repro.index import bruteforce, graph
+from repro.serve import retrieval
+from repro.serve.engine import ServingEngine
+
+
+def test_end_to_end_gleanvec_pipeline():
+    ds = vectors.make_dataset("e2e", n=5000, d=96, n_queries=96, ood=True,
+                              seed=7)
+    X = jnp.asarray(ds.database)
+    Q = jnp.asarray(ds.queries_learn)
+    QT = jnp.asarray(ds.queries_test)
+
+    # 1. learn (Algorithm 5)
+    model = gv.fit(jax.random.PRNGKey(0), Q, X, c=12, d=32)
+    # 2. encode database (Eq. 14-15)
+    tags, x_low = gv.encode_database(model, X)
+    # 3. graph index over the reduced vectors
+    g = graph.build(np.asarray(x_low), r=24, n_iters=5, seed=0)
+    # 4. multi-step search: graph main search (eager, Alg. 4) + rerank
+    q_views = gv.project_queries_eager(model, QT)
+    _, cand = graph.beam_search_gleanvec(q_views, tags, x_low, g, k=50,
+                                         beam=128, max_hops=300)
+    cand_vecs = X[jnp.where(cand >= 0, cand, 0)]
+    full = jnp.einsum("mkd,md->mk", cand_vecs, QT)
+    full = jnp.where(cand >= 0, full, -3.4e38)
+    top = jax.lax.top_k(full, 10)[1]
+    ids = jnp.take_along_axis(cand, top, axis=1)
+    rec = metrics.recall_at_k(ids, jnp.asarray(ds.gt[:, :10]))
+    assert float(rec) > 0.85, float(rec)
+
+
+def test_retrieval_modes_ordering():
+    """GleanVec-accelerated retrieval ~ full-precision retrieval."""
+    ds = vectors.make_dataset("retr", n=4000, d=64, n_queries=64, ood=True,
+                              seed=9)
+    cands = jnp.asarray(ds.database)
+    users = jnp.asarray(ds.queries_test)
+    idx_full = retrieval.build_retrieval_index(cands, "full")
+    ids_full = retrieval.retrieve(idx_full, users, k=10)
+
+    model = gv.fit(jax.random.PRNGKey(1), jnp.asarray(ds.queries_learn),
+                   cands, c=8, d=24)
+    idx_gv = retrieval.build_retrieval_index(cands, "gleanvec", model)
+    ids_gv = retrieval.retrieve(idx_gv, users, k=10, kappa=60)
+
+    sph = lvs.fit(jnp.asarray(ds.queries_learn), cands, 24)
+    idx_s = retrieval.build_retrieval_index(cands, "sphering", sph)
+    ids_s = retrieval.retrieve(idx_s, users, k=10, kappa=60)
+
+    gt = jnp.asarray(ds.gt[:, :10])
+    r_full = float(metrics.recall_at_k(ids_full, gt))
+    r_gv = float(metrics.recall_at_k(ids_gv, gt))
+    r_s = float(metrics.recall_at_k(ids_s, gt))
+    assert r_full == 1.0
+    assert r_gv > 0.9 and r_s > 0.9
+    assert r_gv >= r_s - 0.05  # nonlinear at least matches linear
+
+
+def test_serving_engine_stats():
+    ds = vectors.make_dataset("srv", n=2000, d=32, n_queries=64, ood=False,
+                              seed=11)
+    X = jnp.asarray(ds.database)
+
+    def search_fn(q):
+        _, ids = bruteforce.search(q, X, 10, block=512)
+        return ids
+
+    eng = ServingEngine(search_fn, batch_size=16, dim=32)
+    out = eng.submit(ds.queries_test[:40])
+    assert out.shape == (40, 10)
+    assert eng.stats.n_queries == 40
+    assert eng.stats.n_batches == 3
+    assert eng.stats.qps > 0
+    assert eng.stats.percentile_ms(99) >= eng.stats.percentile_ms(50)

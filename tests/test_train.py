@@ -1,0 +1,170 @@
+"""Training substrate: convergence, accumulation-equivalence, checkpointing,
+data determinism."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+from repro.models.sharding import MeshRules
+from repro.train import (AdamWConfig, checkpoint, data, make_train_step)
+from repro.train.optimizer import adamw_init, cosine_warmup_lr
+
+RULES = MeshRules(dp=(), fsdp=(), tp=None, ep=None)
+CFG = tfm.TransformerConfig(
+    name="tiny", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_head=8,
+    d_ff=64, vocab=128, q_chunk=16, loss_chunks=2, remat_policy="dots")
+
+
+def _setup():
+    params = tfm.init(jax.random.PRNGKey(0), CFG)
+    return params, adamw_init(params)
+
+
+def test_loss_decreases():
+    params, opt = _setup()
+    step = jax.jit(make_train_step(
+        lambda p, b: tfm.train_loss(p, b, CFG, RULES),
+        AdamWConfig(lr=3e-3), warmup=2, total_steps=50))
+    losses = []
+    for i in range(12):
+        params, opt, m = step(params, opt, data.lm_batch(0, i, 4, 32, 128))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-4:]) < np.mean(losses[:4])
+
+
+def test_accumulation_matches_full_batch():
+    """accum_steps=4 must equal the full-batch gradient step (same math)."""
+    params, opt = _setup()
+    batch = data.lm_batch(0, 0, 8, 32, 128)
+    s1 = jax.jit(make_train_step(
+        lambda p, b: tfm.train_loss(p, b, CFG, RULES),
+        AdamWConfig(lr=1e-3), accum_steps=1))
+    s4 = jax.jit(make_train_step(
+        lambda p, b: tfm.train_loss(p, b, CFG, RULES),
+        AdamWConfig(lr=1e-3), accum_steps=4))
+    p1, _, m1 = s1(params, opt, batch)
+    p4, _, m4 = s4(params, opt, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=2e-2)
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        p1, p4)
+    assert max(jax.tree.leaves(diffs)) < 5e-3
+
+
+def test_hierarchical_remat_same_loss():
+    """Blocked (native (nb, bs, ...) layout) == flat layer stacking."""
+    cfg_b = tfm.TransformerConfig(
+        name="tiny-blocks", n_layers=4, d_model=32, n_heads=4, n_kv_heads=2,
+        d_head=8, d_ff=64, vocab=128, q_chunk=16, loss_chunks=2,
+        remat_policy="nothing", remat_block=2)
+    cfg_plain = tfm.TransformerConfig(**{**cfg_b.__dict__, "remat_block": 0,
+                                         "name": "tiny-plain"})
+    params_b = tfm.init(jax.random.PRNGKey(0), cfg_b)    # (2, 2, ...) layers
+    params_p = tfm.init(jax.random.PRNGKey(0), cfg_plain)  # (4, ...) layers
+    batch = data.lm_batch(0, 0, 4, 32, 128)
+    l_b, g_b = jax.value_and_grad(
+        lambda p: tfm.train_loss(p, batch, cfg_b, RULES))(params_b)
+    l_p, g_p = jax.value_and_grad(
+        lambda p: tfm.train_loss(p, batch, cfg_plain, RULES))(params_p)
+    np.testing.assert_allclose(float(l_b), float(l_p), rtol=1e-5)
+    flat_b = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]),
+                          g_b["layers"])
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=1e-3,
+        atol=1e-5), flat_b, g_p["layers"])
+
+
+def test_checkpoint_restart_exact():
+    """Fault tolerance: kill-and-restore reproduces the exact trajectory
+    (stateless data pipeline + exact state roundtrip)."""
+    params, opt = _setup()
+    step = jax.jit(make_train_step(
+        lambda p, b: tfm.train_loss(p, b, CFG, RULES),
+        AdamWConfig(lr=1e-3), warmup=2, total_steps=50))
+    with tempfile.TemporaryDirectory() as ckdir:
+        for i in range(3):
+            params, opt, _ = step(params, opt, data.lm_batch(7, i, 4, 32, 128))
+        checkpoint.save(ckdir, 3, {"params": params, "opt": opt})
+        # continue original
+        p_a, o_a = params, opt
+        for i in range(3, 6):
+            p_a, o_a, m_a = step(p_a, o_a, data.lm_batch(7, i, 4, 32, 128))
+        # simulated failure: restore and replay
+        restored, step_no, _ = checkpoint.restore(
+            ckdir, {"params": params, "opt": opt})
+        p_b, o_b = restored["params"], restored["opt"]
+        assert step_no == 3
+        for i in range(3, 6):
+            p_b, o_b, m_b = step(p_b, o_b, data.lm_batch(7, i, 4, 32, 128))
+        assert float(m_a["loss"]) == float(m_b["loss"])
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), p_a, p_b)
+
+
+def test_checkpoint_latest_and_atomicity():
+    with tempfile.TemporaryDirectory() as d:
+        assert checkpoint.latest_step(d) is None
+        checkpoint.save(d, 1, {"x": jnp.ones(3)})
+        checkpoint.save(d, 2, {"x": jnp.ones(3) * 2})
+        assert checkpoint.latest_step(d) == 2
+        tree, s, _ = checkpoint.restore(d, {"x": jnp.zeros(3)})
+        assert s == 2 and tree["x"][0] == 2
+        tree, s, _ = checkpoint.restore(d, {"x": jnp.zeros(3)}, step=1)
+        assert s == 1 and tree["x"][0] == 1
+
+
+def test_data_determinism():
+    b1 = data.lm_batch(0, 5, 4, 16, 100)
+    b2 = data.lm_batch(0, 5, 4, 16, 100)
+    b3 = data.lm_batch(0, 6, 4, 16, 100)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+
+
+def test_lr_schedule():
+    assert float(cosine_warmup_lr(jnp.asarray(0), 1.0, 10, 100)) == 0.0
+    assert abs(float(cosine_warmup_lr(jnp.asarray(10), 1.0, 10, 100))
+               - 1.0) < 1e-6
+    assert float(cosine_warmup_lr(jnp.asarray(100), 1.0, 10, 100)) < 0.11
+
+
+def test_adafactor_decreases_loss():
+    from repro.train.optimizer import (AdafactorConfig, adafactor_init)
+    params = tfm.init(jax.random.PRNGKey(0), CFG)
+    opt = adafactor_init(params)
+    step = jax.jit(make_train_step(
+        lambda p, b: tfm.train_loss(p, b, CFG, RULES),
+        AdafactorConfig(lr=3e-2), warmup=2, total_steps=50))
+    losses = []
+    for i in range(12):
+        params, opt, m = step(params, opt, data.lm_batch(3, i, 4, 32, 128))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-4:]) < np.mean(losses[:4])
+    # factored state is O(m + n), not O(mn): check a matrix leaf
+    vr = opt.vr["layers"]["wq"]
+    wq = params["layers"]["wq"]
+    assert vr.shape == wq.shape[:-1]
+
+
+def test_bf16_accumulation_close_to_fp32():
+    params = tfm.init(jax.random.PRNGKey(0), CFG)
+    opt = adamw_init(params)
+    batch = data.lm_batch(0, 0, 8, 32, 128)
+    s32 = jax.jit(make_train_step(
+        lambda p, b: tfm.train_loss(p, b, CFG, RULES),
+        AdamWConfig(lr=1e-3), accum_steps=4))
+    import jax.numpy as jnp2
+    s16 = jax.jit(make_train_step(
+        lambda p, b: tfm.train_loss(p, b, CFG, RULES),
+        AdamWConfig(lr=1e-3), accum_steps=4, accum_dtype=jnp2.bfloat16))
+    _, _, m32 = s32(params, opt, batch)
+    _, _, m16 = s16(params, opt, batch)
+    np.testing.assert_allclose(float(m32["grad_norm"]),
+                               float(m16["grad_norm"]), rtol=5e-2)
