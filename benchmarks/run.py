@@ -2,7 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit) and
 writes them to results/bench.csv.
+
+``--smoke`` shrinks the datasets and runs the search-path modules only
+(table1 + kernel micros) so the perf harness itself is exercisable in CI;
+the numbers it prints characterize the harness, not the hardware.
 """
+import argparse
 import os
 import sys
 
@@ -10,23 +15,46 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny datasets, search-path modules only")
+    ap.add_argument("--out", default=None,
+                    help="CSV output path (default results/bench.csv)")
+    args = ap.parse_args(argv)
+
     from benchmarks import (common, fig4_fig5_linear, fig6_cluster_structure,
                             fig7_tag_access, fig8_gleanvec, kernels_micro,
                             table1_search)
-    print("name,us_per_call,derived")
-    fig4_fig5_linear.run()
-    fig6_cluster_structure.run()
-    fig7_tag_access.run()
-    fig8_gleanvec.run()
-    table1_search.run()
-    kernels_micro.run()
-    out = os.path.join(os.path.dirname(__file__), "..", "results")
-    os.makedirs(out, exist_ok=True)
-    with open(os.path.join(out, "bench.csv"), "w") as f:
-        f.write("name,us_per_call,derived\n")
-        f.write("\n".join(common.ROWS) + "\n")
-    print(f"# wrote {len(common.ROWS)} rows to results/bench.csv")
+    saved = (common.BENCH_N, common.BENCH_QUERIES)
+    try:
+        if args.smoke:
+            common.BENCH_N = 1500
+            common.BENCH_QUERIES = 64
+            common.dataset.cache_clear()
+            common.ROWS.clear()
+        print("name,us_per_call,derived")
+        if args.smoke:
+            table1_search.run()
+            kernels_micro.run(n=4000, dim=128, d=48, c=8, m=8)
+        else:
+            fig4_fig5_linear.run()
+            fig6_cluster_structure.run()
+            fig7_tag_access.run()
+            fig8_gleanvec.run()
+            table1_search.run()
+            kernels_micro.run()
+        out = args.out or os.path.join(os.path.dirname(__file__), "..",
+                                       "results", "bench.csv")
+        os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
+        with open(out, "w") as f:
+            f.write("name,us_per_call,derived\n")
+            f.write("\n".join(common.ROWS) + "\n")
+        print(f"# wrote {len(common.ROWS)} rows to {out}")
+    finally:
+        if args.smoke:    # restore for in-process callers (tests)
+            common.BENCH_N, common.BENCH_QUERIES = saved
+            common.dataset.cache_clear()
 
 
 if __name__ == '__main__':

@@ -15,6 +15,7 @@ import numpy as np
 from benchmarks.common import dataset, emit, time_fn
 from repro.core import gleanvec as gv, leanvec_sphering as lvs, metrics
 from repro.core.quantization import quantize
+from repro.core.scorer import gleanvec_quantized_scorer
 from repro.index import bruteforce, graph
 
 
@@ -81,6 +82,19 @@ def run():
     us = time_fn(sq_search)
     emit(f"table1/flat/sphering-d{d}-int8", us,
          f"recall10={float(metrics.recall_at_k(sq_search(), gt)):.3f};"
+         f"qps={nq / (us / 1e6):.0f}")
+
+    # gleanvec + per-cluster int8 (Scorer-protocol composition: DR stacked
+    # with SQ -- d bytes per vector instead of D*4)
+    gq = gleanvec_quantized_scorer(model, X)
+
+    def gq_search():
+        _, cand = bruteforce.search_scorer(QT, gq, kappa)
+        return finish(cand)
+
+    us = time_fn(gq_search)
+    emit(f"table1/flat/gleanvec-d{d}-int8", us,
+         f"recall10={float(metrics.recall_at_k(gq_search(), gt)):.3f};"
          f"qps={nq / (us / 1e6):.0f}")
 
     # graph index (reduced space) + rerank

@@ -3,8 +3,8 @@
 Public API re-exports; see DESIGN.md for the paper-to-module map.
 """
 from repro.core import (baselines, gleanvec, leanvec_sphering, linalg,
-                        metrics, quantization, search, spherical_kmeans,
-                        streaming)
+                        metrics, quantization, scorer, search,
+                        spherical_kmeans, streaming)
 from repro.core.baselines import (LinearDR, leanvec_es, leanvec_es_fw,
                                   leanvec_fw, svd_fit)
 from repro.core.gleanvec import GleanVecModel
@@ -12,7 +12,7 @@ from repro.core.leanvec_sphering import SpheringModel
 
 __all__ = [
     "baselines", "gleanvec", "leanvec_sphering", "linalg", "metrics",
-    "quantization", "search", "spherical_kmeans", "streaming",
+    "quantization", "scorer", "search", "spherical_kmeans", "streaming",
     "LinearDR", "SpheringModel", "GleanVecModel",
     "svd_fit", "leanvec_fw", "leanvec_es", "leanvec_es_fw",
 ]

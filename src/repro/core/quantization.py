@@ -19,7 +19,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["SQDatabase", "quantize", "dequantize", "quantized_inner_products"]
+__all__ = ["SQDatabase", "ClusteredSQDatabase", "quantize",
+           "quantize_per_cluster", "dequantize", "quantized_inner_products"]
 
 
 class SQDatabase(NamedTuple):
@@ -41,6 +42,32 @@ def quantize(x: jax.Array, bits: int = 8) -> SQDatabase:
     codes = jnp.clip(jnp.round((x - lo[None, :]) / delta[None, :]), 0,
                      levels).astype(jnp.uint8)
     return SQDatabase(codes=codes, lo=lo, delta=delta)
+
+
+class ClusteredSQDatabase(NamedTuple):
+    codes: jax.Array   # (n, d) uint8 codes
+    lo: jax.Array      # (C, d) per-cluster per-dimension lower bound
+    delta: jax.Array   # (C, d) per-cluster per-dimension step
+
+
+def quantize_per_cluster(x: jax.Array, tags: jax.Array, n_clusters: int,
+                         bits: int = 8) -> ClusteredSQDatabase:
+    """Per-cluster per-dimension affine quantization (the GleanVec ∘ SQ
+    composition): each cluster's B_c x vectors get their own (lo, delta)
+    per dimension, so anisotropy WITHIN a cluster is preserved at full
+    8-bit resolution and the scales still fold into the per-cluster query
+    views A_c q."""
+    levels = (1 << bits) - 1
+    x = x.astype(jnp.float32)
+    lo = jax.ops.segment_min(x, tags, num_segments=n_clusters)
+    hi = jax.ops.segment_max(x, tags, num_segments=n_clusters)
+    empty = ~jnp.isfinite(lo)          # empty cluster -> +-inf sentinels
+    lo = jnp.where(empty, 0.0, lo)
+    hi = jnp.where(~jnp.isfinite(hi), 0.0, hi)
+    delta = jnp.maximum(hi - lo, 1e-12) / levels
+    codes = jnp.clip(jnp.round((x - lo[tags]) / delta[tags]), 0,
+                     levels).astype(jnp.uint8)
+    return ClusteredSQDatabase(codes=codes, lo=lo, delta=delta)
 
 
 def dequantize(db: SQDatabase) -> jax.Array:

@@ -1,0 +1,318 @@
+"""Unified Scorer protocol: one database representation + scoring contract
+shared by every index (flat / IVF / graph / distributed) and the serving
+stack.
+
+The paper's multi-step search (Algorithm 1) is index-agnostic: any index can
+run its main search in a compressed representation as long as it can score a
+query against (a) a contiguous block of database rows (flat scans) or (b) an
+arbitrary gathered id set (IVF posting lists, graph neighbor expansions).
+A *scorer* packages a database representation together with those two
+operations:
+
+    qstate = scorer.prepare_queries(q)            # Alg. 1 line 1
+    scores = scorer.score_block(qstate, start, B) # (m, B), contiguous rows
+    scores = scorer.score_ids(qstate, ids)        # (m, P), gathered rows
+
+plus the layout plumbing every consumer needs: ``pad_rows`` (blocked scans),
+``shard_specs`` (row-sharding under shard_map). Scorers are NamedTuples, so
+they are jax pytrees: they pass through ``jit`` / ``shard_map`` boundaries
+as regular arguments and their class is part of the (static) treedef.
+
+Concrete implementations and what they store per database vector:
+
+    ==========================  =========================  ================
+    scorer                      storage                    scoring
+    ==========================  =========================  ================
+    LinearScorer                f32 x_low = Bx (d dims)    <Aq, Bx>
+    GleanVecScorer              f32 B_c x + tag (Alg. 4)   <A_c q, B_c x>
+    QuantizedScorer             u8 codes of Bx + (d) scale <Aq*delta, u>+...
+    GleanVecQuantizedScorer     u8 codes of B_c x + tag    per-cluster SQ
+                                + (C, d) per-cluster scale
+    ==========================  =========================  ================
+
+``GleanVecQuantizedScorer`` is the composition the LeanVec line of work
+endorses (DR stacked with scalar quantization): the per-cluster reduced
+vectors are int8-quantized with per-cluster per-dimension scales, and the
+affine terms fold into the prepared query views so scoring stays a pure
+int8 contraction.
+
+``LinearScorer`` with ``a=None`` doubles as the exact full-precision
+scorer (identity query transform over the stored vectors) -- the "full"
+serving mode and the rerank reference are the same object.
+
+The kernel lowering lives in :mod:`repro.kernels` (``scorer_topk`` /
+``scorer_scores``): on TPU a scorer lowers to its Pallas kernel
+(``ip_topk`` / ``gleanvec_ip`` / ``sq_dot``), elsewhere to the jnp mirrors
+used here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gleanvec as gv
+from repro.core import quantization as quant
+from repro.core.quantization import ClusteredSQDatabase
+
+__all__ = [
+    "LinearScorer", "GleanVecScorer", "QuantizedScorer",
+    "GleanVecQuantizedScorer", "QuantQueryState", "Scorer", "MODES",
+    "build_scorer", "linear_scorer", "exact_scorer", "gleanvec_scorer",
+    "quantized_scorer", "gleanvec_quantized_scorer", "batch_of",
+]
+
+
+class QuantQueryState(NamedTuple):
+    """Prepared query for int8 scorers: the affine terms folded query-side.
+
+    ``q_scaled``: (m, d) [linear] or (m, C, d) [per-cluster] = Aq * delta;
+    ``q_lo``:     (m,)               or (m, C)              = <Aq, lo>.
+    """
+
+    q_scaled: jax.Array
+    q_lo: jax.Array
+
+
+def batch_of(qstate) -> int:
+    """Query-batch size of any prepared query state (first leaf, dim 0)."""
+    return jax.tree_util.tree_leaves(qstate)[0].shape[0]
+
+
+def _pad0(x: jax.Array, pad: int) -> jax.Array:
+    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+
+
+class LinearScorer(NamedTuple):
+    """Linear DR scoring: <Aq, Bx>. ``a=None`` means identity (exact MIPS
+    over whatever ``x_low`` stores -- including the full-precision x)."""
+
+    x_low: jax.Array                 # (n, d)
+    a: Optional[jax.Array] = None    # (d, D) query transform
+
+    @property
+    def n_rows(self) -> int:
+        return self.x_low.shape[0]
+
+    def prepare_queries(self, queries: jax.Array) -> jax.Array:
+        q = queries.astype(jnp.float32)
+        return q if self.a is None else q @ self.a.T
+
+    def pad_rows(self, pad: int) -> "LinearScorer":
+        return self if not pad else self._replace(x_low=_pad0(self.x_low,
+                                                              pad))
+
+    def score_block(self, qstate: jax.Array, start, block: int) -> jax.Array:
+        blk = jax.lax.dynamic_slice_in_dim(self.x_low, start, block, axis=0)
+        return qstate @ blk.T
+
+    def score_ids(self, qstate: jax.Array, ids: jax.Array) -> jax.Array:
+        vecs = self.x_low[ids]                          # (m, p, d)
+        return jnp.einsum("mpd,md->mp", vecs, qstate)
+
+    def shard_specs(self, axes) -> "LinearScorer":
+        from jax.sharding import PartitionSpec as P
+        return LinearScorer(x_low=P(tuple(axes), None),
+                            a=None if self.a is None else P())
+
+
+class GleanVecScorer(NamedTuple):
+    """Eager GleanVec scoring (Alg. 4): tag-selected per-cluster views."""
+
+    x_low: jax.Array                 # (n, d) = B_{tag_i} x_i
+    tags: jax.Array                  # (n,) int32 cluster of each vector
+    a: Optional[jax.Array] = None    # (C, d, D) per-cluster query maps
+
+    @property
+    def n_rows(self) -> int:
+        return self.x_low.shape[0]
+
+    def prepare_queries(self, queries: jax.Array) -> jax.Array:
+        if self.a is None:
+            raise ValueError("GleanVecScorer without `a` cannot prepare "
+                             "queries; pass precomputed (m, C, d) views")
+        return jnp.einsum("cdk,mk->mcd", self.a,
+                          queries.astype(jnp.float32))
+
+    def pad_rows(self, pad: int) -> "GleanVecScorer":
+        if not pad:
+            return self
+        return self._replace(x_low=_pad0(self.x_low, pad),
+                             tags=_pad0(self.tags, pad))
+
+    def score_block(self, qstate: jax.Array, start, block: int) -> jax.Array:
+        blk = jax.lax.dynamic_slice_in_dim(self.x_low, start, block, axis=0)
+        tag = jax.lax.dynamic_slice_in_dim(self.tags, start, block, axis=0)
+        q_sel = qstate[:, tag, :]                       # (m, block, d)
+        return jnp.einsum("mbd,bd->mb", q_sel, blk)
+
+    def score_ids(self, qstate: jax.Array, ids: jax.Array) -> jax.Array:
+        vecs = self.x_low[ids]                          # (m, p, d)
+        tag = self.tags[ids]                            # (m, p)
+        m = qstate.shape[0]
+        q_sel = qstate[jnp.arange(m)[:, None], tag]     # (m, p, d)
+        return jnp.sum(q_sel * vecs, axis=-1)
+
+    def shard_specs(self, axes) -> "GleanVecScorer":
+        from jax.sharding import PartitionSpec as P
+        return GleanVecScorer(x_low=P(tuple(axes), None),
+                              tags=P(tuple(axes)),
+                              a=None if self.a is None else P())
+
+
+class QuantizedScorer(NamedTuple):
+    """Int8 SQ over linearly-reduced vectors, per-dimension affine scales
+    folded into the query: <q, u*delta + lo> = <q*delta, u> + <q, lo>."""
+
+    codes: jax.Array                 # (n, d) uint8
+    lo: jax.Array                    # (d,)
+    delta: jax.Array                 # (d,)
+    a: Optional[jax.Array] = None    # (d, D) query transform
+
+    @property
+    def n_rows(self) -> int:
+        return self.codes.shape[0]
+
+    def prepare_queries(self, queries: jax.Array) -> QuantQueryState:
+        q = queries.astype(jnp.float32)
+        if self.a is not None:
+            q = q @ self.a.T
+        return QuantQueryState(q_scaled=q * self.delta[None, :],
+                               q_lo=q @ self.lo)
+
+    def pad_rows(self, pad: int) -> "QuantizedScorer":
+        return self if not pad else self._replace(codes=_pad0(self.codes,
+                                                              pad))
+
+    def score_block(self, qstate: QuantQueryState, start,
+                    block: int) -> jax.Array:
+        c = jax.lax.dynamic_slice_in_dim(self.codes, start, block, axis=0)
+        return qstate.q_scaled @ c.astype(jnp.float32).T \
+            + qstate.q_lo[:, None]
+
+    def score_ids(self, qstate: QuantQueryState, ids: jax.Array) -> jax.Array:
+        c = self.codes[ids].astype(jnp.float32)         # (m, p, d)
+        return jnp.einsum("mpd,md->mp", c, qstate.q_scaled) \
+            + qstate.q_lo[:, None]
+
+    def shard_specs(self, axes) -> "QuantizedScorer":
+        from jax.sharding import PartitionSpec as P
+        return QuantizedScorer(codes=P(tuple(axes), None), lo=P(), delta=P(),
+                               a=None if self.a is None else P())
+
+
+class GleanVecQuantizedScorer(NamedTuple):
+    """GleanVec ∘ int8: the per-cluster reduced vectors B_c x are scalar-
+    quantized with per-cluster per-dimension scales; the affine terms fold
+    into the eager query views, so scoring is tag-select + int8 dot."""
+
+    codes: jax.Array                 # (n, d) uint8 codes of B_{tag_i} x_i
+    tags: jax.Array                  # (n,) int32
+    lo: jax.Array                    # (C, d) per-cluster lower bounds
+    delta: jax.Array                 # (C, d) per-cluster steps
+    a: jax.Array                     # (C, d, D) per-cluster query maps
+
+    @property
+    def n_rows(self) -> int:
+        return self.codes.shape[0]
+
+    def prepare_queries(self, queries: jax.Array) -> QuantQueryState:
+        qv = jnp.einsum("cdk,mk->mcd", self.a,
+                        queries.astype(jnp.float32))    # (m, C, d)
+        return QuantQueryState(q_scaled=qv * self.delta[None],
+                               q_lo=jnp.einsum("mcd,cd->mc", qv, self.lo))
+
+    def pad_rows(self, pad: int) -> "GleanVecQuantizedScorer":
+        if not pad:
+            return self
+        return self._replace(codes=_pad0(self.codes, pad),
+                             tags=_pad0(self.tags, pad))
+
+    def score_block(self, qstate: QuantQueryState, start,
+                    block: int) -> jax.Array:
+        c = jax.lax.dynamic_slice_in_dim(self.codes, start, block, axis=0)
+        tag = jax.lax.dynamic_slice_in_dim(self.tags, start, block, axis=0)
+        q_sel = qstate.q_scaled[:, tag, :]              # (m, block, d)
+        scores = jnp.einsum("mbd,bd->mb", q_sel, c.astype(jnp.float32))
+        return scores + qstate.q_lo[:, tag]
+
+    def score_ids(self, qstate: QuantQueryState, ids: jax.Array) -> jax.Array:
+        c = self.codes[ids].astype(jnp.float32)         # (m, p, d)
+        tag = self.tags[ids]                            # (m, p)
+        m = tag.shape[0]
+        q_sel = qstate.q_scaled[jnp.arange(m)[:, None], tag]
+        lo_sel = jnp.take_along_axis(qstate.q_lo, tag, axis=1)
+        return jnp.sum(q_sel * c, axis=-1) + lo_sel
+
+    def shard_specs(self, axes) -> "GleanVecQuantizedScorer":
+        from jax.sharding import PartitionSpec as P
+        return GleanVecQuantizedScorer(codes=P(tuple(axes), None),
+                                       tags=P(tuple(axes)),
+                                       lo=P(), delta=P(), a=P())
+
+
+Scorer = Union[LinearScorer, GleanVecScorer, QuantizedScorer,
+               GleanVecQuantizedScorer]
+
+
+# ---------------------------------------------------------------------------
+# Factories: model + database -> scorer (the encode step of Alg. 1 line 0).
+# ---------------------------------------------------------------------------
+
+
+def exact_scorer(database: jax.Array) -> LinearScorer:
+    """Full-precision exact MIPS (the 'full' serving mode / rerank oracle)."""
+    return LinearScorer(x_low=jnp.asarray(database, jnp.float32))
+
+
+def linear_scorer(model, database: jax.Array) -> LinearScorer:
+    """LeanVec-Sphering: x_low = Bx, queries mapped by A."""
+    x_low = jnp.asarray(database, jnp.float32) @ model.b.T
+    return LinearScorer(x_low=x_low, a=model.a)
+
+
+def gleanvec_scorer(model, database: jax.Array) -> GleanVecScorer:
+    """GleanVec (Alg. 5 model): tags + per-cluster reduced vectors."""
+    tags, x_low = gv.encode_database(model, database)
+    return GleanVecScorer(x_low=x_low, tags=tags, a=model.a)
+
+
+def quantized_scorer(model, database: jax.Array,
+                     bits: int = 8) -> QuantizedScorer:
+    """LeanVec-Sphering + int8 SQ of the reduced vectors (LeanVec paper's
+    compounded compression: D*4 bytes -> d bytes per vector)."""
+    x_low = jnp.asarray(database, jnp.float32) @ model.b.T
+    db = quant.quantize(x_low, bits)
+    return QuantizedScorer(codes=db.codes, lo=db.lo, delta=db.delta,
+                           a=model.a)
+
+
+def gleanvec_quantized_scorer(model, database: jax.Array,
+                              bits: int = 8) -> GleanVecQuantizedScorer:
+    """GleanVec + per-cluster int8 SQ of the reduced vectors."""
+    tags, x_low = gv.encode_database(model, database)
+    db: ClusteredSQDatabase = quant.quantize_per_cluster(
+        x_low, tags, model.n_clusters, bits)
+    return GleanVecQuantizedScorer(codes=db.codes, tags=tags, lo=db.lo,
+                                   delta=db.delta, a=model.a)
+
+
+MODES = ("full", "sphering", "gleanvec", "sphering-int8", "gleanvec-int8")
+
+
+def build_scorer(mode: str, database: jax.Array, model=None) -> Scorer:
+    """Mode-string dispatch used by the serving layer (no isinstance)."""
+    if mode == "full":
+        return exact_scorer(database)
+    if model is None:
+        raise ValueError(f"mode {mode!r} needs a DR model")
+    if mode == "sphering":
+        return linear_scorer(model, database)
+    if mode == "gleanvec":
+        return gleanvec_scorer(model, database)
+    if mode == "sphering-int8":
+        return quantized_scorer(model, database)
+    if mode == "gleanvec-int8":
+        return gleanvec_quantized_scorer(model, database)
+    raise ValueError(f"unknown scorer mode {mode!r}; one of {MODES}")

@@ -1,100 +1,110 @@
-"""Multi-step vector search (paper Algorithm 1) and the GleanVec inner-product
-modes (Algorithms 3-4), index-agnostic.
+"""Multi-step vector search (paper Algorithm 1), index-agnostic.
 
-The main search runs in the reduced d-dimensional space through any index
-(flat scan / IVF / graph from ``repro.index``); the postprocessing step
-re-ranks the kappa candidates with full-precision inner products. With the
-flexible-d storage of Section 3.1 (full rotation P'), the rerank uses the
-*same* stored vectors (Eq. 10) -- no secondary database.
+The main search runs in the compressed representation through any index
+(flat scan / IVF / graph from ``repro.index``) via the unified Scorer
+protocol (:mod:`repro.core.scorer`); the postprocessing step re-ranks the
+kappa candidates with full-precision inner products. With the flexible-d
+storage of Section 3.1 (full rotation P'), the rerank uses the *same*
+stored vectors (Eq. 10) -- no secondary database; the artifacts record the
+query-side rotation explicitly (``rerank_a``) instead of inferring it from
+model types, so no isinstance dispatch remains anywhere on the search path.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import gleanvec as gv
-from repro.core.gleanvec import GleanVecModel
-from repro.core.leanvec_sphering import SpheringModel
+from repro.core import scorer as sc
+from repro.index.topk import NEG_INF
 
-__all__ = ["SearchArtifacts", "build_artifacts_sphering",
+__all__ = ["SearchArtifacts", "build_artifacts", "build_artifacts_sphering",
            "build_artifacts_gleanvec", "multi_step_search", "rerank"]
 
 
 class SearchArtifacts(NamedTuple):
     """Everything the serving path needs, already reduced/encoded.
 
-    ``x_low``: (n, d) reduced database; ``tags``: (n,) or None (linear model);
+    ``scorer``: any Scorer-protocol implementation (main-search side);
     ``x_full``: (n, D) full-precision vectors for reranking (or the (n, D)
     rotated x' of Section 3.1 -- reranking is exact either way);
-    ``model``: SpheringModel | GleanVecModel.
+    ``rerank_a``: optional (D, D) query rotation for the rerank step (set
+    when ``x_full`` stores rotated vectors, Eq. 10); ``model``: the learned
+    DR model, kept for encode/refresh bookkeeping only -- the search path
+    never inspects its type.
     """
 
-    x_low: jax.Array
-    tags: Optional[jax.Array]
+    scorer: Any
     x_full: jax.Array
-    model: object
+    rerank_a: Optional[jax.Array] = None
+    model: Any = None
+
+    @property
+    def x_low(self):
+        """Reduced database of float scorers (None for int8 scorers)."""
+        return getattr(self.scorer, "x_low", None)
+
+    @property
+    def tags(self):
+        """Cluster tags of GleanVec scorers (None for linear ones)."""
+        return getattr(self.scorer, "tags", None)
 
 
-def build_artifacts_sphering(model: SpheringModel, database: jax.Array,
-                             use_rotated_full: bool = True) -> SearchArtifacts:
+def build_artifacts_sphering(model, database: jax.Array,
+                             use_rotated_full: bool = True
+                             ) -> SearchArtifacts:
     """Linear path. With ``use_rotated_full`` the full vectors are stored as
     x' = P'Wx (requires d == D model; Section 3.1) so the reduced view is a
-    prefix of the stored vector."""
-    x_low = database @ model.b.T
+    prefix of the stored vector and the rerank rotates queries by A'."""
+    scorer = sc.linear_scorer(model, database)
     if use_rotated_full and model.dim == database.shape[1]:
-        x_full = x_low  # x' = B'x; reduced view = prefix of x'
-    else:
-        x_full = database
-    return SearchArtifacts(x_low=x_low, tags=None, x_full=x_full, model=model)
+        # x' = B'x; reduced view = prefix of x'; rerank query q' = A'q.
+        return SearchArtifacts(scorer=scorer, x_full=scorer.x_low,
+                               rerank_a=model.a, model=model)
+    return SearchArtifacts(scorer=scorer, x_full=database, model=model)
 
 
-def build_artifacts_gleanvec(model: GleanVecModel,
-                             database: jax.Array) -> SearchArtifacts:
-    tags, x_low = gv.encode_database(model, database)
-    return SearchArtifacts(x_low=x_low, tags=tags, x_full=database,
+def build_artifacts_gleanvec(model, database: jax.Array) -> SearchArtifacts:
+    return SearchArtifacts(scorer=sc.gleanvec_scorer(model, database),
+                           x_full=database, model=model)
+
+
+def build_artifacts(mode: str, database: jax.Array,
+                    model=None) -> SearchArtifacts:
+    """Mode-string construction covering every scorer (see ``scorer.MODES``):
+    full / sphering / gleanvec / sphering-int8 / gleanvec-int8."""
+    return SearchArtifacts(scorer=sc.build_scorer(mode, database, model),
+                           x_full=jnp.asarray(database, jnp.float32),
                            model=model)
-
-
-def _query_low(artifacts: SearchArtifacts, queries: jax.Array):
-    """Preprocessing (Alg. 1 line 1): reduce the queries.
-
-    For GleanVec this is the eager precompute (Alg. 4): all C views. The main
-    index search then consumes per-candidate tag-selected scores.
-    """
-    model = artifacts.model
-    if isinstance(model, GleanVecModel):
-        return gv.project_queries_eager(model, queries)  # (m, C, d)
-    return queries @ model.a.T                           # (m, d)
 
 
 def rerank(queries: jax.Array, artifacts: SearchArtifacts,
            candidates: jax.Array, k: int):
     """Postprocessing (Alg. 1 line 3): exact top-k among candidates.
 
-    ``candidates``: (m, kappa) ids. When x_full stores the rotated x'
-    (Section 3.1), queries must be rotated too: q' = A'q = P'W^{-1}q; that is
-    exactly ``model.a @ q`` for the d == D model, handled transparently.
+    ``candidates``: (m, kappa) ids; -1 entries (padded / unfilled slots
+    from graph or sharded searches) never win. When x_full stores the
+    rotated x' (Section 3.1), queries are rotated by ``rerank_a`` (Eq. 10).
     """
-    model = artifacts.model
-    if (isinstance(model, SpheringModel)
-            and artifacts.x_full is artifacts.x_low):
-        q_full = queries @ model.a.T        # rotated query (Eq. 10)
-    else:
-        q_full = queries
-    cand_vecs = artifacts.x_full[candidates]             # (m, kappa, D)
+    q_full = queries if artifacts.rerank_a is None \
+        else queries @ artifacts.rerank_a.T
+    safe = jnp.where(candidates >= 0, candidates, 0)
+    cand_vecs = artifacts.x_full[safe]                   # (m, kappa, D)
     scores = jnp.einsum("mkd,md->mk", cand_vecs, q_full)
+    scores = jnp.where(candidates >= 0, scores, NEG_INF)
     top = jax.lax.top_k(scores, k)[1]                    # (m, k)
     return jnp.take_along_axis(candidates, top, axis=1)
 
 
 def multi_step_search(queries: jax.Array, artifacts: SearchArtifacts,
                       index_search: Callable, k: int, kappa: int):
-    """Algorithm 1. ``index_search(q_low, artifacts, kappa) -> (m, kappa) ids``.
+    """Algorithm 1. ``index_search(q_low, artifacts, kappa) -> (m, kappa)
+    ids``, where ``q_low`` is the scorer's prepared query state (reduced
+    queries, eager views, or scaled int8 query -- index-agnostic).
 
     ``kappa >= k`` trades accuracy for rerank cost.
     """
-    q_low = _query_low(artifacts, queries)
+    q_low = artifacts.scorer.prepare_queries(queries)
     candidates = index_search(q_low, artifacts, kappa)
     return rerank(queries, artifacts, candidates, k)

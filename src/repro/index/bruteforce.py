@@ -1,13 +1,17 @@
-"""Flat (exact within the reduced space) index: blocked brute-force MIPS.
+"""Flat (exact within the reduced space) index: ONE blocked brute-force MIPS
+scan over any :mod:`repro.core.scorer` implementation.
 
-Supports three database representations:
-  * plain:     scores = q_low @ x_low^T                     (linear DR)
-  * gleanvec:  scores = <q_views[tags_i], x_low_i>          (Alg. 4, eager)
-  * quantized: scores = delta_i <q, u_i> + lo_i sum(q)      (int8 SQ)
+``scan_scorer`` is the single scan: it pads the scorer's rows to a block
+multiple, scores (batch, block) tiles via ``scorer.score_block`` and keeps a
+running top-k. The historical per-representation entry points (``search`` /
+``search_gleanvec`` / ``search_quantized``) are thin wrappers that build the
+corresponding scorer; they are kept because their signatures mirror the
+Pallas kernels (``ip_topk`` / ``gleanvec_ip`` / ``sq_dot``) they lower to on
+TPU (see ``repro.kernels.scorer_topk``).
 
-Blocked over the database so peak memory is (batch, block); this is the
-pure-JAX mirror of the ``ip_topk`` / ``gleanvec_ip`` / ``sq_dot`` Pallas
-kernels (kernels/__init__ dispatches to them on TPU).
+``search_gleanvec_sorted`` is the one deliberate exception: the tag-sorted
+(cluster-contiguous) layout degenerates each block to a single query view,
+which is a layout property, not a scoring mode.
 """
 from __future__ import annotations
 
@@ -16,47 +20,52 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.scorer import (GleanVecScorer, LinearScorer,
+                               QuantizedScorer, batch_of)
 from repro.index import topk
 
-__all__ = ["search", "search_gleanvec", "search_gleanvec_sorted",
-           "search_quantized"]
+__all__ = ["scan_scorer", "search_scorer", "search", "search_gleanvec",
+           "search_gleanvec_sorted", "search_quantized"]
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block"))
-def search(q_low: jax.Array, x_low: jax.Array, k: int, block: int = 4096):
-    """Linear path: ``q_low (m, d)``, ``x_low (n, d)`` -> (vals, ids) (m, k)."""
-    m, _ = q_low.shape
-    n = x_low.shape[0]
+def scan_scorer(scorer, qstate, k: int, block: int = 4096):
+    """Blocked top-k scan of any scorer with prepared queries ``qstate``.
+
+    Returns (vals, ids): (m, k) each; peak memory one (m, block) tile.
+    """
+    n = scorer.n_rows
+    m = batch_of(qstate)
+    padded = scorer.pad_rows((-n) % block)
 
     def score_block(start):
-        blk = jax.lax.dynamic_slice_in_dim(x_low, start, block, axis=0)
-        return q_low @ blk.T
+        return padded.score_block(qstate, start, block)
 
-    pad = (-n) % block
-    if pad:
-        x_low = jnp.pad(x_low, ((0, pad), (0, 0)))
     return topk.blocked_topk(score_block, n, k, block, m)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block"))
+def search_scorer(queries: jax.Array, scorer, k: int, block: int = 4096):
+    """Prepare + scan: ``queries (m, D or d)`` -> (vals, ids) (m, k)."""
+    return scan_scorer(scorer, scorer.prepare_queries(queries), k, block)
+
+
+def search(q_low: jax.Array, x_low: jax.Array, k: int, block: int = 4096):
+    """Linear path: ``q_low (m, d)``, ``x_low (n, d)`` -> (vals, ids)."""
+    return scan_scorer(LinearScorer(x_low=x_low), q_low, k, block)
+
+
 def search_gleanvec(q_views: jax.Array, tags: jax.Array, x_low: jax.Array,
                     k: int, block: int = 4096):
     """Eager GleanVec path (Alg. 4): ``q_views (m, C, d)``, ``tags (n,)``."""
-    m = q_views.shape[0]
-    n = x_low.shape[0]
-    pad = (-n) % block
-    if pad:
-        x_low = jnp.pad(x_low, ((0, pad), (0, 0)))
-        tags = jnp.pad(tags, (0, pad))
+    return scan_scorer(GleanVecScorer(x_low=x_low, tags=tags), q_views, k,
+                       block)
 
-    def score_block(start):
-        blk = jax.lax.dynamic_slice_in_dim(x_low, start, block, axis=0)
-        tag_blk = jax.lax.dynamic_slice_in_dim(tags, start, block, axis=0)
-        # (m, block, d) gather of the tag-selected query views, then contract.
-        q_sel = q_views[:, tag_blk, :]            # (m, block, d)
-        return jnp.einsum("mbd,bd->mb", q_sel, blk)
 
-    return topk.blocked_topk(score_block, n, k, block, m)
+def search_quantized(q_low: jax.Array, codes: jax.Array, lo: jax.Array,
+                     delta: jax.Array, k: int, block: int = 4096):
+    """Int8 scalar-quantized path: codes (n, d) uint8, lo/delta (d,)."""
+    scorer = QuantizedScorer(codes=codes, lo=lo, delta=delta)
+    return scan_scorer(scorer, scorer.prepare_queries(q_low), k, block)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block"))
@@ -85,28 +94,5 @@ def search_gleanvec_sorted(q_views: jax.Array, block_tags: jax.Array,
         q_sel = jax.lax.dynamic_index_in_dim(q_views, tag, axis=1,
                                              keepdims=False)  # (m, d)
         return q_sel @ blk.T
-
-    return topk.blocked_topk(score_block, n, k, block, m)
-
-
-@functools.partial(jax.jit, static_argnames=("k", "block"))
-def search_quantized(q_low: jax.Array, codes: jax.Array, lo: jax.Array,
-                     delta: jax.Array, k: int, block: int = 4096):
-    """Int8 scalar-quantized path: codes (n, d) uint8, lo/delta (d,).
-
-    Per-dimension scales fold into the query: scores = <q*delta, u> + <q, lo>.
-    """
-    m = q_low.shape[0]
-    n = codes.shape[0]
-    qf = q_low.astype(jnp.float32)
-    q_scaled = qf * delta[None, :]
-    q_lo = (qf @ lo)[:, None]                        # (m, 1)
-    pad = (-n) % block
-    if pad:
-        codes = jnp.pad(codes, ((0, pad), (0, 0)))
-
-    def score_block(start):
-        c = jax.lax.dynamic_slice_in_dim(codes, start, block, axis=0)
-        return q_scaled @ c.astype(jnp.float32).T + q_lo
 
     return topk.blocked_topk(score_block, n, k, block, m)

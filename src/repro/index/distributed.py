@@ -1,72 +1,88 @@
-"""Distributed (multi-chip / multi-pod) vector search.
+"""Distributed (multi-chip / multi-pod) vector search over any scorer.
 
-Standard sharded-ANN pattern: the database is row-sharded across every mesh
-axis; each shard produces its local top-kappa (via flat scan or its local
-graph shard), then candidates are all-gathered and merged into the global
-top-k. The only collective is one all-gather of (batch, shards * kappa)
-(value, id) pairs -- the id space stays global because each shard offsets its
-local ids.
+Standard sharded-ANN pattern: the scorer's row arrays (reduced vectors /
+codes / tags) are row-sharded across every mesh axis; each shard produces
+its local top-kappa via the unified blocked scan, then candidates are
+all-gathered and merged into the global top-k. The only collective is one
+all-gather of (batch, shards * kappa) (value, id) pairs -- the id space
+stays global because each shard offsets its local ids.
+
+Because scorers are pytrees with a ``shard_specs`` method, ONE shard_map
+wrapper serves every representation: linear, eager GleanVec, int8 and
+GleanVec∘int8 all shard with the same single all-gather merge.
 
 Implemented with shard_map so the collective schedule is explicit and stable
 for the roofline analysis.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.core.scorer import LinearScorer, Scorer
 from repro.index import bruteforce
-from repro.index.topk import NEG_INF, merge_topk
+from repro.utils.jax_compat import shard_map
 
-__all__ = ["sharded_search", "make_sharded_search"]
+__all__ = ["sharded_search", "make_sharded_search",
+           "sharded_search_scorer", "make_sharded_search_scorer"]
 
 
-def _local_search(q_low, x_shard, shard_offset, k, block):
-    vals, ids = bruteforce.search(q_low, x_shard, k, block)
-    return vals, jnp.where(ids >= 0, ids + shard_offset, -1)
+def _local_merge(queries, scorer, mesh: Mesh, axes, k: int, kappa: int,
+                 block: int):
+    """Per-shard body: local scan -> global ids -> all-gather -> top-k."""
+    qstate = scorer.prepare_queries(queries)
+    vals, ids = bruteforce.scan_scorer(scorer, qstate, kappa, block)
+    idx = jnp.zeros((), jnp.int32)       # shard index along flattened axes
+    for a in axes:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    rows = scorer.n_rows                 # local (per-shard) row count
+    ids = jnp.where(ids >= 0, ids + idx * rows, -1)
+    vals = jax.lax.all_gather(vals, axes, axis=1, tiled=True)
+    ids = jax.lax.all_gather(ids, axes, axis=1, tiled=True)
+    top_vals, sel = jax.lax.top_k(vals, k)
+    return top_vals, jnp.take_along_axis(ids, sel, axis=1)
+
+
+def make_sharded_search_scorer(mesh: Mesh, shard_axes: Sequence[str], k: int,
+                               scorer: Scorer, kappa: Optional[int] = None,
+                               block: int = 4096):
+    """Build a pjit-able sharded search over ``scorer``'s representation.
+
+    ``shard_axes``: mesh axes the scorer rows are sharded over (e.g.
+    ("pod", "data", "model") to use every chip). Queries are replicated --
+    each chip scans its shard for the full query batch, which is the
+    throughput-optimal layout when batch << n/chips. The ``scorer``
+    argument fixes the pytree structure (its ``shard_specs``); pass the
+    same scorer (row-sharded) when calling the returned
+    ``fn(queries, scorer) -> (vals, ids)`` with global ids.
+    """
+    kappa = kappa or k
+    axes = tuple(shard_axes)
+
+    def local_fn(queries, s):
+        return _local_merge(queries, s, mesh, axes, k, kappa, block)
+
+    return shard_map(local_fn, mesh=mesh,
+                     in_specs=(P(), scorer.shard_specs(axes)),
+                     out_specs=(P(), P()))
 
 
 def make_sharded_search(mesh: Mesh, shard_axes: Sequence[str], k: int,
                         kappa: Optional[int] = None, block: int = 4096):
-    """Build a pjit-able sharded flat search.
-
-    ``shard_axes``: mesh axes the database rows are sharded over (e.g.
-    ("pod", "data", "model") to use every chip). Queries are replicated --
-    each chip scans its shard for the full query batch, which is the
-    throughput-optimal layout when batch << n/chips.
-    Returns ``fn(q_low, x_low) -> (vals, ids)`` with global ids.
-    """
+    """Legacy linear entry point: ``fn(q_low, x_low) -> (vals, ids)``."""
     kappa = kappa or k
     axes = tuple(shard_axes)
-    n_shards = 1
-    for a in axes:
-        n_shards *= mesh.shape[a]
 
     def local_fn(q_low, x_shard):
-        # shard index along the flattened shard axes
-        idx = jnp.zeros((), jnp.int32)
-        for a in axes:
-            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
-        rows = x_shard.shape[0]
-        vals, ids = _local_search(q_low, x_shard, idx * rows, kappa, block)
-        # gather candidates from every shard: (n_shards * kappa,) per query
-        vals = jax.lax.all_gather(vals, axes, axis=1, tiled=True)
-        ids = jax.lax.all_gather(ids, axes, axis=1, tiled=True)
-        top_vals, sel = jax.lax.top_k(vals, k)
-        return top_vals, jnp.take_along_axis(ids, sel, axis=1)
+        return _local_merge(q_low, LinearScorer(x_low=x_shard), mesh, axes,
+                            k, kappa, block)
 
-    fn = jax.shard_map(
-        local_fn, mesh=mesh,
-        in_specs=(P(), P(axes)),
-        out_specs=(P(), P()),
-        check_vma=False,  # blocked_topk's scan carry is axis-agnostic
-    )
-    return fn
+    return shard_map(local_fn, mesh=mesh, in_specs=(P(), P(axes)),
+                     out_specs=(P(), P()))
 
 
 def sharded_search(q_low: jax.Array, x_low: jax.Array, mesh: Mesh,
@@ -75,3 +91,12 @@ def sharded_search(q_low: jax.Array, x_low: jax.Array, mesh: Mesh,
     """One-shot convenience wrapper around :func:`make_sharded_search`."""
     fn = make_sharded_search(mesh, shard_axes, k, kappa, block)
     return jax.jit(fn)(q_low, x_low)
+
+
+def sharded_search_scorer(queries: jax.Array, scorer: Scorer, mesh: Mesh,
+                          shard_axes: Sequence[str], k: int,
+                          kappa: Optional[int] = None, block: int = 4096):
+    """One-shot wrapper around :func:`make_sharded_search_scorer`."""
+    fn = make_sharded_search_scorer(mesh, shard_axes, k, scorer, kappa,
+                                    block)
+    return jax.jit(fn)(queries, scorer)

@@ -8,6 +8,13 @@ scoring them with one MXU-friendly contraction. The scoring function is
 pluggable so the same traversal serves plain LeanVec (q_low . x_low), eager
 GleanVec (Alg. 4: per-tag query views) and int8-quantized databases.
 
+The scoring function is the unified Scorer protocol
+(:mod:`repro.core.scorer`): ``beam_search_scorer`` accepts any scorer and
+scores each hop's gathered neighbor expansion with ``scorer.score_ids``, so
+the same traversal serves plain LeanVec, eager GleanVec (Alg. 4), int8 and
+GleanVec∘int8 databases. The legacy per-representation entry points are
+thin wrappers over it.
+
 The traversal also (optionally) records the cluster tag of every expanded
 vertex -- the data behind the paper's Figure 7 (tag access pattern favoring
 eager execution).
@@ -21,10 +28,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.scorer import GleanVecScorer, LinearScorer, batch_of
 from repro.index.topk import NEG_INF
 
-__all__ = ["GraphIndex", "build", "beam_search", "beam_search_gleanvec",
-           "beam_search_traced"]
+__all__ = ["GraphIndex", "build", "beam_search_scorer", "beam_search",
+           "beam_search_gleanvec", "beam_search_traced"]
 
 
 class GraphIndex(NamedTuple):
@@ -235,57 +243,62 @@ def _beam_loop(score_ids, graph: GraphIndex, batch: int, beam: int,
 
 
 @functools.partial(jax.jit, static_argnames=("k", "beam", "max_hops"))
+def _beam_qstate(qstate, scorer, graph: GraphIndex, k: int, beam: int,
+                 max_hops: int, trace_tags: Optional[jax.Array] = None):
+    """Traversal over any scorer with prepared queries ``qstate``."""
+    m = batch_of(qstate)
+
+    def score_ids(ids):
+        safe = jnp.where(ids >= 0, ids, 0)
+        return scorer.score_ids(qstate, safe)
+
+    scores, ids, hops, tag_hist = _beam_loop(score_ids, graph, m, beam,
+                                             max_hops, trace_tags=trace_tags)
+    top, sel = jax.lax.top_k(scores, k)
+    return top, jnp.take_along_axis(ids, sel, axis=1), hops, tag_hist
+
+
+def beam_search_scorer(queries: jax.Array, scorer, graph: GraphIndex,
+                       k: int, beam: int = 64, max_hops: int = 256,
+                       trace: bool = False):
+    """Unified-protocol beam search: ``queries (m, D)`` full-dimension.
+
+    With ``trace=True`` additionally returns (n_hops, (m, max_hops) tag
+    trace) -- requires a scorer with ``tags`` (Figure 7 measurement).
+    """
+    qstate = scorer.prepare_queries(queries)
+    trace_tags = getattr(scorer, "tags", None) if trace else None
+    if trace and trace_tags is None:
+        raise ValueError("trace=True needs a tagged scorer (GleanVec*)")
+    top, ids, hops, tag_hist = _beam_qstate(qstate, scorer, graph, k, beam,
+                                            max_hops, trace_tags=trace_tags)
+    if trace:
+        return top, ids, hops, tag_hist
+    return top, ids
+
+
 def beam_search(q_low: jax.Array, x_low: jax.Array, graph: GraphIndex,
                 k: int, beam: int = 64, max_hops: int = 256):
     """Linear scoring: q_low (m, d), x_low (n, d) -> ids (m, k)."""
-    m = q_low.shape[0]
-
-    def score_ids(ids):
-        vecs = x_low[jnp.where(ids >= 0, ids, 0)]          # (m, k, d)
-        return jnp.einsum("mkd,md->mk", vecs, q_low)
-
-    scores, ids, _, _ = _beam_loop(score_ids, graph, m, beam, max_hops)
-    top, sel = jax.lax.top_k(scores, k)
-    return top, jnp.take_along_axis(ids, sel, axis=1)
+    top, ids, _, _ = _beam_qstate(q_low, LinearScorer(x_low=x_low), graph,
+                                  k, beam, max_hops)
+    return top, ids
 
 
-@functools.partial(jax.jit, static_argnames=("k", "beam", "max_hops"))
 def beam_search_gleanvec(q_views: jax.Array, tags: jax.Array,
                          x_low: jax.Array, graph: GraphIndex, k: int,
                          beam: int = 64, max_hops: int = 256):
     """Eager GleanVec scoring (Alg. 4): q_views (m, C, d), tags (n,)."""
-    m = q_views.shape[0]
-    midx = jnp.arange(m)
-
-    def score_ids(ids):
-        safe = jnp.where(ids >= 0, ids, 0)
-        vecs = x_low[safe]                                  # (m, k, d)
-        tag = tags[safe]                                    # (m, k)
-        q_sel = q_views[midx[:, None], tag]                 # (m, k, d)
-        return jnp.sum(q_sel * vecs, axis=-1)
-
-    scores, ids, _, _ = _beam_loop(score_ids, graph, m, beam, max_hops)
-    top, sel = jax.lax.top_k(scores, k)
-    return top, jnp.take_along_axis(ids, sel, axis=1)
+    scorer = GleanVecScorer(x_low=x_low, tags=tags)
+    top, ids, _, _ = _beam_qstate(q_views, scorer, graph, k, beam, max_hops)
+    return top, ids
 
 
-@functools.partial(jax.jit, static_argnames=("k", "beam", "max_hops"))
 def beam_search_traced(q_views: jax.Array, tags: jax.Array, x_low: jax.Array,
                        graph: GraphIndex, k: int, beam: int = 64,
                        max_hops: int = 256):
     """GleanVec search that also returns the per-hop expanded-vertex tag
     sequence (m, max_hops) -- the measurement behind Figure 7."""
-    m = q_views.shape[0]
-    midx = jnp.arange(m)
-
-    def score_ids(ids):
-        safe = jnp.where(ids >= 0, ids, 0)
-        vecs = x_low[safe]
-        tag = tags[safe]
-        q_sel = q_views[midx[:, None], tag]
-        return jnp.sum(q_sel * vecs, axis=-1)
-
-    scores, ids, hops, tag_hist = _beam_loop(score_ids, graph, m, beam,
-                                             max_hops, trace_tags=tags)
-    top, sel = jax.lax.top_k(scores, k)
-    return top, jnp.take_along_axis(ids, sel, axis=1), hops, tag_hist
+    scorer = GleanVecScorer(x_low=x_low, tags=tags)
+    return _beam_qstate(q_views, scorer, graph, k, beam, max_hops,
+                        trace_tags=tags)

@@ -4,6 +4,13 @@ Coarse quantizer = spherical k-means centers (reused from the paper's
 Appendix A implementation). Lists are stored as one permutation array plus
 offsets; search gathers ``nprobe`` padded lists and scores them in one
 contraction, so the whole query batch stays on the MXU.
+
+Fine scoring goes through the unified Scorer protocol
+(:mod:`repro.core.scorer`): ``search_scorer`` accepts any scorer (linear,
+eager GleanVec, int8, GleanVec∘int8) and scores the gathered posting lists
+with ``scorer.score_ids`` -- tag gathers and dequant-free int8 dots come
+with the scorer, not with this index. The coarse probe always runs in the
+full dimension (the centers live in R^D).
 """
 from __future__ import annotations
 
@@ -15,9 +22,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import spherical_kmeans
+from repro.core.scorer import LinearScorer
 from repro.index.topk import NEG_INF
 
-__all__ = ["IVFIndex", "build", "search"]
+__all__ = ["IVFIndex", "build", "search", "search_scorer"]
 
 
 class IVFIndex(NamedTuple):
@@ -41,21 +49,35 @@ def build(key, x, n_lists: int, n_iters: int = 20) -> IVFIndex:
 
 
 @functools.partial(jax.jit, static_argnames=("k", "nprobe"))
-def search(q_low: jax.Array, q_full: jax.Array, x_low: jax.Array,
-           index: IVFIndex, k: int, nprobe: int = 8):
-    """Probe ``nprobe`` lists per query; score candidates in reduced space.
-
-    ``q_full`` (m, D) selects the lists (coarse step runs in full dim, as the
-    coarse centers live in R^D); ``q_low`` (m, d) scores candidates against
-    ``x_low`` (n, d). Returns (vals, ids): (m, k).
-    """
-    m = q_low.shape[0]
-    coarse = q_full @ index.centers.T                       # (m, C)
+def _probe_and_score(q_coarse: jax.Array, qstate, scorer, index: IVFIndex,
+                     k: int, nprobe: int):
+    """Probe ``nprobe`` lists per query, score candidates via the scorer."""
+    m = q_coarse.shape[0]
+    coarse = q_coarse @ index.centers.T                     # (m, C)
     _, probe = jax.lax.top_k(coarse, nprobe)                # (m, nprobe)
     cand = index.lists[probe].reshape(m, -1)                # (m, nprobe*L)
     safe = jnp.where(cand >= 0, cand, 0)
-    vecs = x_low[safe]                                      # (m, P, d)
-    scores = jnp.einsum("mpd,md->mp", vecs, q_low)
+    scores = scorer.score_ids(qstate, safe)                 # (m, nprobe*L)
     scores = jnp.where(cand >= 0, scores, NEG_INF)
     vals, sel = jax.lax.top_k(scores, k)
     return vals, jnp.take_along_axis(cand, sel, axis=1)
+
+
+def search_scorer(queries: jax.Array, scorer, index: IVFIndex, k: int,
+                  nprobe: int = 8):
+    """Unified-protocol search: ``queries (m, D)`` in the FULL dimension.
+
+    The coarse step scores ``queries`` against the R^D centers; the fine
+    step scores ``scorer.prepare_queries(queries)`` against the gathered
+    posting lists through any scorer. Returns (vals, ids): (m, k).
+    """
+    q_coarse = queries.astype(jnp.float32)
+    return _probe_and_score(q_coarse, scorer.prepare_queries(queries),
+                            scorer, index, k, nprobe)
+
+
+def search(q_low: jax.Array, q_full: jax.Array, x_low: jax.Array,
+           index: IVFIndex, k: int, nprobe: int = 8):
+    """Legacy linear entry point: pre-reduced ``q_low`` + raw ``x_low``."""
+    return _probe_and_score(q_full, q_low, LinearScorer(x_low=x_low), index,
+                            k, nprobe)

@@ -3,6 +3,13 @@
 Each kernel package ships <name>.py (pl.pallas_call + BlockSpec tiling),
 ops.py (dispatching jit wrapper) and ref.py (pure-jnp oracle used by tests
 and as the differentiable/CPU fallback).
+
+This module is also the SINGLE place where a Scorer
+(:mod:`repro.core.scorer`) lowers to its kernel: ``scorer_scores`` /
+``scorer_topk`` map each protocol implementation to the matching Pallas
+kernel on TPU (``ip_topk`` / ``gleanvec_ip`` / ``sq_dot``) and to the jnp
+mirrors elsewhere. Index code never mentions kernels; it talks to scorers,
+and scorers lower here.
 """
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.gleanvec_ip import gleanvec_ip, gleanvec_ip_ref
@@ -16,4 +23,58 @@ __all__ = [
     "ip_topk", "ip_topk_ref",
     "kmeans_assign", "kmeans_assign_ref",
     "sq_dot", "sq_dot_ref",
+    "scorer_scores", "scorer_topk",
 ]
+
+
+def scorer_scores(scorer, queries, *, use_pallas=None, interpret=False):
+    """Dense (m, n) scores of ``queries`` against a scorer's database,
+    lowered to the scorer's kernel (TPU) or jnp mirror (elsewhere).
+
+    ``GleanVecQuantizedScorer`` has no fused kernel yet (tracked in
+    ROADMAP open items); it runs the scorer's own jnp formulation, which
+    on TPU still beats dequantize-then-gleanvec_ip on bandwidth.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import scorer as sc
+
+    kw = dict(use_pallas=use_pallas, interpret=interpret)
+    if isinstance(scorer, sc.LinearScorer):
+        q_low = scorer.prepare_queries(queries)
+        return q_low @ scorer.x_low.T      # plain MXU matmul; no kernel won
+    if isinstance(scorer, sc.GleanVecScorer):
+        q_views = scorer.prepare_queries(queries)
+        return gleanvec_ip(q_views, scorer.tags, scorer.x_low, **kw)
+    if isinstance(scorer, sc.QuantizedScorer):
+        q = queries.astype(jnp.float32)
+        q_low = q if scorer.a is None else q @ scorer.a.T
+        return sq_dot(q_low, scorer.codes, scorer.lo, scorer.delta, **kw)
+    if isinstance(scorer, sc.GleanVecQuantizedScorer):
+        qstate = scorer.prepare_queries(queries)
+        return scorer.score_block(qstate, 0, scorer.n_rows)
+    raise TypeError(f"no kernel lowering for {type(scorer).__name__}")
+
+
+def scorer_topk(scorer, queries, k: int, *, use_pallas=None,
+                interpret=False):
+    """Fused MIPS top-k of ``queries`` against a scorer's database.
+
+    ``LinearScorer`` lowers to the fused ``ip_topk`` scan (never
+    materializes (m, n)); the other scorers score densely via their kernel
+    and reduce with ``top_k``. Returns (vals (m, k) f32, ids (m, k) i32).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import scorer as sc
+
+    if isinstance(scorer, sc.LinearScorer):
+        q_low = scorer.prepare_queries(queries)
+        return ip_topk(q_low, scorer.x_low, k, use_pallas=use_pallas,
+                       interpret=interpret)
+    scores = scorer_scores(scorer, queries, use_pallas=use_pallas,
+                           interpret=interpret)
+    vals, ids = jax.lax.top_k(scores, k)
+    return vals, ids.astype(jnp.int32)

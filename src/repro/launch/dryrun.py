@@ -55,7 +55,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str) -> dict:
         lambda s: NamedSharding(mesh, s), bundle.out_shardings,
         is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
 
-    with jax.set_mesh(mesh):
+    from repro.utils.jax_compat import set_mesh
+    with set_mesh(mesh):
         jitted = jax.jit(bundle.fn, in_shardings=in_shardings,
                          out_shardings=out_shardings)
         lowered = jitted.lower(*bundle.args)
@@ -65,7 +66,7 @@ def run_cell(arch: str, shape: str, mesh_kind: str) -> dict:
         t_compile = time.time() - t1
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = hlo_analysis.normalize_cost(compiled.cost_analysis())
     hlo_text = compiled.as_text()
 
     # CPU-backend bf16 legalization: XLA CPU materializes f32 twins of large

@@ -4,10 +4,15 @@ A FUNCTION, not a module-level constant: importing this module never touches
 jax device state. The dry-run entrypoint (dryrun.py) sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import; smoke tests and benchmarks see the real (1-device) platform.
+
+Mesh creation goes through :mod:`repro.utils.jax_compat` so the same code
+runs on jax versions with and without ``jax.sharding.AxisType``.
 """
 from __future__ import annotations
 
 import jax
+
+from repro.utils.jax_compat import make_mesh
 
 __all__ = ["make_production_mesh", "make_host_mesh"]
 
@@ -15,13 +20,10 @@ __all__ = ["make_production_mesh", "make_host_mesh"]
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh() -> jax.sharding.Mesh:
     """Whatever devices exist right now, as a 1D 'data' mesh (tests)."""
     n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((n,), ("data",))

@@ -2,6 +2,11 @@
 synthetic collection with selectable scoring mode.
 
     PYTHONPATH=src python -m repro.launch.serve --mode gleanvec --n 50000
+
+Every mode (full / sphering / gleanvec / sphering-int8 / gleanvec-int8)
+runs through the same SearchArtifacts + Scorer path -- the mode string is
+the only thing that differs between a full-precision service and a
+GleanVec+int8 one.
 """
 from __future__ import annotations
 
@@ -11,15 +16,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gleanvec as gv, leanvec_sphering as lvs, metrics
+from repro.core import search as msearch
+from repro.core.scorer import MODES
 from repro.data import vectors
-from repro.index import bruteforce
-from repro.serve.engine import ServingEngine
+from repro.serve.engine import ServingEngine, make_search_fn
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="gleanvec",
-                    choices=["full", "sphering", "gleanvec"])
+    ap.add_argument("--mode", default="gleanvec", choices=list(MODES))
     ap.add_argument("--n", type=int, default=50_000)
     ap.add_argument("--dim", type=int, default=512)
     ap.add_argument("--d", type=int, default=128)
@@ -33,32 +38,16 @@ def main():
     X = jnp.asarray(ds.database)
     Q = jnp.asarray(ds.queries_learn)
 
-    def rerank(cand, queries):
-        vecs = X[jnp.where(cand >= 0, cand, 0)]
-        full = jnp.einsum("mkd,md->mk", vecs, queries)
-        top = jax.lax.top_k(jnp.where(cand >= 0, full, -3.4e38), 10)[1]
-        return jnp.take_along_axis(cand, top, axis=1)
-
     if args.mode == "full":
-        def search_fn(q):
-            return bruteforce.search(q, X, 10)[1]
-    elif args.mode == "sphering":
+        model = None
+    elif args.mode.startswith("sphering"):
         model = lvs.fit(Q, X, args.d)
-        x_low = X @ model.b.T
-
-        def search_fn(q):
-            _, cand = bruteforce.search(q @ model.a.T, x_low, args.kappa)
-            return rerank(cand, q)
     else:
         model = gv.fit(jax.random.PRNGKey(0), Q, X, c=args.clusters,
                        d=args.d)
-        tags, x_low = gv.encode_database(model, X)
-
-        def search_fn(q):
-            q_views = gv.project_queries_eager(model, q)
-            _, cand = bruteforce.search_gleanvec(q_views, tags, x_low,
-                                                 args.kappa)
-            return rerank(cand, q)
+    artifacts = msearch.build_artifacts(args.mode, X, model)
+    kappa = 10 if args.mode == "full" else args.kappa
+    search_fn = make_search_fn(artifacts, k=10, kappa=kappa)
 
     engine = ServingEngine(search_fn, batch_size=args.batch, dim=args.dim)
     ids = engine.submit(ds.queries_test)

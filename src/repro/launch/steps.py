@@ -577,13 +577,14 @@ def _vs_bundle(module, shape_name: str, mesh: Mesh, rules: MeshRules,
             return top, jnp.take_along_axis(gids, sel, axis=1)
 
         if all_axes:
-            fn = jax.shard_map(
+            from repro.utils.jax_compat import shard_map
+            fn = shard_map(
                 local, mesh=mesh,
                 in_specs=(P(), P(), P(all_axes), P(all_axes, None),
                           P(all_axes, None)),
-                out_specs=(P(), P()),
-                check_vma=False)  # tags spec covers both layouts (rows or
-                                  # blocks -- both shard over all axes)
+                out_specs=(P(), P()))
+            # tags spec covers both layouts (rows or blocks -- both shard
+            # over all axes)
         else:
             fn = local
         return fn(q, q_views, tags, x_low, x_full)

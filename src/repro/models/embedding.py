@@ -105,10 +105,10 @@ def make_sharded_lookup(mesh: Mesh, total_vocab: int, dim: int):
                                      concat_axis=2, tiled=True)
         return emb                                     # (B_local, F, D)
 
-    return jax.shard_map(
+    from repro.utils.jax_compat import shard_map
+    return shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(tp, dp_axes if dp_axes else None),
                   P(dp_axes if dp_axes else None, None)),
         out_specs=P(dp_axes if dp_axes else None, None, None),
-        check_vma=False,
     )

@@ -215,9 +215,10 @@ def _embed_lookup(table: jax.Array, tokens: jax.Array, rules: MeshRules,
         emb = jnp.where(hit[..., None], emb.astype(compute_dtype), 0)
         return jax.lax.psum(emb, rules.tp)
 
-    fn = jax.shard_map(local,
-                       in_specs=(P(rules.tp, None), P(dp, None)),
-                       out_specs=P(dp, None, None), check_vma=False)
+    from repro.utils.jax_compat import shard_map
+    fn = shard_map(local,
+                   in_specs=(P(rules.tp, None), P(dp, None)),
+                   out_specs=P(dp, None, None))
     return fn(table, tokens)
 
 

@@ -15,7 +15,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["ServeStats", "ServingEngine"]
+__all__ = ["ServeStats", "ServingEngine", "make_search_fn"]
+
+
+def make_search_fn(artifacts, k: int, kappa: int, block: int = 4096):
+    """Close Algorithm 1 over ``artifacts`` for any scorer: a jit-able
+    ``queries (B, D) -> ids (B, k)`` with a flat main search + rerank.
+
+    This is the standard way to stand up a :class:`ServingEngine` on a
+    :class:`repro.core.search.SearchArtifacts` of any mode -- the engine
+    neither knows nor cares which representation is being scanned.
+    """
+    from repro.core import search as msearch
+    from repro.index import bruteforce
+
+    def index_search(q_low, art, kap):
+        _, cand = bruteforce.scan_scorer(art.scorer, q_low, kap, block)
+        return cand
+
+    def search_fn(queries):
+        return msearch.multi_step_search(queries, artifacts, index_search,
+                                         k, kappa)
+
+    return search_fn
 
 
 @dataclass

@@ -1,70 +1,64 @@
 """Candidate-retrieval serving: where the paper meets the recsys archs.
 
-``retrieval_cand`` scores one user against ~10^6 candidate items -- exactly
-the MIPS workload GleanVec accelerates. Three scoring modes:
+``retrieve`` scores one user against ~10^6 candidate items -- exactly the
+MIPS workload GleanVec accelerates. Scoring modes are the unified Scorer
+protocol's (:mod:`repro.core.scorer`), selected by string:
 
-  * "full":     exact dot against full-D candidate embeddings (baseline);
-  * "sphering": LeanVec-Sphering multi-step (reduced scan + full rerank);
-  * "gleanvec": GleanVec multi-step (eager per-cluster views + rerank).
+  * "full":          exact dot against full-D candidate embeddings;
+  * "sphering":      LeanVec-Sphering multi-step (reduced scan + rerank);
+  * "gleanvec":      GleanVec multi-step (eager per-cluster views + rerank);
+  * "sphering-int8": int8 SQ on top of the reduced vectors (LeanVec comp.);
+  * "gleanvec-int8": int8 SQ on top of the per-cluster reduced vectors.
 
-The reduced scans land on the ``ip_topk`` / ``gleanvec_ip`` Pallas kernels
-on TPU and their jnp mirrors elsewhere. Bandwidth per candidate drops from
-D*4 bytes to d*4 (+1 tag), which is the paper's whole point.
+All five run through the SAME blocked scan + rerank; there is no per-mode
+code path and no model-type dispatch here. The reduced scans land on the
+``ip_topk`` / ``gleanvec_ip`` / ``sq_dot`` Pallas kernels on TPU and their
+jnp mirrors elsewhere (see ``repro.kernels.scorer_topk``). Bandwidth per
+candidate drops from D*4 bytes to d*4 (+1 tag) or d*1, which is the
+paper's whole point.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import gleanvec as gv
-from repro.core.gleanvec import GleanVecModel
-from repro.core.leanvec_sphering import SpheringModel
+from repro.core import search as msearch
+from repro.core.scorer import build_scorer
 from repro.index import bruteforce
+from repro.serve.engine import make_search_fn
 
 __all__ = ["RetrievalIndex", "build_retrieval_index", "retrieve"]
 
 
 class RetrievalIndex(NamedTuple):
     mode: str
-    x_full: jax.Array                  # (N, D) candidate embeddings
-    x_low: Optional[jax.Array]         # (N, d) reduced
-    tags: Optional[jax.Array]          # (N,) gleanvec tags
-    model: Optional[object]            # SpheringModel | GleanVecModel
+    artifacts: msearch.SearchArtifacts
+
+    @property
+    def x_full(self) -> jax.Array:
+        return self.artifacts.x_full
+
+    @property
+    def scorer(self) -> Any:
+        return self.artifacts.scorer
 
 
 def build_retrieval_index(candidates: jax.Array, mode: str = "full",
                           model=None) -> RetrievalIndex:
-    if mode == "full":
-        return RetrievalIndex("full", candidates, None, None, None)
-    if mode == "sphering":
-        assert isinstance(model, SpheringModel)
-        return RetrievalIndex("sphering", candidates,
-                              candidates @ model.b.T, None, model)
-    if mode == "gleanvec":
-        assert isinstance(model, GleanVecModel)
-        tags, x_low = gv.encode_database(model, candidates)
-        return RetrievalIndex("gleanvec", candidates, x_low, tags, model)
-    raise ValueError(mode)
+    """Encode the candidate set for ``mode`` (see ``scorer.MODES``)."""
+    artifacts = msearch.SearchArtifacts(
+        scorer=build_scorer(mode, candidates, model),
+        x_full=candidates, model=model)
+    return RetrievalIndex(mode=mode, artifacts=artifacts)
 
 
 def retrieve(index: RetrievalIndex, user_vecs: jax.Array, k: int,
              kappa: Optional[int] = None, block: int = 4096):
     """``user_vecs (B, D)`` -> top-k candidate ids (B, k)."""
-    kappa = kappa or max(k, 2 * k)
-    if index.mode == "full":
-        _, ids = bruteforce.search(user_vecs, index.x_full, k, block)
+    if index.mode == "full":    # exact scan IS the answer; skip the rerank
+        _, ids = bruteforce.search_scorer(user_vecs, index.scorer, k, block)
         return ids
-    if index.mode == "sphering":
-        q_low = user_vecs @ index.model.a.T
-        _, cand = bruteforce.search(q_low, index.x_low, kappa, block)
-    else:
-        q_views = gv.project_queries_eager(index.model, user_vecs)
-        _, cand = bruteforce.search_gleanvec(q_views, index.tags,
-                                             index.x_low, kappa, block)
-    # rerank in full precision
-    vecs = index.x_full[cand]                              # (B, kappa, D)
-    scores = jnp.einsum("bkd,bd->bk", vecs, user_vecs)
-    top = jax.lax.top_k(scores, k)[1]
-    return jnp.take_along_axis(cand, top, axis=1)
+    kappa = kappa or max(k, 2 * k)
+    search_fn = make_search_fn(index.artifacts, k, kappa, block)
+    return search_fn(user_vecs)

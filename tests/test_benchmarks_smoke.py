@@ -53,3 +53,15 @@ def test_table1_and_kernels():
     from benchmarks.common import ROWS
     assert any(r.startswith("table1/") for r in ROWS)
     assert any(r.startswith("kernel/") for r in ROWS)
+
+
+def test_run_smoke_path(tmp_path):
+    """The CLI harness --smoke path runs end-to-end and writes the CSV."""
+    from benchmarks import run as bench_run
+    out = tmp_path / "bench.csv"
+    bench_run.main(["--smoke", "--out", str(out)])
+    rows = out.read_text().strip().splitlines()
+    assert rows[0] == "name,us_per_call,derived"
+    assert any(r.startswith("table1/flat/gleanvec-") and "-int8" in r
+               for r in rows)
+    assert any(r.startswith("kernel/") for r in rows)

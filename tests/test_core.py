@@ -10,6 +10,8 @@ from repro.core import (baselines, gleanvec as gv, leanvec_sphering as lvs,
                         streaming)
 from repro.data import vectors
 
+pytestmark = pytest.mark.tier1
+
 
 @pytest.fixture(scope="module")
 def ood_data():

@@ -20,8 +20,8 @@ def _run(body: str) -> str:
         sys.path.insert(0, {src!r})
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P, NamedSharding
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.utils.jax_compat import make_mesh, set_mesh, shard_map
+        mesh = make_mesh((2, 4), ("data", "model"))
     """).format(src=REPO_SRC) + textwrap.dedent(body)
     r = subprocess.run([sys.executable, "-c", script], capture_output=True,
                        text=True, timeout=600)
@@ -37,7 +37,7 @@ def test_sharded_search_exact():
         X = rng.standard_normal((2048, 32)).astype(np.float32)
         Q = rng.standard_normal((16, 32)).astype(np.float32)
         gt = vectors.exact_topk(Q, X, 5)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             xs = jax.device_put(jnp.asarray(X),
                                 NamedSharding(mesh, P(("data","model"), None)))
             fn = distributed.make_sharded_search(mesh, ("data", "model"),
@@ -50,6 +50,39 @@ def test_sharded_search_exact():
     assert "RECALL 1.0" in out
 
 
+def test_sharded_scorer_search_matches_local():
+    """Any scorer shards with the same all-gather merge: GleanVec and
+    GleanVec∘int8 sharded searches match the single-device scan."""
+    out = _run("""
+        from repro.core.scorer import (GleanVecScorer,
+                                       GleanVecQuantizedScorer)
+        from repro.core.quantization import quantize_per_cluster
+        from repro.index import bruteforce, distributed
+        rng = np.random.default_rng(0)
+        n, d, dim, C = 2048, 16, 32, 4
+        x_low = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+        tags = jnp.asarray(rng.integers(0, C, n).astype(np.int32))
+        a = jnp.asarray(rng.standard_normal((C, d, dim)).astype(np.float32))
+        Q = jnp.asarray(rng.standard_normal((8, dim)).astype(np.float32))
+        sq = quantize_per_cluster(x_low, tags, C)
+        for s in (GleanVecScorer(x_low=x_low, tags=tags, a=a),
+                  GleanVecQuantizedScorer(codes=sq.codes, tags=tags,
+                                          lo=sq.lo, delta=sq.delta, a=a)):
+            v_ref, i_ref = bruteforce.search_scorer(Q, s, 5, block=256)
+            with set_mesh(mesh):
+                fn = distributed.make_sharded_search_scorer(
+                    mesh, ("data", "model"), k=5, scorer=s, kappa=5,
+                    block=256)
+                v, i = jax.jit(fn)(Q, s)
+            assert np.allclose(np.asarray(v), np.asarray(v_ref),
+                               rtol=1e-4, atol=1e-4), type(s).__name__
+            assert np.array_equal(np.asarray(i), np.asarray(i_ref)), \\
+                type(s).__name__
+        print("SHARDED_SCORER_OK")
+    """)
+    assert "SHARDED_SCORER_OK" in out
+
+
 def test_sharded_embedding_lookup_matches_take():
     out = _run("""
         from repro.models.embedding import make_sharded_lookup
@@ -57,7 +90,7 @@ def test_sharded_embedding_lookup_matches_take():
         V, D, B, F = 64, 8, 16, 3
         table = rng.standard_normal((V, D)).astype(np.float32)
         idx = rng.integers(0, V, (B, F)).astype(np.int32)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             t = jax.device_put(jnp.asarray(table),
                                NamedSharding(mesh, P("model", "data")))
             i = jax.device_put(jnp.asarray(idx),
@@ -80,10 +113,10 @@ def test_compressed_psum_mean():
         def local(x):
             return compressed_psum_mean({"g": x}, "data")["g"]
 
-        fn = jax.shard_map(local, mesh=mesh,
-                           in_specs=P("data", None),
-                           out_specs=P("data", None), check_vma=False)
-        with jax.set_mesh(mesh):
+        fn = shard_map(local, mesh=mesh,
+                       in_specs=P("data", None),
+                       out_specs=P("data", None))
+        with set_mesh(mesh):
             xs = jax.device_put(jnp.asarray(g),
                                 NamedSharding(mesh, P("data", None)))
             out = jax.jit(fn)(xs)
@@ -106,7 +139,7 @@ def test_vocab_parallel_embed_matches_take():
         rng = np.random.default_rng(3)
         table = rng.standard_normal((64, 16)).astype(np.float32)
         toks = rng.integers(0, 64, (4, 8)).astype(np.int32)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             t = jax.device_put(jnp.asarray(table),
                                NamedSharding(mesh, P("model", None)))
             tk = jax.device_put(jnp.asarray(toks),
@@ -128,13 +161,12 @@ def test_elastic_reshard_restore():
         rng = np.random.default_rng(4)
         x = rng.standard_normal((8, 16)).astype(np.float32)
         with tempfile.TemporaryDirectory() as d:
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 xs = jax.device_put(jnp.asarray(x),
                                     NamedSharding(mesh, P("data", "model")))
                 checkpoint.save(d, 1, {"x": xs})
             # restore onto a DIFFERENT layout (fully replicated 1D mesh)
-            mesh2 = jax.make_mesh((8,), ("data",),
-                                  axis_types=(jax.sharding.AxisType.Auto,))
+            mesh2 = make_mesh((8,), ("data",))
             sh2 = {"x": NamedSharding(mesh2, P(None, None))}
             tree, step, _ = checkpoint.restore_distributed(
                 d, {"x": jnp.zeros((8, 16), jnp.float32)}, sh2)

@@ -9,6 +9,8 @@ from repro.core import search as msearch
 from repro.data import vectors
 from repro.index import bruteforce, graph, ivf, topk
 
+pytestmark = pytest.mark.tier1
+
 
 @pytest.fixture(scope="module")
 def ds():

@@ -1,0 +1,172 @@
+"""Unified Scorer protocol: legacy-entry-point equivalence, kernel-lowering
+equivalence, and index parity (IVF / graph with every scorer vs. the
+bruteforce reference) on synthetic ID and OOD query sets."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gleanvec as gv, leanvec_sphering as lvs, metrics
+from repro.core import quantization as quant
+from repro.core import scorer as sc
+from repro.core import search as msearch
+from repro.index import bruteforce, graph, ivf
+from repro.data import vectors
+
+pytestmark = pytest.mark.tier1
+
+D_LOW = 24
+C = 8
+K = 10
+KAPPA = 60
+
+
+@pytest.fixture(scope="module", params=["ood", "id"])
+def setup(request):
+    """Dataset + models + all scorers + indices, once per query regime."""
+    ood = request.param == "ood"
+    ds = vectors.make_dataset(f"scorer-{request.param}", n=3000, d=64,
+                              n_queries=96, ood=ood, seed=5)
+    X = jnp.asarray(ds.database)
+    Q = jnp.asarray(ds.queries_learn)
+    lin = lvs.fit(Q, X, D_LOW)
+    gvm = gv.fit(jax.random.PRNGKey(0), Q, X, c=C, d=D_LOW)
+    scorers = {
+        "full": sc.exact_scorer(X),
+        "sphering": sc.linear_scorer(lin, X),
+        "gleanvec": sc.gleanvec_scorer(gvm, X),
+        "sphering-int8": sc.quantized_scorer(lin, X),
+        "gleanvec-int8": sc.gleanvec_quantized_scorer(gvm, X),
+    }
+    iv = ivf.build(jax.random.PRNGKey(1), X, n_lists=16)
+    g = graph.build(ds.database, r=20, n_iters=4, seed=0)
+    return ds, X, lin, gvm, scorers, iv, g
+
+
+def _recall_after_rerank(ds, X, cand, k=K):
+    QT = jnp.asarray(ds.queries_test)
+    art = msearch.SearchArtifacts(scorer=sc.exact_scorer(X), x_full=X)
+    ids = msearch.rerank(QT, art, cand, k)
+    return float(metrics.recall_at_k(ids, jnp.asarray(ds.gt[:, :k])))
+
+
+def test_legacy_entry_points_equal_scorer_path(setup):
+    """The historical bruteforce signatures and the protocol path are the
+    same blocked scan -- bit-identical results."""
+    ds, X, lin, gvm, scorers, _, _ = setup
+    QT = jnp.asarray(ds.queries_test)
+
+    v1, i1 = bruteforce.search(QT @ lin.a.T, X @ lin.b.T, K, block=512)
+    v2, i2 = bruteforce.search_scorer(QT, scorers["sphering"], K, block=512)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-5,
+                               atol=1e-5)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+    tags, x_low = gv.encode_database(gvm, X)
+    q_views = gv.project_queries_eager(gvm, QT)
+    v1, i1 = bruteforce.search_gleanvec(q_views, tags, x_low, K, block=512)
+    v2, i2 = bruteforce.search_scorer(QT, scorers["gleanvec"], K, block=512)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4,
+                               atol=1e-4)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+    db = quant.quantize(X @ lin.b.T)
+    v1, i1 = bruteforce.search_quantized(QT @ lin.a.T, db.codes, db.lo,
+                                         db.delta, K, block=512)
+    v2, i2 = bruteforce.search_scorer(QT, scorers["sphering-int8"], K,
+                                      block=512)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4,
+                               atol=1e-4)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_kernel_lowering_matches_scan(setup):
+    """repro.kernels.scorer_topk (the kernel dispatch point) agrees with the
+    protocol's blocked scan for every scorer."""
+    from repro import kernels
+    ds, X, _, _, scorers, _, _ = setup
+    QT = jnp.asarray(ds.queries_test[:16])
+    for name, s in scorers.items():
+        v1, i1 = kernels.scorer_topk(s, QT, K)
+        v2, i2 = bruteforce.search_scorer(QT, s, K, block=512)
+        np.testing.assert_allclose(np.asarray(v1), np.asarray(v2),
+                                   rtol=1e-4, atol=1e-4, err_msg=name)
+        assert np.array_equal(np.asarray(i1), np.asarray(i2)), name
+
+
+def test_per_cluster_quantization_tight(setup):
+    """GleanVec ∘ int8 scores track the unquantized GleanVec scores within
+    the per-cluster quantization step bound."""
+    ds, X, _, gvm, scorers, _, _ = setup
+    QT = jnp.asarray(ds.queries_test[:8])
+    sq = scorers["gleanvec-int8"]
+    sgl = scorers["gleanvec"]
+    ids = jnp.arange(256)[None, :].repeat(QT.shape[0], axis=0)
+    exact = sgl.score_ids(sgl.prepare_queries(QT), ids)
+    approx = sq.score_ids(sq.prepare_queries(QT), ids)
+    err = np.abs(np.asarray(exact) - np.asarray(approx))
+    scale = np.abs(np.asarray(exact)).max()
+    assert err.max() / scale < 0.02
+
+
+@pytest.mark.parametrize("mode", ["sphering", "gleanvec", "sphering-int8",
+                                  "gleanvec-int8"])
+def test_ivf_parity_with_bruteforce(setup, mode):
+    """IVF through any scorer reaches the flat-scan recall - tolerance."""
+    ds, X, _, _, scorers, iv, _ = setup
+    QT = jnp.asarray(ds.queries_test)
+    s = scorers[mode]
+    _, flat_cand = bruteforce.search_scorer(QT, s, KAPPA, block=512)
+    r_flat = _recall_after_rerank(ds, X, flat_cand)
+    _, ivf_cand = ivf.search_scorer(QT, s, iv, k=KAPPA, nprobe=8)
+    r_ivf = _recall_after_rerank(ds, X, ivf_cand)
+    assert r_flat > 0.85, (mode, r_flat)
+    assert r_ivf >= r_flat - 0.15, (mode, r_flat, r_ivf)
+
+
+@pytest.mark.parametrize("mode", ["sphering", "gleanvec", "sphering-int8",
+                                  "gleanvec-int8"])
+def test_graph_parity_with_bruteforce(setup, mode):
+    """Graph beam search through any scorer reaches the flat-scan recall -
+    tolerance."""
+    ds, X, _, _, scorers, _, g = setup
+    QT = jnp.asarray(ds.queries_test)
+    s = scorers[mode]
+    _, flat_cand = bruteforce.search_scorer(QT, s, KAPPA, block=512)
+    r_flat = _recall_after_rerank(ds, X, flat_cand)
+    _, g_cand = graph.beam_search_scorer(QT, s, g, k=KAPPA, beam=96,
+                                         max_hops=250)
+    r_graph = _recall_after_rerank(ds, X, g_cand)
+    assert r_graph >= r_flat - 0.15, (mode, r_flat, r_graph)
+
+
+def test_graph_trace_through_protocol(setup):
+    """trace=True on a tagged scorer returns the Figure-7 tag history."""
+    ds, X, _, _, scorers, _, g = setup
+    QT = jnp.asarray(ds.queries_test[:8])
+    _, ids, hops, tag_hist = graph.beam_search_scorer(
+        QT, scorers["gleanvec"], g, k=K, beam=64, max_hops=120, trace=True)
+    th = np.asarray(tag_hist)
+    assert th.shape == (8, 120) and (th < C).all() and int(hops) > 0
+    with pytest.raises(ValueError):
+        graph.beam_search_scorer(QT, scorers["sphering"], g, k=K,
+                                 trace=True)
+
+
+def test_multi_step_search_all_modes(setup):
+    """Algorithm 1 end-to-end through build_artifacts for every mode."""
+    ds, X, lin, gvm, _, _, _ = setup
+    QT = jnp.asarray(ds.queries_test)
+    gt = jnp.asarray(ds.gt[:, :K])
+
+    def index_search(q_low, art, kappa):
+        _, cand = bruteforce.scan_scorer(art.scorer, q_low, kappa, 512)
+        return cand
+
+    for mode, model in [("full", None), ("sphering", lin),
+                        ("gleanvec", gvm), ("sphering-int8", lin),
+                        ("gleanvec-int8", gvm)]:
+        art = msearch.build_artifacts(mode, X, model)
+        ids = msearch.multi_step_search(QT, art, index_search, K, KAPPA)
+        rec = float(metrics.recall_at_k(ids, gt))
+        assert rec > 0.9, (mode, rec)
