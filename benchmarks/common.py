@@ -1,7 +1,10 @@
-"""Shared benchmark utilities: datasets, timing, CSV rows."""
+"""Shared benchmark utilities: datasets, timing, CSV rows, and the
+machine-readable per-bench JSON results (``BENCH_<name>.json``) that track
+the perf trajectory across PRs."""
 from __future__ import annotations
 
 import functools
+import json
 import os
 import time
 from typing import Callable, Dict, List
@@ -19,6 +22,7 @@ BENCH_N = int(os.environ.get("BENCH_N", 8000))
 BENCH_QUERIES = int(os.environ.get("BENCH_QUERIES", 1024))
 
 ROWS: List[str] = []
+RESULTS: List[Dict] = []
 
 
 @functools.lru_cache(maxsize=None)
@@ -42,7 +46,44 @@ def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     return float(np.median(ts) * 1e6)
 
 
+def _parse_derived(value: str):
+    """Numeric when possible ('3.20x' -> 3.2), else the raw string."""
+    for v in (value, value[:-1] if value.endswith("x") else value):
+        try:
+            return float(v)
+        except ValueError:
+            continue
+    return value
+
+
 def emit(name: str, us_per_call: float, derived: str):
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
+    entry = {"name": name, "us_per_call": round(us_per_call, 1),
+             "ops_per_s": (round(1e6 / us_per_call, 2)
+                           if us_per_call > 0 else None)}
+    for kv in derived.split(";"):
+        if "=" in kv:
+            k, v = kv.split("=", 1)
+            entry[k] = _parse_derived(v)
+    RESULTS.append(entry)
     print(row, flush=True)
+
+
+def write_json_results(out_dir: str) -> List[str]:
+    """One ``BENCH_<name>.json`` per top-level bench group (the prefix of
+    each row name, e.g. ``table1/...`` -> BENCH_table1.json), each holding
+    the structured rows emitted so far: us_per_call, ops_per_s and every
+    parsed ``derived`` field (recall10, bytes_per_vec, qps, ...)."""
+    groups: Dict[str, List[Dict]] = {}
+    for entry in RESULTS:
+        groups.setdefault(entry["name"].split("/")[0], []).append(entry)
+    paths = []
+    os.makedirs(out_dir, exist_ok=True)
+    for group, entries in sorted(groups.items()):
+        path = os.path.join(out_dir, f"BENCH_{group}.json")
+        with open(path, "w") as f:
+            json.dump({"bench": group, "results": entries}, f, indent=2)
+            f.write("\n")
+        paths.append(path)
+    return paths

@@ -9,9 +9,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.core.quantization import quantize
-from repro.kernels import (gleanvec_ip_ref, ip_topk_ref, kmeans_assign_ref,
-                           sq_dot_ref)
+from repro.core.quantization import quantize, quantize_per_cluster
+from repro.kernels import (gleanvec_ip_ref, gleanvec_sq, ip_topk_ref,
+                           kmeans_assign_ref, sq_dot_ref)
 
 
 def run(n: int = 100_000, dim: int = 512, d: int = 160, c: int = 48,
@@ -44,6 +44,39 @@ def run(n: int = 100_000, dim: int = 512, d: int = 160, c: int = 48,
     us = time_fn(f_sq, q_low, db.codes, db.lo, db.delta)
     emit("kernel/sq_dot/int8", us,
          f"bytes_per_vec={d + 8};bw_saving={dim * 4 / (d + 8):.1f}x")
+
+    # fused GleanVec∘int8 (gleanvec_sq, via the dispatcher: Pallas on TPU,
+    # jnp mirror here): tag-select + int8 dot + per-cluster affine in ONE
+    # pass over the codes, versus dequantize-then-gleanvec_ip, which reads
+    # the codes, round-trips a dense f32 reduced matrix through HBM and
+    # re-reads it with the tag. Byte counts come from the ACTUAL array
+    # dtypes, so a representation regression (e.g. f32 codes) shows up here.
+    sqc = quantize_per_cluster(x_low, tags, c)
+    q_scaled = q_views * sqc.delta[None]
+    q_lo = jnp.einsum("mcd,cd->mc", q_views, sqc.lo)
+    f_fused = jax.jit(lambda qs, ql, t, cd: gleanvec_sq(qs, ql, t, cd))
+    us_fused = time_fn(f_fused, q_scaled, q_lo, tags, sqc.codes)
+    code_b = sqc.codes.dtype.itemsize          # 1 (u8 codes)
+    tag_b = tags.dtype.itemsize                # 4 (i32 tag)
+    f32_b = x_low.dtype.itemsize               # 4 (dequant round-trip)
+    fused_bytes = d * code_b + tag_b           # one pass over the codes
+    dequant_bytes = (d * code_b + tag_b        # dequant: read codes + tag
+                     + d * f32_b               #   write dense f32 matrix
+                     + d * f32_b + tag_b)      # gleanvec_ip: re-read + tag
+    emit("kernel/gleanvec_sq/fused-int8", us_fused,
+         f"bytes_per_vec={fused_bytes};"
+         f"vs_dequant_bytes={dequant_bytes / fused_bytes:.1f}x;"
+         f"bw_saving={(dim * 4) / fused_bytes:.1f}x")
+
+    def dequant_then_ip(qv, t, cd, lo, dl):
+        x = cd.astype(jnp.float32) * dl[t] + lo[t]
+        return gleanvec_ip_ref(qv, t, x)
+
+    us_deq = time_fn(jax.jit(dequant_then_ip), q_views, tags, sqc.codes,
+                     sqc.lo, sqc.delta)
+    emit("kernel/gleanvec_sq/dequant-then-ip", us_deq,
+         f"bytes_per_vec={dequant_bytes};fused_speedup="
+         f"{us_deq / max(us_fused, 1e-9):.2f}x")
 
     f_km = jax.jit(lambda x, ce: kmeans_assign_ref(x, ce))
     us = time_fn(f_km, x_full, cent)

@@ -1,7 +1,9 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit) and
-writes them to results/bench.csv.
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit),
+writes them to results/bench.csv, and writes one machine-readable
+``BENCH_<name>.json`` per bench group (ops/s, HBM bytes moved, recall@10,
+...) next to the CSV so the perf trajectory is diffable across PRs.
 
 ``--smoke`` shrinks the datasets and runs the search-path modules only
 (table1 + kernel micros) so the perf harness itself is exercisable in CI;
@@ -33,6 +35,7 @@ def main(argv=None) -> None:
             common.BENCH_QUERIES = 64
             common.dataset.cache_clear()
             common.ROWS.clear()
+            common.RESULTS.clear()
         print("name,us_per_call,derived")
         if args.smoke:
             table1_search.run()
@@ -51,6 +54,9 @@ def main(argv=None) -> None:
             f.write("name,us_per_call,derived\n")
             f.write("\n".join(common.ROWS) + "\n")
         print(f"# wrote {len(common.ROWS)} rows to {out}")
+        for p in common.write_json_results(os.path.dirname(
+                os.path.abspath(out))):
+            print(f"# wrote {p}")
     finally:
         if args.smoke:    # restore for in-process callers (tests)
             common.BENCH_N, common.BENCH_QUERIES = saved

@@ -15,7 +15,9 @@ import numpy as np
 from benchmarks.common import dataset, emit, time_fn
 from repro.core import gleanvec as gv, leanvec_sphering as lvs, metrics
 from repro.core.quantization import quantize
-from repro.core.scorer import gleanvec_quantized_scorer
+from repro.core.scorer import (gleanvec_quantized_scorer,
+                               sorted_gleanvec_quantized_scorer,
+                               sorted_gleanvec_scorer)
 from repro.index import bruteforce, graph
 
 
@@ -95,6 +97,32 @@ def run():
     us = time_fn(gq_search)
     emit(f"table1/flat/gleanvec-d{d}-int8", us,
          f"recall10={float(metrics.recall_at_k(gq_search(), gt)):.3f};"
+         f"qps={nq / (us / 1e6):.0f}")
+
+    # tag-sorted (cluster-contiguous) layouts: one query view per block, so
+    # the scan is a plain matmul (f32) / int8 matmul + offset (int8) -- the
+    # Scorer protocol translates the sorted row order back to original ids.
+    sgl = sorted_gleanvec_scorer(model, X, block=256)
+
+    def sorted_search():
+        _, cand = bruteforce.search_scorer(QT, sgl, kappa)
+        return finish(cand)
+
+    us = time_fn(sorted_search)
+    emit(f"table1/flat/gleanvec-d{d}-sorted", us,
+         f"recall10={float(metrics.recall_at_k(sorted_search(), gt)):.3f};"
+         f"qps={nq / (us / 1e6):.0f}")
+
+    sgq = sorted_gleanvec_quantized_scorer(model, X, block=256)
+
+    def sorted_sq_search():
+        _, cand = bruteforce.search_scorer(QT, sgq, kappa)
+        return finish(cand)
+
+    us = time_fn(sorted_sq_search)
+    emit(f"table1/flat/gleanvec-d{d}-int8-sorted", us,
+         f"recall10="
+         f"{float(metrics.recall_at_k(sorted_sq_search(), gt)):.3f};"
          f"qps={nq / (us / 1e6):.0f}")
 
     # graph index (reduced space) + rerank

@@ -24,7 +24,7 @@ from repro.core import linalg, spherical_kmeans
 from repro.core.leanvec_sphering import SpheringModel
 
 __all__ = ["GleanVecModel", "fit", "fit_from_moments", "encode_database",
-           "sort_by_tag",
+           "sort_by_tag", "inverse_permutation",
            "project_queries_eager", "inner_products_lazy",
            "inner_products_eager", "per_cluster_moments"]
 
@@ -128,14 +128,15 @@ def inner_products_eager(q_views: jax.Array, tags: jax.Array,
 
 
 def sort_by_tag(tags, x_low, x_full=None, block: int = 4096):
-    """Cluster-contiguous layout for the sorted scan (see
-    index.bruteforce.search_gleanvec_sorted): sorts rows by tag, pads each
-    cluster boundary... (simple variant: global sort + per-block majority
-    tag; exact single-tag blocks require per-cluster padding, done here).
+    """Cluster-contiguous layout for the sorted scorers / scans (see
+    core.scorer.SortedGleanVecScorer): sorts rows by tag and pads each
+    cluster to a ``block`` multiple, so every block of the sorted database
+    carries exactly one tag. Works for any (n, d) row array -- f32 reduced
+    vectors or u8 codes (pads with zeros of the input dtype).
 
     Returns (x_low_sorted, block_tags, perm, x_full_sorted) where
     ``perm[i_sorted] = original id`` (padding rows map to id -1 and are
-    filled with zeros so they never win a max-inner-product).
+    filled with zeros; sorted scorers additionally mask them to -inf).
     """
     import numpy as np
     tags_np = np.asarray(tags)
@@ -167,3 +168,17 @@ def sort_by_tag(tags, x_low, x_full=None, block: int = 4096):
     x_full_sorted = (None if full_rows is None
                      else jnp.asarray(np.concatenate(full_rows, axis=0)))
     return x_low_sorted, block_tags, perm, x_full_sorted
+
+
+def inverse_permutation(perm, n: int):
+    """``inv[original_id] = sorted row`` for a ``sort_by_tag`` permutation.
+
+    ``perm (n_sorted,)`` maps sorted rows to original ids (-1 = padding);
+    every original id in [0, n) appears exactly once, so ``inv`` is total.
+    """
+    import numpy as np
+    perm_np = np.asarray(perm)
+    inv = np.full(n, -1, np.int32)
+    valid = perm_np >= 0
+    inv[perm_np[valid]] = np.nonzero(valid)[0].astype(np.int32)
+    return jnp.asarray(inv)

@@ -73,7 +73,8 @@ def build_artifacts_gleanvec(model, database: jax.Array) -> SearchArtifacts:
 def build_artifacts(mode: str, database: jax.Array,
                     model=None) -> SearchArtifacts:
     """Mode-string construction covering every scorer (see ``scorer.MODES``):
-    full / sphering / gleanvec / sphering-int8 / gleanvec-int8."""
+    full / sphering / gleanvec / sphering-int8 / gleanvec-int8 /
+    gleanvec-sorted / gleanvec-int8-sorted."""
     return SearchArtifacts(scorer=sc.build_scorer(mode, database, model),
                            x_full=jnp.asarray(database, jnp.float32),
                            model=model)

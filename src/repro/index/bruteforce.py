@@ -2,16 +2,17 @@
 scan over any :mod:`repro.core.scorer` implementation.
 
 ``scan_scorer`` is the single scan: it pads the scorer's rows to a block
-multiple, scores (batch, block) tiles via ``scorer.score_block`` and keeps a
-running top-k. The historical per-representation entry points (``search`` /
-``search_gleanvec`` / ``search_quantized``) are thin wrappers that build the
-corresponding scorer; they are kept because their signatures mirror the
-Pallas kernels (``ip_topk`` / ``gleanvec_ip`` / ``sq_dot``) they lower to on
-TPU (see ``repro.kernels.scorer_topk``).
-
-``search_gleanvec_sorted`` is the one deliberate exception: the tag-sorted
-(cluster-contiguous) layout degenerates each block to a single query view,
-which is a layout property, not a scoring mode.
+multiple, scores (batch, block) tiles via ``scorer.score_block``, keeps a
+running top-k, and maps the winning rows to external ids through the
+protocol's ``translate_ids`` -- so scorers with a private internal layout
+(the tag-sorted ones, whose ``layout_block`` also overrides the scan block
+so every block stays single-tag) return original database ids like everyone
+else. The historical per-representation entry points (``search`` /
+``search_gleanvec`` / ``search_gleanvec_sorted`` / ``search_quantized``)
+are thin wrappers that build the corresponding scorer; they are kept
+because their signatures mirror the Pallas kernels (``ip_topk`` /
+``gleanvec_ip`` / ``gleanvec_sq``) they lower to on TPU (see
+``repro.kernels.scorer_topk``).
 """
 from __future__ import annotations
 
@@ -21,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.scorer import (GleanVecScorer, LinearScorer,
-                               QuantizedScorer, batch_of)
+                               QuantizedScorer, SortedGleanVecScorer,
+                               batch_of)
 from repro.index import topk
 
 __all__ = ["scan_scorer", "search_scorer", "search", "search_gleanvec",
@@ -32,16 +34,20 @@ __all__ = ["scan_scorer", "search_scorer", "search", "search_gleanvec",
 def scan_scorer(scorer, qstate, k: int, block: int = 4096):
     """Blocked top-k scan of any scorer with prepared queries ``qstate``.
 
-    Returns (vals, ids): (m, k) each; peak memory one (m, block) tile.
+    Returns (vals, ids): (m, k) each, ids in the scorer's EXTERNAL id
+    space; peak memory one (m, block) tile. Scorers with a fixed internal
+    layout (``layout_block`` attribute) override ``block``.
     """
     n = scorer.n_rows
     m = batch_of(qstate)
+    block = getattr(scorer, "layout_block", block)
     padded = scorer.pad_rows((-n) % block)
 
     def score_block(start):
         return padded.score_block(qstate, start, block)
 
-    return topk.blocked_topk(score_block, n, k, block, m)
+    vals, ids = topk.blocked_topk(score_block, n, k, block, m)
+    return vals, scorer.translate_ids(ids)
 
 
 def search_scorer(queries: jax.Array, scorer, k: int, block: int = 4096):
@@ -68,31 +74,22 @@ def search_quantized(q_low: jax.Array, codes: jax.Array, lo: jax.Array,
     return scan_scorer(scorer, scorer.prepare_queries(q_low), k, block)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block"))
 def search_gleanvec_sorted(q_views: jax.Array, block_tags: jax.Array,
                            x_low: jax.Array, k: int, block: int = 4096):
-    """Eager GleanVec over a TAG-SORTED (cluster-contiguous) database.
+    """Eager GleanVec over a TAG-SORTED (cluster-contiguous) database: one
+    query view per block, one (m, d) x (d, block) matmul per block (the
+    13x-lower-HBM-write layout the Perf log quantifies).
 
-    With the database sorted by cluster tag (clusters padded to ``block``
-    multiples), every block has ONE tag, so scoring degenerates to a single
-    (m, d) x (d, block) matmul per block -- no per-row view gather, no
-    one-hot: exactly the FLOPs and bytes of the plain LeanVec scan plus one
-    tag lookup per block. This is the beyond-paper layout optimization the
-    Perf log quantifies (13x lower HBM writes than the gather formulation).
-
-    ``block_tags (n_blocks,)``: tag of each block. Returned ids live in the
-    sorted space; translate through the sort permutation.
+    Thin wrapper over the same blocked scan: builds a
+    :class:`~repro.core.scorer.SortedGleanVecScorer` with an IDENTITY
+    permutation, so -- like the historical entry point -- the returned ids
+    live in the sorted row space and callers who built the layout with
+    ``gleanvec.sort_by_tag`` translate through their own permutation. New
+    code should build the scorer with ``sorted_gleanvec_scorer`` instead
+    and let the protocol translate ids.
     """
-    m = q_views.shape[0]
     n = x_low.shape[0]
-    assert n % block == 0, "pad the sorted database to a block multiple"
-
-    def score_block(start):
-        blk = jax.lax.dynamic_slice_in_dim(x_low, start, block, axis=0)
-        tag = jax.lax.dynamic_index_in_dim(block_tags, start // block,
-                                           keepdims=False)
-        q_sel = jax.lax.dynamic_index_in_dim(q_views, tag, axis=1,
-                                             keepdims=False)  # (m, d)
-        return q_sel @ blk.T
-
-    return topk.blocked_topk(score_block, n, k, block, m)
+    ident = jnp.arange(n, dtype=jnp.int32)
+    scorer = SortedGleanVecScorer(x_low=x_low, block_tags=block_tags,
+                                  perm=ident, inv_perm=ident)
+    return scan_scorer(scorer, q_views, k, block)

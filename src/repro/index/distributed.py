@@ -8,8 +8,14 @@ all-gather of (batch, shards * kappa) (value, id) pairs -- the id space
 stays global because each shard offsets its local ids.
 
 Because scorers are pytrees with a ``shard_specs`` method, ONE shard_map
-wrapper serves every representation: linear, eager GleanVec, int8 and
-GleanVec∘int8 all shard with the same single all-gather merge.
+wrapper serves every representation: linear, eager GleanVec, int8,
+GleanVec∘int8 and both tag-sorted layouts all shard with the same single
+all-gather merge. Globalizing the per-shard ids goes through the
+protocol's ``globalize_ids``: row-aligned scorers offset by the shard row
+count; sorted scorers translate through their permutation (which must hold
+GLOBAL original ids -- build the sorted layout over the global database,
+then row-shard it; the shard count must divide the single-tag block
+count).
 
 Implemented with shard_map so the collective schedule is explicit and stable
 for the roofline analysis.
@@ -39,8 +45,11 @@ def _local_merge(queries, scorer, mesh: Mesh, axes, k: int, kappa: int,
     idx = jnp.zeros((), jnp.int32)       # shard index along flattened axes
     for a in axes:
         idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
-    rows = scorer.n_rows                 # local (per-shard) row count
-    ids = jnp.where(ids >= 0, ids + idx * rows, -1)
+    # Row-aligned scorers offset their local ids by the shard's row count;
+    # sorted scorers already emit global ids through their permutation
+    # (their shard of ``perm`` holds global original ids) -- the protocol's
+    # globalize_ids encapsulates the difference.
+    ids = scorer.globalize_ids(ids, idx)
     vals = jax.lax.all_gather(vals, axes, axis=1, tiled=True)
     ids = jax.lax.all_gather(ids, axes, axis=1, tiled=True)
     top_vals, sel = jax.lax.top_k(vals, k)

@@ -11,9 +11,10 @@ GleanVec (Alg. 4: per-tag query views) and int8-quantized databases.
 The scoring function is the unified Scorer protocol
 (:mod:`repro.core.scorer`): ``beam_search_scorer`` accepts any scorer and
 scores each hop's gathered neighbor expansion with ``scorer.score_ids``, so
-the same traversal serves plain LeanVec, eager GleanVec (Alg. 4), int8 and
-GleanVec∘int8 databases. The legacy per-representation entry points are
-thin wrappers over it.
+the same traversal serves plain LeanVec, eager GleanVec (Alg. 4), int8,
+GleanVec∘int8 and the tag-sorted layouts (graph edges store ORIGINAL ids;
+sorted scorers translate internally). The legacy per-representation entry
+points are thin wrappers over it.
 
 The traversal also (optionally) records the cluster tag of every expanded
 vertex -- the data behind the paper's Figure 7 (tag access pattern favoring

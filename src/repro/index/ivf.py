@@ -7,10 +7,11 @@ contraction, so the whole query batch stays on the MXU.
 
 Fine scoring goes through the unified Scorer protocol
 (:mod:`repro.core.scorer`): ``search_scorer`` accepts any scorer (linear,
-eager GleanVec, int8, GleanVec∘int8) and scores the gathered posting lists
-with ``scorer.score_ids`` -- tag gathers and dequant-free int8 dots come
-with the scorer, not with this index. The coarse probe always runs in the
-full dimension (the centers live in R^D).
+eager GleanVec, int8, GleanVec∘int8, and the tag-sorted layouts) and scores
+the gathered posting lists with ``scorer.score_ids`` -- tag gathers,
+dequant-free int8 dots and sorted-layout id translation come with the
+scorer, not with this index: posting lists always store ORIGINAL ids. The
+coarse probe always runs in the full dimension (the centers live in R^D).
 """
 from __future__ import annotations
 

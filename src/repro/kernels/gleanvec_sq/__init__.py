@@ -1,0 +1,7 @@
+from repro.kernels.gleanvec_sq.ops import gleanvec_sq, gleanvec_sq_topk
+from repro.kernels.gleanvec_sq.ref import (gleanvec_sq_ref,
+                                           gleanvec_sq_sorted_ref,
+                                           gleanvec_sq_topk_ref)
+
+__all__ = ["gleanvec_sq", "gleanvec_sq_topk", "gleanvec_sq_ref",
+           "gleanvec_sq_sorted_ref", "gleanvec_sq_topk_ref"]

@@ -1,0 +1,246 @@
+"""Pallas TPU kernel: fused GleanVec ∘ int8 scoring (LeanVec composition).
+
+One pass over the codes does all three steps of the per-cluster scalar-
+quantized scoring (core/scorer.GleanVecQuantizedScorer):
+
+    tag-select   q_sel  = q_scaled[m, tags[n]]      (one-hot MXU matmul)
+    int8 dot     s      = <q_sel, codes_n>          (u8 -> f32 on load)
+    affine       score  = s + q_lo[m, tags[n]]      (per-cluster offset)
+
+The per-cluster scales/offsets are folded into the prepared queries OUTSIDE
+the N loop (<q_c, u*delta_c + lo_c> = <q_c*delta_c, u> + <q_c, lo_c>), so
+HBM traffic per database vector is d bytes of codes + 4 bytes of tag --
+versus d*4 + 4 for the float GleanVec kernel and 9*d + 8 for
+dequantize-then-``gleanvec_ip`` (codes read + f32 round-trip + second read).
+
+Two layouts share the kernel body:
+
+  * gathered (``sorted_layout=False``): per-row ``tags (N,)``; the
+    tag-selected views are materialized with a (TN, C) x (C, d) one-hot
+    matmul per query row, exactly like ``gleanvec_ip`` (TPU has no efficient
+    in-VMEM row gather; the one-hot FLOPs ride on idle MXU cycles in this
+    bandwidth-bound regime).
+  * sorted (``sorted_layout=True``): the database is tag-sorted and
+    cluster-padded so every (TN, d) tile carries ONE tag -- scoring
+    degenerates to a single (TM, d) x (d, TN) matmul plus a broadcast add,
+    the same FLOPs and bytes as the plain int8 scan. ``tags`` shrinks to one
+    entry per layout block.
+
+The fused top-k variants fold each score tile into a running (TM, k) top-k
+held in the revisited output block across the sequential N grid dimension
+(same scheme as ``ip_topk``) -- the dense (M, N) score matrix never exists.
+Candidate ids come from an explicit ``row_ids (N,)`` input (-1 = masked), so
+sorted layouts emit ORIGINAL database ids straight from the kernel and
+padding rows can never win.
+
+VMEM per step (TM=8, TN=512, C=48, d=160): q views 240 KiB + offsets 1.5 KiB
++ codes 80 KiB (u8) + scores 16 KiB << 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -3.4e38  # python scalar: safe to close over inside the kernel
+
+
+def _tile_scores(qs, qlo, tags, x, *, c: int, sorted_layout: bool):
+    """(TM, TN) score tile. ``qs (TM, C, d)``, ``qlo (TM, C)``, ``x (TN, d)``
+    codes (any dtype, cast on load), ``tags``: (TN,) row tags, or (1,) tile
+    tag when ``sorted_layout``."""
+    x = x.astype(jnp.float32)
+    if sorted_layout:
+        tag = tags[0]
+        q = jax.lax.dynamic_index_in_dim(qs, tag, axis=1,
+                                         keepdims=False)       # (TM, d)
+        lo = jax.lax.dynamic_index_in_dim(qlo, tag, axis=1,
+                                          keepdims=False)      # (TM,)
+        s = jax.lax.dot_general(q, x, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        return s + lo[:, None]
+
+    tm = qs.shape[0]
+    onehot = (tags[:, None]
+              == jax.lax.broadcasted_iota(jnp.int32, (tags.shape[0], c), 1)
+              ).astype(jnp.float32)                            # (TN, C)
+
+    def per_query(mi, acc):
+        q_sel = jax.lax.dot_general(
+            onehot, qs[mi], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)                # (TN, d)
+        lo_sel = jax.lax.dot_general(
+            onehot, qlo[mi][:, None], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)                # (TN, 1)
+        s = jnp.sum(q_sel * x, axis=1) + lo_sel[:, 0]
+        return jax.lax.dynamic_update_index_in_dim(acc, s, mi, 0)
+
+    init = jnp.zeros((tm, x.shape[0]), jnp.float32)
+    return jax.lax.fori_loop(0, tm, per_query, init)
+
+
+def _dense_kernel(qs_ref, qlo_ref, tags_ref, x_ref, out_ref, *, c: int,
+                  sorted_layout: bool):
+    out_ref[...] = _tile_scores(qs_ref[...].astype(jnp.float32),
+                                qlo_ref[...].astype(jnp.float32),
+                                tags_ref[...], x_ref[...], c=c,
+                                sorted_layout=sorted_layout)
+
+
+def _topk_kernel(qs_ref, qlo_ref, tags_ref, rid_ref, x_ref, vals_ref,
+                 ids_ref, *, c: int, k: int, sorted_layout: bool):
+    nj = pl.program_id(1)
+
+    @pl.when(nj == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, NEG_INF)
+        ids_ref[...] = jnp.full_like(ids_ref, -1)
+
+    scores = _tile_scores(qs_ref[...].astype(jnp.float32),
+                          qlo_ref[...].astype(jnp.float32),
+                          tags_ref[...], x_ref[...], c=c,
+                          sorted_layout=sorted_layout)
+    col_ids = jnp.broadcast_to(rid_ref[...][None, :], scores.shape)
+    scores = jnp.where(col_ids >= 0, scores, NEG_INF)
+
+    # fold the tile into the running top-k: k rounds of max/mask over the
+    # concatenated (TM, TN + k) candidates (same scheme as ip_topk).
+    cat_v = jnp.concatenate([vals_ref[...], scores], axis=1)
+    cat_i = jnp.concatenate([ids_ref[...], col_ids], axis=1)
+
+    def fold(j, carry):
+        cat_v, cat_i, out_v, out_i = carry
+        best = jnp.max(cat_v, axis=1)                          # (TM,)
+        arg = jnp.argmax(cat_v, axis=1)                        # (TM,)
+        bid = jnp.take_along_axis(cat_i, arg[:, None], axis=1)[:, 0]
+        out_v = jax.lax.dynamic_update_index_in_dim(out_v, best, j, 1)
+        out_i = jax.lax.dynamic_update_index_in_dim(out_i, bid, j, 1)
+        hit = (jax.lax.broadcasted_iota(jnp.int32, cat_v.shape, 1)
+               == arg[:, None])
+        cat_v = jnp.where(hit, NEG_INF, cat_v)
+        return cat_v, cat_i, out_v, out_i
+
+    out_v = jnp.zeros_like(vals_ref)
+    out_i = jnp.zeros_like(ids_ref)
+    _, _, out_v, out_i = jax.lax.fori_loop(
+        0, k, fold, (cat_v, cat_i, out_v, out_i))
+    vals_ref[...] = out_v
+    ids_ref[...] = out_i
+
+
+def _pad0(x, pad, fill=0):
+    if not pad:
+        return x
+    widths = ((0, pad),) + ((0, 0),) * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def _tag_spec(tn: int, layout_block: int, sorted_layout: bool):
+    """BlockSpec of the tags input: per-row tags for gathered tiles, one tag
+    per tile (layout_block // tn tiles share a block tag) when sorted."""
+    if not sorted_layout:
+        return pl.BlockSpec((tn,), lambda i, j: (j,))
+    bpt = layout_block // tn                   # tiles per layout block
+    return pl.BlockSpec((1,), lambda i, j: (j // bpt,))
+
+
+@functools.partial(jax.jit, static_argnames=("layout_block", "tm", "tn",
+                                             "interpret"))
+def gleanvec_sq(q_scaled: jax.Array, q_lo: jax.Array, tags: jax.Array,
+                codes: jax.Array, layout_block: int = 0, tm: int = 8,
+                tn: int = 512, interpret: bool = False):
+    """Dense fused scores. ``q_scaled (M, C, d)``, ``q_lo (M, C)``,
+    ``codes (N, d)`` u8 (or f32 for the unquantized sorted scorer) ->
+    ``(M, N) f32``.
+
+    ``layout_block == 0``: gathered layout, ``tags (N,)`` per-row.
+    ``layout_block > 0``: tag-sorted layout, ``tags (N // layout_block,)``
+    per-block; requires ``layout_block % tn == 0``.
+    """
+    m, c, d = q_scaled.shape
+    n = codes.shape[0]
+    srt = layout_block > 0
+    if srt:
+        assert n % layout_block == 0 and layout_block % tn == 0, \
+            (n, layout_block, tn)
+    tm = min(tm, max(1, m))
+    m_pad = (-m) % tm
+    n_pad = 0 if srt else (-n) % tn
+    q_scaled = _pad0(q_scaled, m_pad)
+    q_lo = _pad0(q_lo, m_pad)
+    codes = _pad0(codes, n_pad)
+    if not srt:
+        tags = _pad0(tags, n_pad)
+    grid = ((m + m_pad) // tm, (n + n_pad) // tn)
+
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, c=c, sorted_layout=srt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, c, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((tm, c), lambda i, j: (i, 0)),
+            _tag_spec(tn, layout_block, srt),
+            pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + m_pad, n + n_pad), jnp.float32),
+        interpret=interpret,
+    )(q_scaled, q_lo, tags, codes)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "layout_block", "tm", "tn",
+                                             "interpret"))
+def gleanvec_sq_topk(q_scaled: jax.Array, q_lo: jax.Array, tags: jax.Array,
+                     codes: jax.Array, k: int, row_ids=None,
+                     layout_block: int = 0, tm: int = 8, tn: int = 512,
+                     interpret: bool = False):
+    """Fused scoring + blocked top-k: the (M, N) score matrix never
+    materializes. Returns (vals (M, k) f32, ids (M, k) i32).
+
+    ``row_ids (N,)`` optional external id of each row (-1 = padding, can
+    never win); defaults to ``arange(N)``. Sorted layouts pass their sort
+    permutation here so the kernel emits ORIGINAL database ids.
+    """
+    m, c, d = q_scaled.shape
+    n = codes.shape[0]
+    srt = layout_block > 0
+    if srt:
+        assert n % layout_block == 0 and layout_block % tn == 0, \
+            (n, layout_block, tn)
+    if row_ids is None:
+        row_ids = jnp.arange(n, dtype=jnp.int32)
+    tm = min(tm, max(1, m))
+    m_pad = (-m) % tm
+    n_pad = 0 if srt else (-n) % tn
+    q_scaled = _pad0(q_scaled, m_pad)
+    q_lo = _pad0(q_lo, m_pad)
+    codes = _pad0(codes, n_pad)
+    row_ids = _pad0(row_ids.astype(jnp.int32), n_pad, fill=-1)
+    if not srt:
+        tags = _pad0(tags, n_pad)
+    grid = ((m + m_pad) // tm, (n + n_pad) // tn)
+
+    vals, ids = pl.pallas_call(
+        functools.partial(_topk_kernel, c=c, k=k, sorted_layout=srt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, c, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((tm, c), lambda i, j: (i, 0)),
+            _tag_spec(tn, layout_block, srt),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+            pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m + m_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((m + m_pad, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_scaled, q_lo, tags, row_ids, codes)
+    return vals[:m], ids[:m]

@@ -1,0 +1,77 @@
+"""Public ops: fused GleanVec ∘ int8 scoring with Pallas kernel + fallback.
+
+``layout_block > 0`` selects the tag-sorted (cluster-contiguous) path:
+``tags`` holds ONE tag per layout block and each kernel tile is single-tag
+(one matmul, no one-hot). When the tile size doesn't divide the layout
+block, the dispatcher degrades gracefully: it shrinks the tile to the
+layout block when possible, else expands the block tags to per-row tags and
+runs the gathered kernel -- never wrong, only slower.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gleanvec_sq.gleanvec_sq import (gleanvec_sq
+                                                   as _pallas_gleanvec_sq)
+from repro.kernels.gleanvec_sq.gleanvec_sq import (gleanvec_sq_topk
+                                                   as _pallas_sq_topk)
+from repro.kernels.gleanvec_sq.ref import (gleanvec_sq_ref,
+                                           gleanvec_sq_sorted_ref,
+                                           gleanvec_sq_topk_ref)
+
+
+def _sorted_tiling(n: int, layout_block: int, tn: int):
+    """(layout_block, tn, row_tags_needed) for the sorted kernel path."""
+    if layout_block % tn == 0 and n % layout_block == 0:
+        return layout_block, tn, False
+    if tn % layout_block == 0 and n % layout_block == 0:
+        return layout_block, layout_block, False   # shrink tile to block
+    return 0, tn, True                             # gathered fallback
+
+
+def gleanvec_sq(q_scaled: jax.Array, q_lo: jax.Array, tags: jax.Array,
+                codes: jax.Array, layout_block: int = 0, tm: int = 8,
+                tn: int = 512, use_pallas: bool | None = None,
+                interpret: bool = False):
+    """``q_scaled (M, C, d)``, ``q_lo (M, C)``, ``codes (N, d)`` ->
+    ``(M, N) f32``. ``tags``: (N,) rows, or (N // layout_block,) blocks when
+    ``layout_block > 0``."""
+    if use_pallas is None:
+        use_pallas = interpret or jax.default_backend() == "tpu"
+    if not use_pallas:
+        if layout_block > 0:
+            return gleanvec_sq_sorted_ref(q_scaled, q_lo, tags, codes,
+                                          layout_block)
+        return gleanvec_sq_ref(q_scaled, q_lo, tags, codes)
+    if layout_block > 0:
+        lb, tn, expand = _sorted_tiling(codes.shape[0], layout_block, tn)
+        if expand:
+            tags = jnp.repeat(tags, layout_block)
+        layout_block = lb
+    return _pallas_gleanvec_sq(q_scaled, q_lo, tags, codes,
+                               layout_block=layout_block, tm=tm, tn=tn,
+                               interpret=interpret)
+
+
+def gleanvec_sq_topk(q_scaled: jax.Array, q_lo: jax.Array, tags: jax.Array,
+                     codes: jax.Array, k: int, row_ids=None,
+                     layout_block: int = 0, tm: int = 8, tn: int = 512,
+                     use_pallas: bool | None = None, interpret: bool = False):
+    """Fused score + top-k (never materializes (M, N)). ``row_ids (N,)``:
+    external id per row (-1 = masked padding); sorted layouts pass their
+    sort permutation so ids come out in the ORIGINAL space."""
+    if use_pallas is None:
+        use_pallas = interpret or jax.default_backend() == "tpu"
+    if not use_pallas:
+        return gleanvec_sq_topk_ref(q_scaled, q_lo, tags, codes, k,
+                                    row_ids=row_ids,
+                                    layout_block=layout_block)
+    if layout_block > 0:
+        lb, tn, expand = _sorted_tiling(codes.shape[0], layout_block, tn)
+        if expand:
+            tags = jnp.repeat(tags, layout_block)
+        layout_block = lb
+    return _pallas_sq_topk(q_scaled, q_lo, tags, codes, k, row_ids=row_ids,
+                           layout_block=layout_block, tm=tm, tn=tn,
+                           interpret=interpret)

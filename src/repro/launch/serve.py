@@ -3,9 +3,10 @@ synthetic collection with selectable scoring mode.
 
     PYTHONPATH=src python -m repro.launch.serve --mode gleanvec --n 50000
 
-Every mode (full / sphering / gleanvec / sphering-int8 / gleanvec-int8)
-runs through the same SearchArtifacts + Scorer path -- the mode string is
-the only thing that differs between a full-precision service and a
+Every mode (full / sphering / gleanvec / sphering-int8 / gleanvec-int8 /
+gleanvec-sorted / gleanvec-int8-sorted) runs through the same
+SearchArtifacts + Scorer path -- the mode string is the only thing that
+differs between a full-precision service and a cluster-contiguous
 GleanVec+int8 one.
 """
 from __future__ import annotations

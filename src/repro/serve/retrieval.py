@@ -4,18 +4,26 @@
 MIPS workload GleanVec accelerates. Scoring modes are the unified Scorer
 protocol's (:mod:`repro.core.scorer`), selected by string:
 
-  * "full":          exact dot against full-D candidate embeddings;
-  * "sphering":      LeanVec-Sphering multi-step (reduced scan + rerank);
-  * "gleanvec":      GleanVec multi-step (eager per-cluster views + rerank);
-  * "sphering-int8": int8 SQ on top of the reduced vectors (LeanVec comp.);
-  * "gleanvec-int8": int8 SQ on top of the per-cluster reduced vectors.
+  * "full":               exact dot against full-D candidate embeddings;
+  * "sphering":           LeanVec-Sphering multi-step (reduced scan +
+    rerank);
+  * "gleanvec":           GleanVec multi-step (eager per-cluster views +
+    rerank);
+  * "sphering-int8":      int8 SQ on top of the reduced vectors (LeanVec
+    composition);
+  * "gleanvec-int8":      int8 SQ on top of the per-cluster reduced vectors;
+  * "gleanvec-sorted":    GleanVec in the tag-sorted (cluster-contiguous)
+    layout -- one query view per block, plain matmul scan;
+  * "gleanvec-int8-sorted": the int8 composition in the tag-sorted layout
+    (d bytes of HBM per candidate AND no per-row view gather).
 
-All five run through the SAME blocked scan + rerank; there is no per-mode
-code path and no model-type dispatch here. The reduced scans land on the
-``ip_topk`` / ``gleanvec_ip`` / ``sq_dot`` Pallas kernels on TPU and their
-jnp mirrors elsewhere (see ``repro.kernels.scorer_topk``). Bandwidth per
-candidate drops from D*4 bytes to d*4 (+1 tag) or d*1, which is the
-paper's whole point.
+All modes run through the SAME blocked scan + rerank; there is no per-mode
+code path and no model-type dispatch here -- the sorted layouts translate
+their internal row order back to candidate ids inside the Scorer protocol.
+The reduced scans land on the ``ip_topk`` / ``gleanvec_ip`` / ``sq_dot`` /
+``gleanvec_sq`` Pallas kernels on TPU and their jnp mirrors elsewhere (see
+``repro.kernels.scorer_topk``). Bandwidth per candidate drops from D*4
+bytes to d*4 (+1 tag) or d*1, which is the paper's whole point.
 """
 from __future__ import annotations
 

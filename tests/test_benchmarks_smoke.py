@@ -56,7 +56,11 @@ def test_table1_and_kernels():
 
 
 def test_run_smoke_path(tmp_path):
-    """The CLI harness --smoke path runs end-to-end and writes the CSV."""
+    """The CLI harness --smoke path runs end-to-end, writes the CSV and the
+    machine-readable BENCH_<name>.json files, and covers the sorted and
+    fused-int8 modes."""
+    import json
+
     from benchmarks import run as bench_run
     out = tmp_path / "bench.csv"
     bench_run.main(["--smoke", "--out", str(out)])
@@ -64,4 +68,23 @@ def test_run_smoke_path(tmp_path):
     assert rows[0] == "name,us_per_call,derived"
     assert any(r.startswith("table1/flat/gleanvec-") and "-int8" in r
                for r in rows)
-    assert any(r.startswith("kernel/") for r in rows)
+    assert any(r.startswith("table1/flat/gleanvec-") and "-sorted" in r
+               for r in rows)
+    assert any(r.startswith("table1/flat/gleanvec-")
+               and "-int8-sorted" in r for r in rows)
+    assert any(r.startswith("kernel/gleanvec_sq/fused-int8") for r in rows)
+
+    # machine-readable trajectory: one BENCH_<group>.json per bench group
+    table1 = json.loads((tmp_path / "BENCH_table1.json").read_text())
+    assert table1["bench"] == "table1"
+    assert all("us_per_call" in e and "ops_per_s" in e
+               for e in table1["results"])
+    assert any(isinstance(e.get("recall10"), float)
+               for e in table1["results"])
+    kern = json.loads((tmp_path / "BENCH_kernel.json").read_text())
+    fused = next(e for e in kern["results"]
+                 if e["name"] == "kernel/gleanvec_sq/fused-int8")
+    # acceptance: the fused kernel moves >= 5x fewer HBM bytes than
+    # dequantize-then-gleanvec_ip on the micro-bench shapes
+    assert fused["vs_dequant_bytes"] >= 5.0
+    assert isinstance(fused["bytes_per_vec"], float)

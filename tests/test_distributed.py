@@ -51,23 +51,40 @@ def test_sharded_search_exact():
 
 
 def test_sharded_scorer_search_matches_local():
-    """Any scorer shards with the same all-gather merge: GleanVec and
-    GleanVec∘int8 sharded searches match the single-device scan."""
+    """Any scorer shards with the same all-gather merge: GleanVec,
+    GleanVec∘int8 and both TAG-SORTED layouts match the single-device scan
+    (sorted scorers emit global original ids through their permutation, so
+    the merge skips the shard offset via globalize_ids)."""
     out = _run("""
+        from repro.core import gleanvec as gv
         from repro.core.scorer import (GleanVecScorer,
-                                       GleanVecQuantizedScorer)
+                                       GleanVecQuantizedScorer,
+                                       SortedGleanVecScorer,
+                                       SortedGleanVecQuantizedScorer)
         from repro.core.quantization import quantize_per_cluster
         from repro.index import bruteforce, distributed
         rng = np.random.default_rng(0)
         n, d, dim, C = 2048, 16, 32, 4
         x_low = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
-        tags = jnp.asarray(rng.integers(0, C, n).astype(np.int32))
+        # balanced tags: 4 clusters x 512 rows, layout block 256 -> 8
+        # single-tag blocks, one per device (shards must not split blocks)
+        tags = jnp.asarray(np.repeat(np.arange(C), n // C)[
+            rng.permutation(n)].astype(np.int32))
         a = jnp.asarray(rng.standard_normal((C, d, dim)).astype(np.float32))
         Q = jnp.asarray(rng.standard_normal((8, dim)).astype(np.float32))
         sq = quantize_per_cluster(x_low, tags, C)
+        xs, btags, perm, _ = gv.sort_by_tag(tags, x_low, block=256)
+        cs, _, _, _ = gv.sort_by_tag(tags, sq.codes, block=256)
+        inv = gv.inverse_permutation(perm, n)
+        perm = perm.astype(jnp.int32)
         for s in (GleanVecScorer(x_low=x_low, tags=tags, a=a),
                   GleanVecQuantizedScorer(codes=sq.codes, tags=tags,
-                                          lo=sq.lo, delta=sq.delta, a=a)):
+                                          lo=sq.lo, delta=sq.delta, a=a),
+                  SortedGleanVecScorer(x_low=xs, block_tags=btags,
+                                       perm=perm, inv_perm=inv, a=a),
+                  SortedGleanVecQuantizedScorer(
+                      codes=cs, block_tags=btags, perm=perm, inv_perm=inv,
+                      lo=sq.lo, delta=sq.delta, a=a)):
             v_ref, i_ref = bruteforce.search_scorer(Q, s, 5, block=256)
             with set_mesh(mesh):
                 fn = distributed.make_sharded_search_scorer(

@@ -4,9 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.quantization import quantize
+from repro.core.quantization import quantize, quantize_per_cluster
 from repro.kernels import (flash_attention, flash_attention_ref, gleanvec_ip,
-                           gleanvec_ip_ref, ip_topk, ip_topk_ref,
+                           gleanvec_ip_ref, gleanvec_sq, gleanvec_sq_ref,
+                           gleanvec_sq_sorted_ref, gleanvec_sq_topk,
+                           gleanvec_sq_topk_ref, ip_topk, ip_topk_ref,
                            kmeans_assign, kmeans_assign_ref, sq_dot,
                            sq_dot_ref)
 
@@ -15,6 +17,17 @@ RNG = np.random.default_rng(0)
 
 def _randn(*shape, dtype=np.float32):
     return jnp.asarray(RNG.standard_normal(shape).astype(dtype))
+
+
+def _sq_inputs(m, n, c, d):
+    """Random per-cluster int8 database + query-side folded affine terms."""
+    x_low = _randn(n, d)
+    tags = jnp.asarray(RNG.integers(0, c, n).astype(np.int32))
+    db = quantize_per_cluster(x_low, tags, c)
+    q_views = _randn(m, c, d)
+    q_scaled = q_views * db.delta[None]
+    q_lo = jnp.einsum("mcd,cd->mc", q_views, db.lo)
+    return q_scaled, q_lo, tags, db.codes
 
 
 @pytest.mark.parametrize("m,n,d,k,tm,tn", [
@@ -55,6 +68,79 @@ def test_gleanvec_ip_matches_ref(m, n, c, d, tm, tn):
     b = gleanvec_ip_ref(q_views, tags, x_low)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
                                atol=1e-4)
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("m,n,c,d,tm,tn", [
+    (3, 300, 8, 24, 2, 128),
+    (5, 1000, 16, 48, 4, 256),      # non-divisible m/n -> padding
+    (1, 100, 48, 192, 1, 64),       # paper C=48, d=192 (t2i)
+])
+def test_gleanvec_sq_matches_ref(m, n, c, d, tm, tn):
+    """Fused tag-select + int8 dot + per-cluster affine == jnp oracle."""
+    q_scaled, q_lo, tags, codes = _sq_inputs(m, n, c, d)
+    a = gleanvec_sq(q_scaled, q_lo, tags, codes, tm=tm, tn=tn,
+                    interpret=True)
+    b = gleanvec_sq_ref(q_scaled, q_lo, tags, codes)
+    scale = float(jnp.abs(b).max())
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-2,
+                               atol=1e-2 * scale)
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("m,nb,c,d,lb,tn", [
+    (4, 8, 6, 32, 128, 64),         # layout_block % tn == 0
+    (3, 5, 8, 48, 64, 256),         # tn shrunk to the layout block
+    (2, 6, 4, 16, 96, 256),         # neither divides -> gathered fallback
+])
+def test_gleanvec_sq_sorted_matches_ref(m, nb, c, d, lb, tn):
+    """Single-tag-per-tile sorted path == expanded-tags oracle, including
+    the tile-shrink and gathered fallbacks of the dispatcher."""
+    n = nb * lb
+    q_scaled, q_lo, _, codes = _sq_inputs(m, n, c, d)
+    block_tags = jnp.asarray(RNG.integers(0, c, nb).astype(np.int32))
+    a = gleanvec_sq(q_scaled, q_lo, block_tags, codes, layout_block=lb,
+                    tm=2, tn=tn, interpret=True)
+    b = gleanvec_sq_sorted_ref(q_scaled, q_lo, block_tags, codes, lb)
+    scale = float(jnp.abs(b).max())
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-2,
+                               atol=1e-2 * scale)
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("m,n,c,d,k", [(4, 700, 8, 24, 10), (9, 300, 5, 16, 7)])
+def test_gleanvec_sq_topk_matches_ref(m, n, c, d, k):
+    """Fused blocked top-k (no dense (m, n)) == dense-then-top_k oracle."""
+    q_scaled, q_lo, tags, codes = _sq_inputs(m, n, c, d)
+    v1, i1 = gleanvec_sq_topk(q_scaled, q_lo, tags, codes, k, tm=4, tn=128,
+                              interpret=True)
+    v2, i2 = gleanvec_sq_topk_ref(q_scaled, q_lo, tags, codes, k)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4,
+                               atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+@pytest.mark.tier1
+def test_gleanvec_sq_topk_sorted_emits_external_ids():
+    """row_ids (the sort permutation) come straight out of the kernel and
+    -1 padding rows can never win."""
+    m, nb, c, d, lb, k = 3, 6, 4, 16, 128, 12
+    n = nb * lb
+    q_scaled, q_lo, _, codes = _sq_inputs(m, n, c, d)
+    block_tags = jnp.asarray(RNG.integers(0, c, nb).astype(np.int32))
+    perm = np.full(n, -1, np.int32)
+    valid = RNG.permutation(n)[: n - 100]           # 100 padding rows
+    perm[np.sort(valid)] = RNG.permutation(len(valid)).astype(np.int32)
+    perm = jnp.asarray(perm)
+    v1, i1 = gleanvec_sq_topk(q_scaled, q_lo, block_tags, codes, k,
+                              row_ids=perm, layout_block=lb, tm=2, tn=64,
+                              interpret=True)
+    v2, i2 = gleanvec_sq_topk_ref(q_scaled, q_lo, block_tags, codes, k,
+                                  row_ids=perm, layout_block=lb)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4,
+                               atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    assert (np.asarray(i1) >= 0).all()              # padding never wins
 
 
 @pytest.mark.parametrize("n,c,d,tn", [

@@ -37,6 +37,9 @@ def setup(request):
         "gleanvec": sc.gleanvec_scorer(gvm, X),
         "sphering-int8": sc.quantized_scorer(lin, X),
         "gleanvec-int8": sc.gleanvec_quantized_scorer(gvm, X),
+        "gleanvec-sorted": sc.sorted_gleanvec_scorer(gvm, X, block=256),
+        "gleanvec-int8-sorted": sc.sorted_gleanvec_quantized_scorer(
+            gvm, X, block=256),
     }
     iv = ivf.build(jax.random.PRNGKey(1), X, n_lists=16)
     g = graph.build(ds.database, r=20, n_iters=4, seed=0)
@@ -109,6 +112,77 @@ def test_per_cluster_quantization_tight(setup):
     assert err.max() / scale < 0.02
 
 
+@pytest.mark.parametrize("pair", [("gleanvec", "gleanvec-sorted"),
+                                  ("gleanvec-int8", "gleanvec-int8-sorted")])
+def test_sorted_flat_scan_matches_unsorted(setup, pair):
+    """The tag-sorted layout is a LAYOUT, not a scoring mode: the flat scan
+    returns the same (value, id) sets as the row-aligned scorer once ids
+    are translated through the permutation (which the protocol does
+    internally)."""
+    base, srt = pair
+    ds, X, _, _, scorers, _, _ = setup
+    QT = jnp.asarray(ds.queries_test)
+    v1, i1 = bruteforce.search_scorer(QT, scorers[base], K, block=512)
+    v2, i2 = bruteforce.search_scorer(QT, scorers[srt], K)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4,
+                               atol=1e-4)
+    assert np.array_equal(np.sort(np.asarray(i1), 1),
+                          np.sort(np.asarray(i2), 1))
+    n = X.shape[0]
+    ids = np.asarray(i2)
+    assert ids.min() >= 0 and ids.max() < n   # original space, no padding
+
+
+@pytest.mark.parametrize("pair", [("gleanvec", "gleanvec-sorted"),
+                                  ("gleanvec-int8", "gleanvec-int8-sorted")])
+def test_sorted_ivf_matches_unsorted(setup, pair):
+    """IVF posting lists speak original ids; sorted scorers gather through
+    inv_perm inside score_ids and return identical candidates."""
+    base, srt = pair
+    ds, _, _, _, scorers, iv, _ = setup
+    QT = jnp.asarray(ds.queries_test)
+    v1, i1 = ivf.search_scorer(QT, scorers[base], iv, k=K, nprobe=8)
+    v2, i2 = ivf.search_scorer(QT, scorers[srt], iv, k=K, nprobe=8)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4,
+                               atol=1e-4)
+    assert np.array_equal(np.sort(np.asarray(i1), 1),
+                          np.sort(np.asarray(i2), 1))
+
+
+def test_sorted_score_ids_matches_unsorted(setup):
+    """score_ids on arbitrary ORIGINAL id sets: sorted == row-aligned (the
+    graph beam expansion path)."""
+    ds, X, _, _, scorers, _, _ = setup
+    QT = jnp.asarray(ds.queries_test[:8])
+    ids = jnp.asarray(
+        np.random.default_rng(3).integers(0, X.shape[0], (8, 64)))
+    for base, srt in [("gleanvec", "gleanvec-sorted"),
+                      ("gleanvec-int8", "gleanvec-int8-sorted")]:
+        sb, ss = scorers[base], scorers[srt]
+        a = sb.score_ids(sb.prepare_queries(QT), ids)
+        b = ss.score_ids(ss.prepare_queries(QT), ids)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-4, err_msg=base)
+
+
+def test_sorted_build_scorer_modes(setup):
+    """Mode strings cover the sorted layouts and translate contract holds."""
+    ds, X, _, gvm, _, _, _ = setup
+    assert "gleanvec-sorted" in sc.MODES
+    assert "gleanvec-int8-sorted" in sc.MODES
+    s = sc.build_scorer("gleanvec-sorted", X, gvm)
+    assert isinstance(s, sc.SortedGleanVecScorer)
+    sq = sc.build_scorer("gleanvec-int8-sorted", X, gvm)
+    assert isinstance(sq, sc.SortedGleanVecQuantizedScorer)
+    # translate_ids: sorted rows -> original ids; padding -> -1
+    rows = jnp.asarray([0, s.n_rows - 1, -1])
+    out = np.asarray(s.translate_ids(rows))
+    assert out[2] == -1 and (out[:2] < X.shape[0]).all()
+    # pad_rows must refuse to break the pre-padded block structure
+    with pytest.raises(ValueError):
+        s.pad_rows(7)
+
+
 @pytest.mark.parametrize("mode", ["sphering", "gleanvec", "sphering-int8",
                                   "gleanvec-int8"])
 def test_ivf_parity_with_bruteforce(setup, mode):
@@ -125,7 +199,8 @@ def test_ivf_parity_with_bruteforce(setup, mode):
 
 
 @pytest.mark.parametrize("mode", ["sphering", "gleanvec", "sphering-int8",
-                                  "gleanvec-int8"])
+                                  "gleanvec-int8", "gleanvec-sorted",
+                                  "gleanvec-int8-sorted"])
 def test_graph_parity_with_bruteforce(setup, mode):
     """Graph beam search through any scorer reaches the flat-scan recall -
     tolerance."""
@@ -165,7 +240,8 @@ def test_multi_step_search_all_modes(setup):
 
     for mode, model in [("full", None), ("sphering", lin),
                         ("gleanvec", gvm), ("sphering-int8", lin),
-                        ("gleanvec-int8", gvm)]:
+                        ("gleanvec-int8", gvm), ("gleanvec-sorted", gvm),
+                        ("gleanvec-int8-sorted", gvm)]:
         art = msearch.build_artifacts(mode, X, model)
         ids = msearch.multi_step_search(QT, art, index_search, K, KAPPA)
         rec = float(metrics.recall_at_k(ids, gt))
