@@ -1,10 +1,15 @@
 """Paper Table 1 / throughput axis: end-to-end multi-step search QPS and
 recall at the paper's operating point (10-recall@10 target ~0.9) for
-full-precision vs LeanVec-Sphering vs GleanVec databases, flat and graph
-indices, plus the int8-quantized variant (LVQ on top of Bx).
+full-precision vs LeanVec-Sphering vs GleanVec databases across the Index
+protocol's traversals: flat scan, graph, IVF with the full-D vs
+reduced-space coarse probe toggle, and the sharded (4-way) IVF / graph
+placements. Rows land in ``BENCH_table1_search.json`` via
+``common.write_json_results``.
 
 CPU wall times characterize relative speedups (D/d bandwidth scaling);
-absolute TPU numbers come from the roofline analysis.
+absolute TPU numbers come from the roofline analysis. The ``probe_flops``
+derived field on the IVF rows is the compiled coarse-step cost
+(``normalize_cost``): the ``ivf-rprobe`` row must show ~D/d fewer.
 """
 from __future__ import annotations
 
@@ -18,7 +23,17 @@ from repro.core.quantization import quantize
 from repro.core.scorer import (gleanvec_quantized_scorer,
                                sorted_gleanvec_quantized_scorer,
                                sorted_gleanvec_scorer)
-from repro.index import bruteforce, graph
+from repro.index import bruteforce, distributed, graph, ivf
+from repro.utils import hlo_analysis
+
+
+def _probe_flops(index, scorer, queries) -> float:
+    """Compiled cost of the coarse step alone (the R^d assertion's data)."""
+    qs = index.prepare_queries(scorer, queries)
+    cost = hlo_analysis.normalize_cost(
+        jax.jit(ivf.coarse_scores).lower(index, qs).compile()
+        .cost_analysis())
+    return float(cost.get("flops", 0.0))
 
 
 def run():
@@ -38,105 +53,87 @@ def run():
         top = jax.lax.top_k(jnp.where(cand >= 0, full, -3.4e38), 10)[1]
         return jnp.take_along_axis(cand, top, axis=1)
 
+    def bench(name, search, extra=""):
+        us = time_fn(search)
+        rec = float(metrics.recall_at_k(search(), gt))
+        emit(f"table1_search/{name}", us,
+             f"recall10={rec:.3f};qps={nq / (us / 1e6):.0f}" + extra)
+
     # full-D flat (baseline search)
-    us = time_fn(lambda: bruteforce.search(QT, X, 10)[1])
-    _, ids = bruteforce.search(QT, X, 10)
-    emit("table1/flat/fullD", us,
-         f"recall10={float(metrics.recall_at_k(ids, gt)):.3f};"
-         f"qps={nq / (us / 1e6):.0f}")
+    bench("flat/fullD", lambda: finish(bruteforce.search(QT, X, 10)[1]))
 
     # sphering flat + rerank
     m = lvs.fit(Q, X, d)
     q_low = QT @ m.a.T
     x_low = X @ m.b.T
-
-    def sphering_search():
-        _, cand = bruteforce.search(q_low, x_low, kappa)
-        return finish(cand)
-
-    us = time_fn(sphering_search)
-    emit(f"table1/flat/sphering-d{d}", us,
-         f"recall10={float(metrics.recall_at_k(sphering_search(), gt)):.3f};"
-         f"qps={nq / (us / 1e6):.0f}")
+    bench(f"flat/sphering-d{d}",
+          lambda: finish(bruteforce.search(q_low, x_low, kappa)[1]))
 
     # gleanvec flat + rerank
     model = gv.fit(jax.random.PRNGKey(0), Q, X, c=48, d=d)
     tags, xg_low = gv.encode_database(model, X)
     q_views = gv.project_queries_eager(model, QT)
-
-    def gleanvec_search():
-        _, cand = bruteforce.search_gleanvec(q_views, tags, xg_low, kappa)
-        return finish(cand)
-
-    us = time_fn(gleanvec_search)
-    emit(f"table1/flat/gleanvec-d{d}", us,
-         f"recall10={float(metrics.recall_at_k(gleanvec_search(), gt)):.3f};"
-         f"qps={nq / (us / 1e6):.0f}")
+    bench(f"flat/gleanvec-d{d}",
+          lambda: finish(bruteforce.search_gleanvec(q_views, tags, xg_low,
+                                                    kappa)[1]))
 
     # int8-quantized sphering (compounded compression)
     db = quantize(x_low)
-
-    def sq_search():
-        _, cand = bruteforce.search_quantized(q_low, db.codes, db.lo,
-                                              db.delta, kappa)
-        return finish(cand)
-
-    us = time_fn(sq_search)
-    emit(f"table1/flat/sphering-d{d}-int8", us,
-         f"recall10={float(metrics.recall_at_k(sq_search(), gt)):.3f};"
-         f"qps={nq / (us / 1e6):.0f}")
+    bench(f"flat/sphering-d{d}-int8",
+          lambda: finish(bruteforce.search_quantized(
+              q_low, db.codes, db.lo, db.delta, kappa)[1]))
 
     # gleanvec + per-cluster int8 (Scorer-protocol composition: DR stacked
     # with SQ -- d bytes per vector instead of D*4)
     gq = gleanvec_quantized_scorer(model, X)
-
-    def gq_search():
-        _, cand = bruteforce.search_scorer(QT, gq, kappa)
-        return finish(cand)
-
-    us = time_fn(gq_search)
-    emit(f"table1/flat/gleanvec-d{d}-int8", us,
-         f"recall10={float(metrics.recall_at_k(gq_search(), gt)):.3f};"
-         f"qps={nq / (us / 1e6):.0f}")
+    bench(f"flat/gleanvec-d{d}-int8",
+          lambda: finish(bruteforce.search_scorer(QT, gq, kappa)[1]))
 
     # tag-sorted (cluster-contiguous) layouts: one query view per block, so
     # the scan is a plain matmul (f32) / int8 matmul + offset (int8) -- the
     # Scorer protocol translates the sorted row order back to original ids.
     sgl = sorted_gleanvec_scorer(model, X, block=256)
-
-    def sorted_search():
-        _, cand = bruteforce.search_scorer(QT, sgl, kappa)
-        return finish(cand)
-
-    us = time_fn(sorted_search)
-    emit(f"table1/flat/gleanvec-d{d}-sorted", us,
-         f"recall10={float(metrics.recall_at_k(sorted_search(), gt)):.3f};"
-         f"qps={nq / (us / 1e6):.0f}")
+    bench(f"flat/gleanvec-d{d}-sorted",
+          lambda: finish(bruteforce.search_scorer(QT, sgl, kappa)[1]))
 
     sgq = sorted_gleanvec_quantized_scorer(model, X, block=256)
+    bench(f"flat/gleanvec-d{d}-int8-sorted",
+          lambda: finish(bruteforce.search_scorer(QT, sgq, kappa)[1]))
 
-    def sorted_sq_search():
-        _, cand = bruteforce.search_scorer(QT, sgq, kappa)
-        return finish(cand)
-
-    us = time_fn(sorted_sq_search)
-    emit(f"table1/flat/gleanvec-d{d}-int8-sorted", us,
-         f"recall10="
-         f"{float(metrics.recall_at_k(sorted_sq_search(), gt)):.3f};"
-         f"qps={nq / (us / 1e6):.0f}")
+    # IVF through the Index protocol: full-D coarse probe vs the centers
+    # projected into the scorer's reduced space (same nprobe, same lists;
+    # probe_flops is the compiled coarse-step cost -- the rprobe row moves
+    # ~D/d fewer)
+    iv = ivf.build(jax.random.PRNGKey(1), X, n_lists=32)
+    ivr = ivf.with_reduced_centers(iv, gq, model)
+    for name, index in ((f"ivf/gleanvec-d{d}-int8", iv),
+                        (f"ivf-rprobe/gleanvec-d{d}-int8", ivr)):
+        bench(name,
+              lambda index=index: finish(
+                  ivf.search_scorer(QT, gq, index, k=kappa, nprobe=8)[1]),
+              extra=f";probe_flops={_probe_flops(index, gq, QT):.0f}")
 
     # graph index (reduced space) + rerank
     g = graph.build(np.asarray(xg_low), r=24, n_iters=5, seed=0)
+    bench(f"graph/gleanvec-d{d}",
+          lambda: finish(graph.beam_search_gleanvec(
+              q_views, tags, xg_low, g, k=kappa, beam=96,
+              max_hops=200)[1]))
 
-    def graph_search():
-        _, cand = graph.beam_search_gleanvec(q_views, tags, xg_low, g,
-                                             k=kappa, beam=96, max_hops=200)
-        return finish(cand)
+    # sharded placements (4 shards; mesh-free reference path on one chip,
+    # the same per-shard searches shard_map distributes on a real mesh)
+    n_shards = next(s for s in (4, 2, 1) if X.shape[0] % s == 0)
+    sh_iv, st_iv = distributed.build_sharded_index(
+        "ivf", "gleanvec-int8", X, model, n_shards=n_shards,
+        key=jax.random.PRNGKey(1), n_lists=32, nprobe=8)
+    bench(f"ivf-sharded/gleanvec-d{d}-int8",
+          lambda: finish(sh_iv.search(QT, st_iv, kappa)[1]))
 
-    us = time_fn(graph_search)
-    emit(f"table1/graph/gleanvec-d{d}", us,
-         f"recall10={float(metrics.recall_at_k(graph_search(), gt)):.3f};"
-         f"qps={nq / (us / 1e6):.0f}")
+    sh_g, st_g = distributed.build_sharded_index(
+        "graph", "gleanvec", X, model, n_shards=n_shards, beam=96,
+        max_hops=200, graph_kwargs={"r": 16, "n_iters": 4, "seed": 0})
+    bench(f"graph-sharded/gleanvec-d{d}",
+          lambda: finish(sh_g.search(QT, st_g, kappa)[1]))
 
 
 if __name__ == "__main__":

@@ -14,7 +14,10 @@ operations:
     scores = scorer.score_ids(qstate, ids)        # (m, P), gathered rows
 
 plus the layout plumbing every consumer needs: ``pad_rows`` (blocked scans),
-``shard_specs`` (row-sharding under shard_map), and the id-translation
+``shard_specs`` (row-sharding under shard_map), ``encode_centers``
+(auxiliary vectors -- IVF coarse centers -- encoded into a companion
+scorer that consumes THIS scorer's prepared queries, so the coarse probe
+runs in R^d), and the id-translation
 contract (``translate_ids`` / ``globalize_ids``): a scorer may store its
 rows in a private internal layout, and consumers map the row indices a scan
 produces back to the external (original database) id space by calling
@@ -103,6 +106,30 @@ def _translate_sorted(perm: jax.Array, ids: jax.Array):
     return jnp.where(ids >= 0, orig, -1)
 
 
+def _center_views_scorer(centers: jax.Array, model) -> "GleanVecScorer":
+    """Probe companion for the eager-view qstate family (GleanVec and its
+    sorted layout): centers tagged and projected per cluster."""
+    if model is None:
+        raise ValueError("encode_centers on a GleanVec-family scorer "
+                         "needs the GleanVec model")
+    tags, low = gv.encode_database(model, jnp.asarray(centers, jnp.float32))
+    return GleanVecScorer(x_low=low, tags=tags)
+
+
+def _center_pseudo_scorer(centers: jax.Array, model, lo, delta,
+                          a) -> "GleanVecQuantizedScorer":
+    """Probe companion for the folded per-cluster int8 qstate family
+    (GleanVec∘int8 and its sorted layout): projected centers stored as f32
+    PSEUDO-codes ``(B_t c - lo_t) / delta_t`` under the DATABASE's scales,
+    so ``q_scaled . codes + q_lo == <A_t q, B_t c>`` exactly."""
+    if model is None:
+        raise ValueError("encode_centers on a GleanVec-family scorer "
+                         "needs the GleanVec model")
+    tags, low = gv.encode_database(model, jnp.asarray(centers, jnp.float32))
+    return GleanVecQuantizedScorer(codes=(low - lo[tags]) / delta[tags],
+                                   tags=tags, lo=lo, delta=delta, a=a)
+
+
 class QuantQueryState(NamedTuple):
     """Prepared query for int8 scorers: the affine terms folded query-side.
 
@@ -161,6 +188,19 @@ class LinearScorer(NamedTuple):
     def globalize_ids(self, ids: jax.Array, shard_idx) -> jax.Array:
         return _globalize_row_aligned(ids, shard_idx, self.n_rows)
 
+    def encode_centers(self, centers: jax.Array,
+                       model=None) -> "LinearScorer":
+        """Companion probe scorer over full-D ``centers`` (C, D): scoring
+        it with THIS scorer's qstate computes <Aq, B c> in R^d. With
+        ``a=None`` (exact scorer) the centers pass through unprojected."""
+        c = jnp.asarray(centers, jnp.float32)
+        if self.a is None:
+            return LinearScorer(x_low=c)
+        if model is None:
+            raise ValueError("encode_centers on a reduced LinearScorer "
+                             "needs the DR model (its B matrix)")
+        return LinearScorer(x_low=c @ model.b.T)
+
 
 class GleanVecScorer(NamedTuple):
     """Eager GleanVec scoring (Alg. 4): tag-selected per-cluster views."""
@@ -211,6 +251,12 @@ class GleanVecScorer(NamedTuple):
     def globalize_ids(self, ids: jax.Array, shard_idx) -> jax.Array:
         return _globalize_row_aligned(ids, shard_idx, self.n_rows)
 
+    def encode_centers(self, centers: jax.Array,
+                       model=None) -> "GleanVecScorer":
+        """Companion probe scorer: centers tagged and projected per cluster
+        (B_{t_j} c_j), scored with this scorer's eager (m, C, d) views."""
+        return _center_views_scorer(centers, model)
+
 
 class QuantizedScorer(NamedTuple):
     """Int8 SQ over linearly-reduced vectors, per-dimension affine scales
@@ -257,6 +303,21 @@ class QuantizedScorer(NamedTuple):
 
     def globalize_ids(self, ids: jax.Array, shard_idx) -> jax.Array:
         return _globalize_row_aligned(ids, shard_idx, self.n_rows)
+
+    def encode_centers(self, centers: jax.Array,
+                       model=None) -> "QuantizedScorer":
+        """Companion probe scorer consuming this scorer's folded-scale
+        qstate. The C centers are stored as f32 PSEUDO-codes
+        ``(Bc - lo) / delta`` (not rounded to u8), so
+        ``q_scaled @ codes + q_lo == <Aq, Bc>`` exactly -- probe precision
+        equals the linear scorer's at C rows of negligible HBM cost."""
+        if model is None:
+            raise ValueError("encode_centers on a QuantizedScorer needs "
+                             "the DR model (its B matrix)")
+        low = jnp.asarray(centers, jnp.float32) @ model.b.T
+        return QuantizedScorer(codes=(low - self.lo[None, :])
+                               / self.delta[None, :],
+                               lo=self.lo, delta=self.delta)
 
 
 class GleanVecQuantizedScorer(NamedTuple):
@@ -313,6 +374,14 @@ class GleanVecQuantizedScorer(NamedTuple):
 
     def globalize_ids(self, ids: jax.Array, shard_idx) -> jax.Array:
         return _globalize_row_aligned(ids, shard_idx, self.n_rows)
+
+    def encode_centers(self, centers: jax.Array,
+                       model=None) -> "GleanVecQuantizedScorer":
+        """Companion probe scorer: per-cluster projected centers stored as
+        f32 pseudo-codes under THIS scorer's per-cluster (lo, delta), so
+        the probe is exact <A_t q, B_t c> from the folded qstate."""
+        return _center_pseudo_scorer(centers, model, self.lo, self.delta,
+                                     self.a)
 
 
 class SortedGleanVecScorer(NamedTuple):
@@ -399,6 +468,12 @@ class SortedGleanVecScorer(NamedTuple):
     def globalize_ids(self, ids: jax.Array, shard_idx) -> jax.Array:
         return ids          # perm already yields global original ids
 
+    def encode_centers(self, centers: jax.Array,
+                       model=None) -> "GleanVecScorer":
+        """The sorted layout prepares the SAME (m, C, d) eager views as the
+        row-aligned GleanVec scorer, so its probe companion is one too."""
+        return _center_views_scorer(centers, model)
+
 
 class SortedGleanVecQuantizedScorer(NamedTuple):
     """GleanVec ∘ int8 over the TAG-SORTED layout: sorted per-cluster int8
@@ -475,6 +550,13 @@ class SortedGleanVecQuantizedScorer(NamedTuple):
 
     def globalize_ids(self, ids: jax.Array, shard_idx) -> jax.Array:
         return ids          # perm already yields global original ids
+
+    def encode_centers(self, centers: jax.Array,
+                       model=None) -> "GleanVecQuantizedScorer":
+        """Sorted-int8 prepares the same folded qstate as the row-aligned
+        int8 scorer; probe companion is the pseudo-code variant."""
+        return _center_pseudo_scorer(centers, model, self.lo, self.delta,
+                                     self.a)
 
 
 Scorer = Union[LinearScorer, GleanVecScorer, QuantizedScorer,
@@ -556,8 +638,12 @@ MODES = ("full", "sphering", "gleanvec", "sphering-int8", "gleanvec-int8",
          "gleanvec-sorted", "gleanvec-int8-sorted")
 
 
-def build_scorer(mode: str, database: jax.Array, model=None) -> Scorer:
-    """Mode-string dispatch used by the serving layer (no isinstance)."""
+def build_scorer(mode: str, database: jax.Array, model=None,
+                 block: int = 4096) -> Scorer:
+    """Mode-string dispatch used by the serving layer (no isinstance).
+
+    ``block`` is the sorted layouts' per-cluster padding multiple (small
+    per-shard databases want a small one); other modes ignore it."""
     if mode == "full":
         return exact_scorer(database)
     if model is None:
@@ -571,7 +657,8 @@ def build_scorer(mode: str, database: jax.Array, model=None) -> Scorer:
     if mode == "gleanvec-int8":
         return gleanvec_quantized_scorer(model, database)
     if mode == "gleanvec-sorted":
-        return sorted_gleanvec_scorer(model, database)
+        return sorted_gleanvec_scorer(model, database, block=block)
     if mode == "gleanvec-int8-sorted":
-        return sorted_gleanvec_quantized_scorer(model, database)
+        return sorted_gleanvec_quantized_scorer(model, database,
+                                                block=block)
     raise ValueError(f"unknown scorer mode {mode!r}; one of {MODES}")

@@ -1,7 +1,8 @@
 """Multi-step vector search (paper Algorithm 1), index-agnostic.
 
-The main search runs in the compressed representation through any index
-(flat scan / IVF / graph from ``repro.index``) via the unified Scorer
+The main search runs in the compressed representation through any Index
+protocol implementation (flat scan / IVF / graph / sharded placement from
+``repro.index``, see :mod:`repro.index.protocol`) over the unified Scorer
 protocol (:mod:`repro.core.scorer`); the postprocessing step re-ranks the
 kappa candidates with full-precision inner products. With the flexible-d
 storage of Section 3.1 (full rotation P'), the rerank uses the *same*
@@ -11,7 +12,7 @@ model types, so no isinstance dispatch remains anywhere on the search path.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -99,13 +100,25 @@ def rerank(queries: jax.Array, artifacts: SearchArtifacts,
 
 
 def multi_step_search(queries: jax.Array, artifacts: SearchArtifacts,
-                      index_search: Callable, k: int, kappa: int):
-    """Algorithm 1. ``index_search(q_low, artifacts, kappa) -> (m, kappa)
-    ids``, where ``q_low`` is the scorer's prepared query state (reduced
-    queries, eager views, or scaled int8 query -- index-agnostic).
+                      index_search, k: int, kappa: int):
+    """Algorithm 1 over any index and any scorer.
+
+    ``index_search`` is an Index-protocol object (``FlatIndex`` /
+    ``IVFIndex`` / ``GraphIndex`` / ``ShardedIndex`` -- anything with
+    ``prepare_queries`` + ``candidates``): the main search runs
+    ``index.candidates(index.prepare_queries(scorer, queries), scorer,
+    kappa)`` and the resulting ORIGINAL-id candidates are reranked in full
+    precision. A legacy callable ``index_search(q_low, artifacts, kappa)
+    -> (m, kappa) ids`` is still accepted, where ``q_low`` is the scorer's
+    prepared query state.
 
     ``kappa >= k`` trades accuracy for rerank cost.
     """
-    q_low = artifacts.scorer.prepare_queries(queries)
-    candidates = index_search(q_low, artifacts, kappa)
+    scorer = artifacts.scorer
+    if hasattr(index_search, "candidates"):     # Index protocol
+        qstate = index_search.prepare_queries(scorer, queries)
+        _, candidates = index_search.candidates(qstate, scorer, kappa)
+    else:                                       # legacy callable
+        q_low = scorer.prepare_queries(queries)
+        candidates = index_search(q_low, artifacts, kappa)
     return rerank(queries, artifacts, candidates, k)

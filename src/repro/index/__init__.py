@@ -1,4 +1,11 @@
-"""Vector-search substrate: flat, IVF and graph indices + distributed merge."""
-from repro.index import bruteforce, distributed, graph, ivf, topk
+"""Vector-search substrate: one Index protocol (flat / IVF / graph +
+sharded placement wrapper) over the unified Scorer protocol."""
+from repro.index import bruteforce, distributed, graph, ivf, protocol, topk
+from repro.index.distributed import ShardedIndex, build_sharded_index
+from repro.index.graph import GraphIndex
+from repro.index.ivf import IVFIndex
+from repro.index.protocol import FlatIndex
 
-__all__ = ["bruteforce", "distributed", "graph", "ivf", "topk"]
+__all__ = ["bruteforce", "distributed", "graph", "ivf", "protocol", "topk",
+           "FlatIndex", "IVFIndex", "GraphIndex", "ShardedIndex",
+           "build_sharded_index"]

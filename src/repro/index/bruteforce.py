@@ -1,6 +1,12 @@
 """Flat (exact within the reduced space) index: ONE blocked brute-force MIPS
 scan over any :mod:`repro.core.scorer` implementation.
 
+This module is the compute substrate of
+:class:`repro.index.protocol.FlatIndex` -- the Index-protocol face of the
+flat scan that `core.search`, the serving layer and the sharded placement
+wrapper consume; call that when you want an index object, call
+``search_scorer`` when you want a function.
+
 ``scan_scorer`` is the single scan: it pads the scorer's rows to a block
 multiple, scores (batch, block) tiles via ``scorer.score_block``, keeps a
 running top-k, and maps the winning rows to external ids through the

@@ -1,40 +1,56 @@
-"""Distributed (multi-chip / multi-pod) vector search over any scorer.
+"""Distributed (multi-chip / multi-pod) vector search: any index x any
+scorer under one shard_map wrapper.
 
-Standard sharded-ANN pattern: the scorer's row arrays (reduced vectors /
-codes / tags) are row-sharded across every mesh axis; each shard produces
-its local top-kappa via the unified blocked scan, then candidates are
-all-gathered and merged into the global top-k. The only collective is one
-all-gather of (batch, shards * kappa) (value, id) pairs -- the id space
-stays global because each shard offsets its local ids.
+Two placement styles, one collective schedule (a single all-gather of
+(batch, shards * kappa) (value, id) pairs merged into the global top-k):
 
-Because scorers are pytrees with a ``shard_specs`` method, ONE shard_map
-wrapper serves every representation: linear, eager GleanVec, int8,
-GleanVec∘int8 and both tag-sorted layouts all shard with the same single
-all-gather merge. Globalizing the per-shard ids goes through the
-protocol's ``globalize_ids``: row-aligned scorers offset by the shard row
-count; sorted scorers translate through their permutation (which must hold
-GLOBAL original ids -- build the sorted layout over the global database,
-then row-shard it; the shard count must divide the single-tag block
-count).
+1. **Flat, global-build-then-row-shard** (the historical path,
+   :func:`make_sharded_search_scorer`): the scorer's row arrays are
+   row-sharded across mesh axes and each shard runs the unified blocked
+   scan. Id globalization goes through the SCORER-level
+   ``scorer.globalize_ids(ids, shard_idx)``: row-aligned scorers offset by
+   the shard row count; sorted scorers translate through their permutation
+   (which must hold GLOBAL original ids -- build the sorted layout over
+   the global database, then row-shard it; the shard count must divide the
+   single-tag block count).
+
+2. **Any index, per-shard build** (:class:`ShardedIndex`): the global
+   database rows are partitioned into equal contiguous shards; each shard
+   gets a self-contained (sub-index, sub-scorer) pair -- flat scan, IVF
+   posting lists over its rows, or its own navigable subgraph -- whose
+   leaves are stacked with a leading shard axis and distributed by
+   shard_map. Every sub-index emits LOCAL ids; the INDEX-level
+   ``index.globalize_ids(scorer, ids, row_start)`` lifts them to global
+   original ids through the shard's global row offset (see
+   :mod:`repro.index.protocol` for the two-contract distinction). This is
+   how sharded IVF (row-sharded posting lists) and sharded graph
+   (per-shard subgraphs) compose with every scorer family, sorted layouts
+   included.
 
 Implemented with shard_map so the collective schedule is explicit and stable
 for the roofline analysis.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.core import scorer as sc
 from repro.core.scorer import LinearScorer, Scorer
-from repro.index import bruteforce
+from repro.index import bruteforce, graph as graph_mod, ivf as ivf_mod
+from repro.index.protocol import (FlatIndex, register_index_pytree,
+                                  replace, stacked_specs)
 from repro.utils.jax_compat import shard_map
 
 __all__ = ["sharded_search", "make_sharded_search",
-           "sharded_search_scorer", "make_sharded_search_scorer"]
+           "sharded_search_scorer", "make_sharded_search_scorer",
+           "stack_shards", "ShardedIndex", "build_sharded_index"]
 
 
 def _local_merge(queries, scorer, mesh: Mesh, axes, k: int, kappa: int,
@@ -109,3 +125,198 @@ def sharded_search_scorer(queries: jax.Array, scorer: Scorer, mesh: Mesh,
     fn = make_sharded_search_scorer(mesh, shard_axes, k, scorer, kappa,
                                     block)
     return jax.jit(fn)(queries, scorer)
+
+
+# ---------------------------------------------------------------------------
+# Generic sharded Index: shard_map over any (sub-index, sub-scorer) stack.
+# ---------------------------------------------------------------------------
+
+
+def _pad_leaf(a: jax.Array, shape) -> jax.Array:
+    """Pad a leaf up to ``shape``: signed-int leaves (ids, permutations,
+    posting lists, entries, block tags) pad with -1 -- every consumer
+    masks negative ids -- and float/unsigned leaves pad with zeros."""
+    pads = [(0, t - s) for s, t in zip(a.shape, shape)]
+    if not any(p[1] for p in pads):
+        return a
+    val = -1 if jnp.issubdtype(a.dtype, jnp.signedinteger) else 0
+    return jnp.pad(a, pads, constant_values=val)
+
+
+def stack_shards(shards: Sequence[Any]):
+    """Stack per-shard pytrees (same treedef) into ONE pytree whose leaves
+    carry a leading shard axis, padding ragged leaves (per-shard sorted
+    layouts, posting-list lengths, entry-point counts) to the maximum
+    shape. The result is what shard_map distributes: spec ``P(axes)`` on
+    every leaf puts shard ``s``'s slice on device ``s``."""
+
+    def stack(*leaves):
+        leaves = [jnp.asarray(x) for x in leaves]
+        target = tuple(max(s) for s in zip(*[x.shape for x in leaves]))
+        return jnp.stack([_pad_leaf(x, target) for x in leaves])
+
+    return jax.tree_util.tree_map(stack, *shards)
+
+
+def _take_shard(tree, s):
+    """Slice shard ``s`` back out of a stacked pytree."""
+    return jax.tree_util.tree_map(lambda x: x[s], tree)
+
+
+@dataclass(frozen=True, eq=False)
+class ShardedIndex:
+    """Placement wrapper implementing the Index protocol over ANY index.
+
+    ``sub_index`` holds the per-shard indexes stacked along a leading
+    shard axis (:func:`stack_shards`); the matching per-shard scorers are
+    stacked the same way and passed as the ``scorer`` argument to
+    ``search`` / ``candidates``. Each shard searches its self-contained
+    sub-index, lifts local ids to global through the sub-index's
+    ``globalize_ids`` with the shard's global ``row_starts`` offset, and
+    one tiled all-gather merges the (value, id) pairs into the global
+    top-k.
+
+    With ``mesh=None`` the same computation runs shard-by-shard on one
+    device (:meth:`search_local`) -- the single-device counterpart the
+    parity tests compare against, and the fallback for single-chip
+    benchmarking of the sharded layouts.
+    """
+
+    sub_index: Any                        # stacked leaves: (S, ...)
+    row_starts: jax.Array                 # (S,) global row offset per shard
+    mesh: Optional[Mesh] = None
+    axes: Tuple[str, ...] = ()
+
+    @property
+    def n_shards(self) -> int:
+        return self.row_starts.shape[0]
+
+    # ---- Index protocol ----------------------------------------------------
+
+    def prepare_queries(self, scorer, queries: jax.Array) -> jax.Array:
+        # Queries are replicated; each shard prepares its own qstate from
+        # its (replicated) query maps inside the shard_map body.
+        return queries.astype(jnp.float32)
+
+    def candidates(self, queries: jax.Array, scorer, k: int,
+                   kappa: Optional[int] = None):
+        if self.mesh is None:
+            return self.search_local(queries, scorer, k, kappa)
+        kappa = kappa or k
+        axes = tuple(self.axes) or tuple(self.mesh.axis_names)
+        mesh = self.mesh
+
+        def body(q, starts, s_scorer, s_index):
+            s_scorer = _take_shard(s_scorer, 0)   # drop the (1,) shard dim
+            s_index = _take_shard(s_index, 0)
+            idx = jnp.zeros((), jnp.int32)
+            for a in axes:
+                idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+            qs = s_index.prepare_queries(s_scorer, q)
+            vals, ids = s_index.candidates(qs, s_scorer, kappa)
+            ids = s_index.globalize_ids(s_scorer, ids, starts[idx])
+            vals = jax.lax.all_gather(vals, axes, axis=1, tiled=True)
+            ids = jax.lax.all_gather(ids, axes, axis=1, tiled=True)
+            top, sel = jax.lax.top_k(vals, k)
+            return top, jnp.take_along_axis(ids, sel, axis=1)
+
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(P(), P(), stacked_specs(scorer, axes),
+                                 stacked_specs(self.sub_index, axes)),
+                       out_specs=(P(), P()))
+        return fn(queries, self.row_starts, scorer, self.sub_index)
+
+    def search(self, queries: jax.Array, scorer, k: int,
+               kappa: Optional[int] = None):
+        return self.candidates(self.prepare_queries(scorer, queries),
+                               scorer, k, kappa)
+
+    def search_local(self, queries: jax.Array, scorer, k: int,
+                     kappa: Optional[int] = None):
+        """Mesh-free reference: the SAME per-shard searches + merge, run
+        sequentially on the current device."""
+        kappa = kappa or k
+        queries = queries.astype(jnp.float32)
+        starts = np.asarray(self.row_starts)
+        all_vals, all_ids = [], []
+        for s in range(self.n_shards):
+            s_scorer = _take_shard(scorer, s)
+            s_index = _take_shard(self.sub_index, s)
+            qs = s_index.prepare_queries(s_scorer, queries)
+            vals, ids = s_index.candidates(qs, s_scorer, kappa)
+            all_vals.append(vals)
+            all_ids.append(s_index.globalize_ids(s_scorer, ids,
+                                                 int(starts[s])))
+        vals = jnp.concatenate(all_vals, axis=1)
+        ids = jnp.concatenate(all_ids, axis=1)
+        top, sel = jax.lax.top_k(vals, k)
+        return top, jnp.take_along_axis(ids, sel, axis=1)
+
+    def shard_specs(self, axes):
+        return stacked_specs(self, axes)
+
+    def globalize_ids(self, scorer, ids: jax.Array, row_start) -> jax.Array:
+        return ids          # candidates are already global original ids
+
+
+register_index_pytree(ShardedIndex,
+                      data_fields=("sub_index", "row_starts"),
+                      static_fields=("mesh", "axes"))
+
+
+def build_sharded_index(kind: str, mode: str, database, model=None, *,
+                        mesh: Optional[Mesh] = None,
+                        shard_axes: Sequence[str] = (),
+                        n_shards: Optional[int] = None, key=None,
+                        block: int = 4096, sort_block: int = 256,
+                        n_lists: int = 32, nprobe: int = 8,
+                        reduced_probe: bool = False, beam: int = 64,
+                        max_hops: int = 256, graph_kwargs=None):
+    """Build a :class:`ShardedIndex` + matching stacked scorer.
+
+    ``kind`` in {"flat", "ivf", "graph"} x ``mode`` in ``scorer.MODES`` x
+    (``mesh`` or mesh-free with ``n_shards``): the three orthogonal axes.
+    The database rows are split into equal contiguous shards; each shard
+    gets a self-contained scorer (``sc.build_scorer``) and sub-index (flat
+    scan / local posting lists over one shared coarse quantizer / its own
+    subgraph). With ``reduced_probe`` the IVF centers are projected into
+    each shard scorer's reduced space (``ivf.with_reduced_centers``).
+    Returns ``(sharded_index, stacked_scorer)``.
+    """
+    X = jnp.asarray(database, jnp.float32)
+    n = X.shape[0]
+    axes = tuple(shard_axes)
+    if mesh is not None:
+        axes = axes or tuple(mesh.axis_names)
+        n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    if not n_shards:
+        raise ValueError("pass a mesh or an explicit n_shards")
+    if n % n_shards:
+        raise ValueError(f"n={n} not divisible by n_shards={n_shards}")
+    per = n // n_shards
+    rows = [X[s * per:(s + 1) * per] for s in range(n_shards)]
+    scorers = [sc.build_scorer(mode, r, model, block=sort_block)
+               for r in rows]
+
+    if kind == "flat":
+        subs = [FlatIndex(block=block)] * n_shards
+    elif kind == "ivf":
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        subs = ivf_mod.build_sharded(key, X, n_lists, n_shards,
+                                     nprobe=nprobe)
+        if reduced_probe:
+            subs = [ivf_mod.with_reduced_centers(ix, s, model)
+                    for ix, s in zip(subs, scorers)]
+    elif kind == "graph":
+        gkw = dict(graph_kwargs or {})
+        subs = [replace(graph_mod.build(np.asarray(r), **gkw), beam=beam,
+                        max_hops=max_hops) for r in rows]
+    else:
+        raise ValueError(f"unknown index kind {kind!r}; "
+                         "one of ('flat', 'ivf', 'graph')")
+
+    row_starts = jnp.arange(n_shards, dtype=jnp.int32) * per
+    return (ShardedIndex(sub_index=stack_shards(subs),
+                         row_starts=row_starts, mesh=mesh, axes=axes),
+            stack_shards(scorers))

@@ -23,22 +23,58 @@ eager execution).
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.scorer import GleanVecScorer, LinearScorer, batch_of
+from repro.index.protocol import (_offset_ids, register_index_pytree,
+                                  stacked_specs)
 from repro.index.topk import NEG_INF
 
 __all__ = ["GraphIndex", "build", "beam_search_scorer", "beam_search",
            "beam_search_gleanvec", "beam_search_traced"]
 
 
-class GraphIndex(NamedTuple):
+@dataclass(frozen=True, eq=False)
+class GraphIndex:
+    """Navigable graph implementing the Index protocol. ``beam`` /
+    ``max_hops`` are static search configuration for the protocol path
+    (``candidates``); the explicit entry points accept overrides. Entries
+    may be -1-padded (stacked per-shard graphs): padded slots are masked
+    out of the initial beam."""
+
     neighbors: jax.Array  # (n, R) int32, -1 padded
     entries: jax.Array    # (E,) int32 entry points (medoid + per-cluster)
+    beam: int = 64
+    max_hops: int = 256
+
+    # ---- Index protocol ----------------------------------------------------
+
+    def prepare_queries(self, scorer, queries: jax.Array):
+        return scorer.prepare_queries(queries)
+
+    def candidates(self, qstate, scorer, k: int):
+        top, ids, _, _ = _beam_qstate(qstate, scorer, self, k, self.beam,
+                                      self.max_hops)
+        return top, ids
+
+    def search(self, queries: jax.Array, scorer, k: int):
+        return self.candidates(self.prepare_queries(scorer, queries),
+                               scorer, k)
+
+    def shard_specs(self, axes):
+        return stacked_specs(self, axes)
+
+    def globalize_ids(self, scorer, ids: jax.Array, row_start) -> jax.Array:
+        return _offset_ids(ids, row_start)
+
+
+register_index_pytree(GraphIndex, data_fields=("neighbors", "entries"),
+                      static_fields=("beam", "max_hops"))
 
 
 # ---------------------------------------------------------------------------
@@ -190,7 +226,8 @@ def _beam_loop(score_ids, graph: GraphIndex, batch: int, beam: int,
     n_entry = graph.entries.shape[0]
     assert n_entry <= beam, "beam must hold all entry points"
     entry = jnp.broadcast_to(graph.entries[None, :], (batch, n_entry))
-    e_scores = score_ids(entry)
+    # -1-padded entries (stacked per-shard graphs) never enter the beam
+    e_scores = jnp.where(entry >= 0, score_ids(entry), NEG_INF)
     cand_ids = jnp.concatenate(
         [entry, jnp.full((batch, beam - n_entry), -1, jnp.int32)], axis=1)
     cand_scores = jnp.concatenate(

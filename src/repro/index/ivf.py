@@ -5,18 +5,26 @@ Appendix A implementation). Lists are stored as one permutation array plus
 offsets; search gathers ``nprobe`` padded lists and scores them in one
 contraction, so the whole query batch stays on the MXU.
 
-Fine scoring goes through the unified Scorer protocol
-(:mod:`repro.core.scorer`): ``search_scorer`` accepts any scorer (linear,
-eager GleanVec, int8, GleanVec∘int8, and the tag-sorted layouts) and scores
-the gathered posting lists with ``scorer.score_ids`` -- tag gathers,
-dequant-free int8 dots and sorted-layout id translation come with the
-scorer, not with this index: posting lists always store ORIGINAL ids. The
-coarse probe always runs in the full dimension (the centers live in R^D).
+``IVFIndex`` implements the Index protocol (:mod:`repro.index.protocol`):
+fine scoring goes through the unified Scorer protocol
+(:mod:`repro.core.scorer`) -- ``candidates`` scores the gathered posting
+lists with ``scorer.score_ids``, so tag gathers, dequant-free int8 dots and
+sorted-layout id translation come with the scorer, not with this index:
+posting lists always store ORIGINAL ids.
+
+The coarse probe has two modes. By default the centers live in R^D and the
+probe scores the raw queries against them (D*4 bytes per center per
+query-batch sweep). :func:`with_reduced_centers` projects the centers into
+the scorer's reduced space at build time (``scorer.encode_centers``): the
+probe then consumes the scorer's ALREADY-PREPARED queries and touches d
+bytes per center instead of D -- the coarse step inherits the paper's D/d
+bandwidth cut and needs no full-D query anywhere in the search.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,41 +32,171 @@ import numpy as np
 
 from repro.core import spherical_kmeans
 from repro.core.scorer import LinearScorer
+from repro.index.protocol import (_offset_ids, register_index_pytree,
+                                  replace, stacked_specs)
 from repro.index.topk import NEG_INF
 
-__all__ = ["IVFIndex", "build", "search", "search_scorer"]
+__all__ = ["IVFIndex", "IVFQueryState", "build", "build_sharded",
+           "with_reduced_centers", "coarse_scores", "search",
+           "search_scorer"]
 
 
-class IVFIndex(NamedTuple):
-    centers: jax.Array    # (C, D) coarse centroids (unit rows)
-    lists: jax.Array      # (C, max_len) int32 vector ids, -1 padded
-    max_len: int
+class IVFQueryState(NamedTuple):
+    """Prepared IVF query state: the scorer's qstate for fine scoring plus
+    the full-D queries for the coarse probe -- ``q_coarse`` is None when
+    the index carries reduced-space centers (the probe then reuses
+    ``qstate``, so the full-D queries are never needed after prepare)."""
+
+    qstate: Any
+    q_coarse: Optional[jax.Array]
 
 
-def build(key, x, n_lists: int, n_iters: int = 20) -> IVFIndex:
-    """Cluster and bucket the database (host-side list packing)."""
+@dataclass(frozen=True, eq=False)
+class IVFIndex:
+    """Inverted-file index. ``center_scorer`` (optional) is a companion
+    scorer over the C centers in the fine scorer's reduced representation;
+    ``nprobe`` is static protocol-search configuration (override per call
+    via :func:`search_scorer` or ``dataclasses.replace``)."""
+
+    centers: jax.Array                    # (C, D) coarse centroids (unit)
+    lists: jax.Array                      # (C, max_len) int32 ids, -1 pad
+    center_scorer: Any = None             # reduced-space probe companion
+    nprobe: int = 8
+
+    @property
+    def n_lists(self) -> int:
+        return self.centers.shape[0]
+
+    @property
+    def max_len(self) -> int:
+        return self.lists.shape[1]
+
+    # ---- Index protocol ----------------------------------------------------
+
+    def prepare_queries(self, scorer, queries: jax.Array) -> IVFQueryState:
+        q_coarse = (queries.astype(jnp.float32)
+                    if self.center_scorer is None else None)
+        return IVFQueryState(qstate=scorer.prepare_queries(queries),
+                             q_coarse=q_coarse)
+
+    def candidates(self, qstate: IVFQueryState, scorer, k: int):
+        return _probe_and_score(qstate, scorer, self, k)
+
+    def search(self, queries: jax.Array, scorer, k: int):
+        return self.candidates(self.prepare_queries(scorer, queries),
+                               scorer, k)
+
+    def shard_specs(self, axes):
+        return stacked_specs(self, axes)
+
+    def globalize_ids(self, scorer, ids: jax.Array, row_start) -> jax.Array:
+        return _offset_ids(ids, row_start)
+
+
+register_index_pytree(IVFIndex,
+                      data_fields=("centers", "lists", "center_scorer"),
+                      static_fields=("nprobe",))
+
+
+# ---------------------------------------------------------------------------
+# Build (host-side list packing, vectorized).
+# ---------------------------------------------------------------------------
+
+
+def _pack_lists(tags: np.ndarray, n_lists: int,
+                min_len: int = 1) -> np.ndarray:
+    """Bucket row ids by tag into a (n_lists, max_len) -1-padded table.
+
+    One argsort + bincount pass (no per-list ``np.where`` sweep -- the
+    O(C * n) packing dominated build time at C >= 4k lists)."""
+    n = tags.shape[0]
+    counts = np.bincount(tags, minlength=n_lists)
+    max_len = max(min_len, int(counts.max()) if n else min_len)
+    order = np.argsort(tags, kind="stable")
+    starts = np.zeros(n_lists, np.int64)
+    starts[1:] = np.cumsum(counts)[:-1]
+    rank = np.arange(n) - starts[tags[order]]     # within-list slot
+    lists = np.full((n_lists, max_len), -1, np.int32)
+    lists[tags[order], rank] = order
+    return lists
+
+
+def _fit_and_tag(key, x, n_lists: int, n_iters: int):
     km = spherical_kmeans.fit(key, x, n_lists, n_iters)
     x_unit = spherical_kmeans.normalize_rows(jnp.asarray(x, jnp.float32))
     tags = np.asarray(spherical_kmeans.assign(x_unit, km.centers))
-    buckets = [np.where(tags == c)[0] for c in range(n_lists)]
-    max_len = max(1, max(len(b) for b in buckets))
-    lists = np.full((n_lists, max_len), -1, np.int32)
-    for c, b in enumerate(buckets):
-        lists[c, : len(b)] = b
-    return IVFIndex(centers=km.centers, lists=jnp.asarray(lists),
-                    max_len=max_len)
+    return km.centers, tags
 
 
-@functools.partial(jax.jit, static_argnames=("k", "nprobe"))
-def _probe_and_score(q_coarse: jax.Array, qstate, scorer, index: IVFIndex,
-                     k: int, nprobe: int):
-    """Probe ``nprobe`` lists per query, score candidates via the scorer."""
-    m = q_coarse.shape[0]
-    coarse = q_coarse @ index.centers.T                     # (m, C)
-    _, probe = jax.lax.top_k(coarse, nprobe)                # (m, nprobe)
+def build(key, x, n_lists: int, n_iters: int = 20,
+          nprobe: int = 8) -> IVFIndex:
+    """Cluster and bucket the database (host-side list packing)."""
+    centers, tags = _fit_and_tag(key, x, n_lists, n_iters)
+    return IVFIndex(centers=centers,
+                    lists=jnp.asarray(_pack_lists(tags, n_lists)),
+                    nprobe=nprobe)
+
+
+def build_sharded(key, x, n_lists: int, n_shards: int, n_iters: int = 20,
+                  nprobe: int = 8):
+    """Row-sharded IVF: ONE coarse quantizer fit on the full database
+    (identical to :func:`build` with the same key), per-shard posting
+    lists over each shard's row range in LOCAL ids.
+
+    Because every shard replicates the centers, each shard probes exactly
+    the globally-top-``nprobe`` lists; the union of per-shard candidates
+    is then precisely the single-device candidate set, which makes the
+    all-gather merge of :class:`repro.index.distributed.ShardedIndex`
+    return identical results. Lists are padded to a common ``max_len`` so
+    the per-shard tables stack. Returns a list of ``n_shards`` IVFIndex.
+    """
+    n = jnp.asarray(x).shape[0]
+    if n % n_shards:
+        raise ValueError(f"n={n} not divisible by n_shards={n_shards}")
+    per = n // n_shards
+    centers, tags = _fit_and_tag(key, x, n_lists, n_iters)
+    packed = [_pack_lists(tags[s * per:(s + 1) * per], n_lists)
+              for s in range(n_shards)]
+    max_len = max(p.shape[1] for p in packed)
+    packed = [np.pad(p, ((0, 0), (0, max_len - p.shape[1])),
+                     constant_values=-1) for p in packed]
+    return [IVFIndex(centers=centers, lists=jnp.asarray(p), nprobe=nprobe)
+            for p in packed]
+
+
+def with_reduced_centers(index: IVFIndex, scorer, model=None) -> IVFIndex:
+    """Project the coarse centers into ``scorer``'s reduced space: the
+    probe will consume the scorer's prepared queries (R^d) instead of the
+    raw full-D queries -- D/d less HBM traffic in the coarse step."""
+    return replace(index,
+                   center_scorer=scorer.encode_centers(index.centers,
+                                                       model))
+
+
+# ---------------------------------------------------------------------------
+# Search.
+# ---------------------------------------------------------------------------
+
+
+def coarse_scores(index: IVFIndex, qstate: IVFQueryState) -> jax.Array:
+    """(m, C) query-center scores: full-D when the index has no reduced
+    centers, else one reduced-space ``score_block`` over all C centers
+    (this is the function the probe-bandwidth assertion compiles)."""
+    if index.center_scorer is None:
+        return qstate.q_coarse @ index.centers.T
+    return index.center_scorer.score_block(qstate.qstate, 0, index.n_lists)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _probe_and_score(qstate: IVFQueryState, scorer, index: IVFIndex,
+                     k: int):
+    """Probe ``index.nprobe`` lists per query, score via the scorer."""
+    m = jax.tree_util.tree_leaves(qstate.qstate)[0].shape[0]
+    coarse = coarse_scores(index, qstate)                   # (m, C)
+    _, probe = jax.lax.top_k(coarse, index.nprobe)          # (m, nprobe)
     cand = index.lists[probe].reshape(m, -1)                # (m, nprobe*L)
     safe = jnp.where(cand >= 0, cand, 0)
-    scores = scorer.score_ids(qstate, safe)                 # (m, nprobe*L)
+    scores = scorer.score_ids(qstate.qstate, safe)          # (m, nprobe*L)
     scores = jnp.where(cand >= 0, scores, NEG_INF)
     vals, sel = jax.lax.top_k(scores, k)
     return vals, jnp.take_along_axis(cand, sel, axis=1)
@@ -68,17 +206,23 @@ def search_scorer(queries: jax.Array, scorer, index: IVFIndex, k: int,
                   nprobe: int = 8):
     """Unified-protocol search: ``queries (m, D)`` in the FULL dimension.
 
-    The coarse step scores ``queries`` against the R^D centers; the fine
-    step scores ``scorer.prepare_queries(queries)`` against the gathered
-    posting lists through any scorer. Returns (vals, ids): (m, k).
+    The coarse step scores the centers in R^D (or in R^d through the
+    index's reduced centers); the fine step scores the gathered posting
+    lists through any scorer. Returns (vals, ids): (m, k).
     """
-    q_coarse = queries.astype(jnp.float32)
-    return _probe_and_score(q_coarse, scorer.prepare_queries(queries),
-                            scorer, index, k, nprobe)
+    return replace(index, nprobe=nprobe).search(queries, scorer, k)
 
 
 def search(q_low: jax.Array, q_full: jax.Array, x_low: jax.Array,
            index: IVFIndex, k: int, nprobe: int = 8):
-    """Legacy linear entry point: pre-reduced ``q_low`` + raw ``x_low``."""
-    return _probe_and_score(q_full, q_low, LinearScorer(x_low=x_low), index,
-                            k, nprobe)
+    """Legacy linear entry point: pre-reduced ``q_low`` + raw ``x_low``.
+
+    Always probes in FULL dimension: a reduced-centers companion is built
+    for a specific scorer family's qstate, and this signature gives no way
+    to know that ``q_low`` matches it -- use :func:`search_scorer` (or the
+    Index protocol) for reduced-space probing."""
+    qstate = IVFQueryState(qstate=q_low,
+                           q_coarse=q_full.astype(jnp.float32))
+    return _probe_and_score(qstate, LinearScorer(x_low=x_low),
+                            replace(index, nprobe=nprobe,
+                                    center_scorer=None), k)

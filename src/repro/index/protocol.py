@@ -1,0 +1,110 @@
+"""The Index protocol: one traversal contract, every index, any scorer.
+
+The Scorer protocol (:mod:`repro.core.scorer`) made the database
+*representation* pluggable; this module does the same for the database
+*traversal*. An index is a pytree (its arrays are jit/shard_map arguments;
+its configuration -- scan block, nprobe, beam width -- is static treedef
+metadata) implementing:
+
+    qstate = index.prepare_queries(scorer, queries)   # index-specific state
+    vals, ids = index.candidates(qstate, scorer, k)   # main-search step
+    vals, ids = index.search(queries, scorer, k)      # prepare + candidates
+    index.shard_specs(axes)                           # PartitionSpec tree
+    index.globalize_ids(scorer, ids, row_start)       # local -> global ids
+
+``prepare_queries`` wraps ``scorer.prepare_queries`` plus whatever extra
+query state the traversal needs (the IVF coarse probe keeps the full-D
+queries only when its centers have NOT been projected into the reduced
+space). ``candidates`` returns (m, k) (score, id) pairs with ids in the
+scorer's EXTERNAL (original database) id space -- every index consumes
+``scorer.score_block`` / ``scorer.score_ids`` and inherits the Scorer
+protocol's id-translation contract, so index choice, scorer choice and
+placement compose freely with no isinstance dispatch.
+
+The id-globalization contract (index side): when an index is one shard of
+a :class:`repro.index.distributed.ShardedIndex`, its whole database is the
+row range ``[row_start, row_start + n_local)`` of the global database and
+every id it emits is local. ``globalize_ids(scorer, ids, row_start)``
+lifts those to global original ids (uniformly ``ids + row_start``;
+padding/-1 slots stay -1). This is distinct from the *scorer-level*
+``scorer.globalize_ids(ids, shard_idx)`` contract used by the flat
+global-build-then-row-shard path (:func:`make_sharded_search_scorer`),
+where a globally-built sorted scorer already emits global ids.
+
+Implementations: :class:`FlatIndex` (here), :class:`repro.index.ivf.IVFIndex`,
+:class:`repro.index.graph.GraphIndex`, and the placement wrapper
+:class:`repro.index.distributed.ShardedIndex` which shard_maps ANY of them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["register_index_pytree", "FlatIndex", "replace"]
+
+replace = dataclasses.replace
+
+
+def register_index_pytree(cls, data_fields, static_fields):
+    """Register ``cls`` as a jax pytree whose ``data_fields`` are children
+    (arrays / sub-pytrees) and whose ``static_fields`` are hashable aux
+    data baked into the treedef -- so ints like ``nprobe`` or ``beam``
+    stay static under jit instead of becoming traced leaves."""
+
+    def flatten(obj):
+        return ([getattr(obj, f) for f in data_fields],
+                tuple(getattr(obj, f) for f in static_fields))
+
+    def unflatten(aux, children):
+        return cls(**dict(zip(data_fields, children)),
+                   **dict(zip(static_fields, aux)))
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+def stacked_specs(tree, axes):
+    """PartitionSpec tree sharding every array leaf of a per-shard-stacked
+    pytree along its leading (shard) dimension."""
+    from jax.sharding import PartitionSpec as P
+    spec = P(tuple(axes))
+    return jax.tree_util.tree_map(lambda _: spec, tree)
+
+
+def _offset_ids(ids: jax.Array, row_start) -> jax.Array:
+    """Uniform local -> global id lift; -1 (padding / unfilled) stays -1."""
+    return jnp.where(ids >= 0, ids + row_start, -1)
+
+
+@dataclass(frozen=True, eq=False)
+class FlatIndex:
+    """Exhaustive blocked scan: the index with no structure.
+
+    ``candidates`` is :func:`repro.index.bruteforce.scan_scorer` -- the one
+    blocked top-k every scorer supports. ``block`` is static (scorers with
+    a fixed internal layout override it via ``layout_block``)."""
+
+    block: int = 4096
+
+    def prepare_queries(self, scorer, queries):
+        return scorer.prepare_queries(queries)
+
+    def candidates(self, qstate, scorer, k: int):
+        from repro.index import bruteforce
+        return bruteforce.scan_scorer(scorer, qstate, k, self.block)
+
+    def search(self, queries, scorer, k: int):
+        return self.candidates(self.prepare_queries(scorer, queries),
+                               scorer, k)
+
+    def shard_specs(self, axes):
+        return stacked_specs(self, axes)    # no array leaves: empty tree
+
+    def globalize_ids(self, scorer, ids, row_start):
+        return _offset_ids(ids, row_start)
+
+
+register_index_pytree(FlatIndex, data_fields=(), static_fields=("block",))

@@ -1,13 +1,21 @@
 """Serving driver: batched vector-search service (Algorithm 1) over a
-synthetic collection with selectable scoring mode.
+synthetic collection with selectable scoring mode, index and placement.
 
     PYTHONPATH=src python -m repro.launch.serve --mode gleanvec --n 50000
+    PYTHONPATH=src python -m repro.launch.serve --mode gleanvec-int8 \
+        --index ivf --nprobe 12 --reduced-probe
+    PYTHONPATH=src python -m repro.launch.serve --mode gleanvec \
+        --index ivf --shards 4
 
-Every mode (full / sphering / gleanvec / sphering-int8 / gleanvec-int8 /
-gleanvec-sorted / gleanvec-int8-sorted) runs through the same
-SearchArtifacts + Scorer path -- the mode string is the only thing that
-differs between a full-precision service and a cluster-contiguous
-GleanVec+int8 one.
+The three axes are orthogonal: every scorer mode (full / sphering /
+gleanvec / sphering-int8 / gleanvec-int8 / gleanvec-sorted /
+gleanvec-int8-sorted) x every index (flat scan / IVF / graph) x placement
+(single device, or --shards N per-shard sub-indexes merged through the
+ShardedIndex wrapper) runs through the same SearchArtifacts + Scorer +
+Index protocol path -- the flags are the only thing that differs between a
+full-precision flat service and a sharded cluster-contiguous GleanVec+int8
+IVF one. ``--reduced-probe`` projects the IVF coarse centers into the
+scorer's reduced space so the probe consumes the prepared queries (R^d).
 """
 from __future__ import annotations
 
@@ -15,23 +23,55 @@ import argparse
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import gleanvec as gv, leanvec_sphering as lvs, metrics
 from repro.core import search as msearch
 from repro.core.scorer import MODES
 from repro.data import vectors
+from repro.index import distributed, graph, ivf
+from repro.index.protocol import replace
 from repro.serve.engine import ServingEngine, make_search_fn
+
+
+def build_index(args, X, scorer, model):
+    """The --index axis: an Index-protocol object (or None = flat scan)."""
+    if args.index == "flat":
+        return None
+    if args.index == "ivf":
+        idx = ivf.build(jax.random.PRNGKey(1), X, n_lists=args.lists,
+                        nprobe=args.nprobe)
+        if args.reduced_probe:
+            idx = ivf.with_reduced_centers(idx, scorer, model)
+        return idx
+    if args.index == "graph":
+        return replace(graph.build(np.asarray(X), r=args.graph_degree,
+                                   n_iters=4, seed=0),
+                       beam=args.beam, max_hops=args.max_hops)
+    raise ValueError(f"unknown index {args.index!r}")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="gleanvec", choices=list(MODES))
+    ap.add_argument("--index", default="flat",
+                    choices=["flat", "ivf", "graph"])
     ap.add_argument("--n", type=int, default=50_000)
     ap.add_argument("--dim", type=int, default=512)
     ap.add_argument("--d", type=int, default=128)
     ap.add_argument("--clusters", type=int, default=48)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--kappa", type=int, default=50)
+    ap.add_argument("--lists", type=int, default=64)
+    ap.add_argument("--nprobe", type=int, default=12)
+    ap.add_argument("--reduced-probe", action="store_true",
+                    help="IVF coarse probe in the scorer's reduced space")
+    ap.add_argument("--beam", type=int, default=96)
+    ap.add_argument("--max-hops", type=int, default=200)
+    ap.add_argument("--graph-degree", type=int, default=24)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="N per-shard sub-indexes merged via ShardedIndex "
+                         "(0 = single index)")
     args = ap.parse_args()
 
     ds = vectors.make_dataset("serve", n=args.n, d=args.dim, n_queries=512,
@@ -46,15 +86,31 @@ def main():
     else:
         model = gv.fit(jax.random.PRNGKey(0), Q, X, c=args.clusters,
                        d=args.d)
-    artifacts = msearch.build_artifacts(args.mode, X, model)
+    if args.shards:
+        # the stacked per-shard scorer IS the serving scorer -- don't also
+        # encode the whole database into a global one just to discard it
+        index, stacked = distributed.build_sharded_index(
+            args.index, args.mode, X, model, n_shards=args.shards,
+            key=jax.random.PRNGKey(1), n_lists=args.lists,
+            nprobe=args.nprobe, reduced_probe=args.reduced_probe,
+            beam=args.beam, max_hops=args.max_hops,
+            graph_kwargs={"r": args.graph_degree, "n_iters": 4, "seed": 0})
+        artifacts = msearch.SearchArtifacts(scorer=stacked, x_full=X,
+                                            model=model)
+    else:
+        artifacts = msearch.build_artifacts(args.mode, X, model)
+        index = build_index(args, X, artifacts.scorer, model)
     kappa = 10 if args.mode == "full" else args.kappa
-    search_fn = make_search_fn(artifacts, k=10, kappa=kappa)
+    search_fn = make_search_fn(artifacts, k=10, kappa=kappa, index=index)
 
     engine = ServingEngine(search_fn, batch_size=args.batch, dim=args.dim)
     ids = engine.submit(ds.queries_test)
     rec = metrics.recall_at_k(jnp.asarray(ids), jnp.asarray(ds.gt[:, :10]))
     s = engine.stats
-    print(f"mode={args.mode} n={args.n} D={args.dim} d={args.d}")
+    placement = f"shards={args.shards}" if args.shards else "single"
+    print(f"mode={args.mode} index={args.index} {placement} "
+          f"n={args.n} D={args.dim} d={args.d} "
+          f"reduced_probe={args.reduced_probe}")
     print(f"QPS={s.qps:.0f} p50={s.percentile_ms(50):.1f}ms "
           f"p99={s.percentile_ms(99):.1f}ms recall@10={float(rec):.3f}")
 

@@ -18,24 +18,27 @@ import numpy as np
 __all__ = ["ServeStats", "ServingEngine", "make_search_fn"]
 
 
-def make_search_fn(artifacts, k: int, kappa: int, block: int = 4096):
-    """Close Algorithm 1 over ``artifacts`` for any scorer: a jit-able
-    ``queries (B, D) -> ids (B, k)`` with a flat main search + rerank.
+def make_search_fn(artifacts, k: int, kappa: int, block: int = 4096,
+                   index=None):
+    """Close Algorithm 1 over ``artifacts`` for any scorer and any Index
+    protocol implementation: a jit-able ``queries (B, D) -> ids (B, k)``
+    with a main search + rerank.
 
-    This is the standard way to stand up a :class:`ServingEngine` on a
-    :class:`repro.core.search.SearchArtifacts` of any mode -- the engine
-    neither knows nor cares which representation is being scanned.
+    ``index`` defaults to the flat blocked scan (``FlatIndex(block)``);
+    pass an ``IVFIndex`` / ``GraphIndex`` / ``ShardedIndex`` to serve the
+    same artifacts through a different traversal -- the engine neither
+    knows nor cares which representation is scanned nor how it is
+    traversed or placed.
     """
     from repro.core import search as msearch
-    from repro.index import bruteforce
+    from repro.index.protocol import FlatIndex
 
-    def index_search(q_low, art, kap):
-        _, cand = bruteforce.scan_scorer(art.scorer, q_low, kap, block)
-        return cand
+    if index is None:
+        index = FlatIndex(block=block)
 
     def search_fn(queries):
-        return msearch.multi_step_search(queries, artifacts, index_search,
-                                         k, kappa)
+        return msearch.multi_step_search(queries, artifacts, index, k,
+                                         kappa)
 
     return search_fn
 

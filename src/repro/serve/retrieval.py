@@ -17,9 +17,13 @@ protocol's (:mod:`repro.core.scorer`), selected by string:
   * "gleanvec-int8-sorted": the int8 composition in the tag-sorted layout
     (d bytes of HBM per candidate AND no per-row view gather).
 
-All modes run through the SAME blocked scan + rerank; there is no per-mode
+All modes run through the SAME main-search + rerank; there is no per-mode
 code path and no model-type dispatch here -- the sorted layouts translate
 their internal row order back to candidate ids inside the Scorer protocol.
+The traversal is an orthogonal axis: ``build_retrieval_index(...,
+index=...)`` mounts the same scorer behind any Index protocol
+implementation (flat scan by default, IVF, graph, or the sharded
+placement wrapper) with zero changes to the scoring or rerank code.
 The reduced scans land on the ``ip_topk`` / ``gleanvec_ip`` / ``sq_dot`` /
 ``gleanvec_sq`` Pallas kernels on TPU and their jnp mirrors elsewhere (see
 ``repro.kernels.scorer_topk``). Bandwidth per candidate drops from D*4
@@ -33,15 +37,20 @@ import jax
 
 from repro.core import search as msearch
 from repro.core.scorer import build_scorer
-from repro.index import bruteforce
+from repro.index.protocol import FlatIndex
 from repro.serve.engine import make_search_fn
 
 __all__ = ["RetrievalIndex", "build_retrieval_index", "retrieve"]
 
 
 class RetrievalIndex(NamedTuple):
+    """``mode`` picks the scorer (representation), ``index`` the Index
+    protocol traversal (None = flat blocked scan) -- the two axes are
+    orthogonal, so any mode serves through any index."""
+
     mode: str
     artifacts: msearch.SearchArtifacts
+    index: Any = None
 
     @property
     def x_full(self) -> jax.Array:
@@ -53,20 +62,31 @@ class RetrievalIndex(NamedTuple):
 
 
 def build_retrieval_index(candidates: jax.Array, mode: str = "full",
-                          model=None) -> RetrievalIndex:
-    """Encode the candidate set for ``mode`` (see ``scorer.MODES``)."""
-    artifacts = msearch.SearchArtifacts(
-        scorer=build_scorer(mode, candidates, model),
-        x_full=candidates, model=model)
-    return RetrievalIndex(mode=mode, artifacts=artifacts)
+                          model=None, index=None,
+                          scorer=None) -> RetrievalIndex:
+    """Encode the candidate set for ``mode`` (see ``scorer.MODES``);
+    ``index`` optionally mounts the scorer behind an Index protocol
+    traversal (IVF / graph / sharded) instead of the flat scan.
+
+    ``scorer`` overrides the mode-built one when the traversal needs a
+    matching non-global scorer -- a ``ShardedIndex`` consumes the STACKED
+    per-shard scorer from ``distributed.build_sharded_index``, not a
+    scorer built over the global candidate set."""
+    if scorer is None:
+        scorer = build_scorer(mode, candidates, model)
+    artifacts = msearch.SearchArtifacts(scorer=scorer, x_full=candidates,
+                                        model=model)
+    return RetrievalIndex(mode=mode, artifacts=artifacts, index=index)
 
 
 def retrieve(index: RetrievalIndex, user_vecs: jax.Array, k: int,
              kappa: Optional[int] = None, block: int = 4096):
     """``user_vecs (B, D)`` -> top-k candidate ids (B, k)."""
-    if index.mode == "full":    # exact scan IS the answer; skip the rerank
-        _, ids = bruteforce.search_scorer(user_vecs, index.scorer, k, block)
+    if index.mode == "full":    # exact search IS the answer; skip the rerank
+        traversal = index.index or FlatIndex(block=block)
+        _, ids = traversal.search(user_vecs, index.scorer, k)
         return ids
     kappa = kappa or max(k, 2 * k)
-    search_fn = make_search_fn(index.artifacts, k, kappa, block)
+    search_fn = make_search_fn(index.artifacts, k, kappa, block,
+                               index=index.index)
     return search_fn(user_vecs)

@@ -51,14 +51,14 @@ def test_table1_and_kernels():
     table1_search.run()
     kernels_micro.run(n=5000, dim=128, d=48, c=8, m=8)
     from benchmarks.common import ROWS
-    assert any(r.startswith("table1/") for r in ROWS)
+    assert any(r.startswith("table1_search/") for r in ROWS)
     assert any(r.startswith("kernel/") for r in ROWS)
 
 
 def test_run_smoke_path(tmp_path):
     """The CLI harness --smoke path runs end-to-end, writes the CSV and the
-    machine-readable BENCH_<name>.json files, and covers the sorted and
-    fused-int8 modes."""
+    machine-readable BENCH_<name>.json files, and covers the sorted,
+    fused-int8, sharded-index and reduced-probe modes."""
     import json
 
     from benchmarks import run as bench_run
@@ -66,21 +66,29 @@ def test_run_smoke_path(tmp_path):
     bench_run.main(["--smoke", "--out", str(out)])
     rows = out.read_text().strip().splitlines()
     assert rows[0] == "name,us_per_call,derived"
-    assert any(r.startswith("table1/flat/gleanvec-") and "-int8" in r
+    assert any(r.startswith("table1_search/flat/gleanvec-") and "-int8" in r
                for r in rows)
-    assert any(r.startswith("table1/flat/gleanvec-") and "-sorted" in r
-               for r in rows)
-    assert any(r.startswith("table1/flat/gleanvec-")
+    assert any(r.startswith("table1_search/flat/gleanvec-")
+               and "-sorted" in r for r in rows)
+    assert any(r.startswith("table1_search/flat/gleanvec-")
                and "-int8-sorted" in r for r in rows)
+    assert any(r.startswith("table1_search/ivf/") for r in rows)
+    assert any(r.startswith("table1_search/ivf-rprobe/") for r in rows)
+    assert any(r.startswith("table1_search/ivf-sharded/") for r in rows)
+    assert any(r.startswith("table1_search/graph-sharded/") for r in rows)
     assert any(r.startswith("kernel/gleanvec_sq/fused-int8") for r in rows)
 
     # machine-readable trajectory: one BENCH_<group>.json per bench group
-    table1 = json.loads((tmp_path / "BENCH_table1.json").read_text())
-    assert table1["bench"] == "table1"
+    table1 = json.loads((tmp_path / "BENCH_table1_search.json").read_text())
+    assert table1["bench"] == "table1_search"
     assert all("us_per_call" in e and "ops_per_s" in e
                for e in table1["results"])
     assert any(isinstance(e.get("recall10"), float)
                for e in table1["results"])
+    # the R^d coarse probe must compile to ~D/d fewer probe flops
+    flops = {e["name"].split("/")[1]: e["probe_flops"]
+             for e in table1["results"] if "probe_flops" in e}
+    assert flops["ivf-rprobe"] * 2 <= flops["ivf"], flops
     kern = json.loads((tmp_path / "BENCH_kernel.json").read_text())
     fused = next(e for e in kern["results"]
                  if e["name"] == "kernel/gleanvec_sq/fused-int8")

@@ -1,0 +1,295 @@
+"""Index protocol: flat/IVF/graph conformance, reduced-space coarse
+probing (recall parity + R^d cost assertion), and sharded IVF / sharded
+graph parity with their single-device counterparts on a 4-way CPU mesh
+for every scorer family (ID and OOD query regimes)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gleanvec as gv, leanvec_sphering as lvs, metrics
+from repro.core import scorer as sc
+from repro.core import search as msearch
+from repro.data import vectors
+from repro.index import FlatIndex, bruteforce, distributed, graph, ivf
+from repro.index.protocol import replace
+from repro.utils import hlo_analysis
+
+pytestmark = pytest.mark.tier1
+
+REPO_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                        "src"))
+
+ALL_MODES = ["full", "sphering", "gleanvec", "sphering-int8",
+             "gleanvec-int8", "gleanvec-sorted", "gleanvec-int8-sorted"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = vectors.make_dataset("idxproto", n=2048, d=64, n_queries=64,
+                              ood=True, seed=7)
+    X = jnp.asarray(ds.database)
+    Q = jnp.asarray(ds.queries_learn)
+    lin = lvs.fit(Q, X, 24)
+    gvm = gv.fit(jax.random.PRNGKey(0), Q, X, c=8, d=24)
+    iv = ivf.build(jax.random.PRNGKey(1), X, n_lists=16)
+    return ds, X, lin, gvm, iv
+
+
+def _model_for(mode, lin, gvm):
+    if mode == "full":
+        return None
+    return lin if mode.startswith("sphering") else gvm
+
+
+def test_flat_index_is_the_blocked_scan(setup):
+    """FlatIndex.search == bruteforce.search_scorer, bit-identical."""
+    ds, X, lin, gvm, _ = setup
+    QT = jnp.asarray(ds.queries_test)
+    s = sc.gleanvec_scorer(gvm, X)
+    v1, i1 = bruteforce.search_scorer(QT, s, 10, block=512)
+    v2, i2 = FlatIndex(block=512).search(QT, s, 10)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2))
+
+
+def test_ivf_build_packing_vectorized(setup):
+    """The argsort/bincount list packing == the per-list np.where
+    reference (same buckets, same within-list order)."""
+    rng = np.random.default_rng(0)
+    tags = rng.integers(0, 13, size=1000).astype(np.int32)
+    tags[tags == 11] = 0                     # force an empty list
+    packed = ivf._pack_lists(tags, 13)
+    buckets = [np.where(tags == c)[0] for c in range(13)]
+    max_len = max(1, max(len(b) for b in buckets))
+    ref = np.full((13, max_len), -1, np.int32)
+    for c, b in enumerate(buckets):
+        ref[c, : len(b)] = b
+    np.testing.assert_array_equal(packed, ref)
+
+
+@pytest.mark.parametrize("mode", ALL_MODES)
+def test_reduced_probe_recall_all_scorers(setup, mode):
+    """IVF with centers projected into the scorer's reduced space reaches
+    the full-D probe's recall@10 - tolerance at MATCHED nprobe, for every
+    scorer family."""
+    ds, X, lin, gvm, iv = setup
+    QT = jnp.asarray(ds.queries_test)
+    gt = jnp.asarray(ds.gt[:, :10])
+    model = _model_for(mode, lin, gvm)
+    s = sc.build_scorer(mode, X, model, block=256)
+    _, i_full = ivf.search_scorer(QT, s, iv, k=10, nprobe=8)
+    ivr = ivf.with_reduced_centers(iv, s, model)
+    assert ivr.center_scorer is not None
+    _, i_red = ivf.search_scorer(QT, s, ivr, k=10, nprobe=8)
+    r_full = float(metrics.recall_at_k(i_full, gt))
+    r_red = float(metrics.recall_at_k(i_red, gt))
+    assert r_red >= r_full - 0.06, (mode, r_full, r_red)
+
+
+def test_reduced_probe_paper_config_recall():
+    """Paper-proportioned config (d/D = 160/512 as in gleanvec_paper's
+    search shapes, scaled down): reduced-space probing stays within
+    tolerance of full-D probing at matched nprobe."""
+    ds = vectors.make_dataset("idxproto-paper", n=4096, d=256,
+                              n_queries=64, ood=True, seed=11)
+    X = jnp.asarray(ds.database)
+    QT = jnp.asarray(ds.queries_test)
+    gt = jnp.asarray(ds.gt[:, :10])
+    gvm = gv.fit(jax.random.PRNGKey(0), jnp.asarray(ds.queries_learn), X,
+                 c=16, d=80)
+    s = sc.gleanvec_quantized_scorer(gvm, X)
+    iv = ivf.build(jax.random.PRNGKey(1), X, n_lists=32)
+    _, i_full = ivf.search_scorer(QT, s, iv, k=10, nprobe=8)
+    _, i_red = ivf.search_scorer(QT, s,
+                                 ivf.with_reduced_centers(iv, s, gvm),
+                                 k=10, nprobe=8)
+    r_full = float(metrics.recall_at_k(i_full, gt))
+    r_red = float(metrics.recall_at_k(i_red, gt))
+    assert r_full > 0.6, r_full
+    assert r_red >= r_full - 0.05, (r_full, r_red)
+
+
+def test_reduced_probe_runs_in_reduced_dim():
+    """normalize_cost assertion: the compiled coarse probe touches ~D/d
+    fewer flops AND bytes once the centers live in R^d."""
+    ds = vectors.make_dataset("idxproto-cost", n=2048, d=256,
+                              n_queries=64, ood=True, seed=3)
+    X = jnp.asarray(ds.database)
+    QT = jnp.asarray(ds.queries_test)
+    lin = lvs.fit(jnp.asarray(ds.queries_learn), X, 64)   # d = D / 4
+    s = sc.linear_scorer(lin, X)
+    iv = ivf.build(jax.random.PRNGKey(1), X, n_lists=32)
+    ivr = ivf.with_reduced_centers(iv, s, lin)
+    qs_full = iv.prepare_queries(s, QT)
+    qs_red = ivr.prepare_queries(s, QT)
+    assert qs_full.q_coarse is not None and qs_red.q_coarse is None
+    cost_f = hlo_analysis.normalize_cost(
+        jax.jit(ivf.coarse_scores).lower(iv, qs_full).compile()
+        .cost_analysis())
+    cost_r = hlo_analysis.normalize_cost(
+        jax.jit(ivf.coarse_scores).lower(ivr, qs_red).compile()
+        .cost_analysis())
+    # D/d = 4: require at least a 2x drop on both axes
+    assert cost_r["flops"] * 2 <= cost_f["flops"], (cost_r, cost_f)
+    assert cost_r["bytes accessed"] * 2 <= cost_f["bytes accessed"], \
+        (cost_r, cost_f)
+
+
+def test_multi_step_and_serving_accept_index_protocol(setup):
+    """Algorithm 1, the serving search fn and the retrieval layer all take
+    an Index-protocol object -- index x scorer orthogonality end to end."""
+    from repro.serve import retrieval
+    from repro.serve.engine import make_search_fn
+    ds, X, lin, gvm, iv = setup
+    QT = jnp.asarray(ds.queries_test)
+    gt = jnp.asarray(ds.gt[:, :10])
+    g = replace(graph.build(ds.database, r=16, n_iters=4, seed=0),
+                beam=96, max_hops=200)
+    art = msearch.build_artifacts("gleanvec-int8", X, gvm)
+    ivr = ivf.with_reduced_centers(iv, art.scorer, gvm)
+    for index in (FlatIndex(block=512), replace(iv, nprobe=8), ivr, g):
+        ids = msearch.multi_step_search(QT, art, index, 10, 50)
+        rec = float(metrics.recall_at_k(ids, gt))
+        assert rec > 0.8, (type(index).__name__, rec)
+        fn = make_search_fn(art, k=10, kappa=50, index=index)
+        ids2 = jax.jit(fn)(QT)
+        np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids2))
+    # the reduced-center companion is scorer-family-specific: build the
+    # retrieval index's probe from ITS scorer
+    s_gl = sc.gleanvec_scorer(gvm, X)
+    ri = retrieval.build_retrieval_index(
+        X, "gleanvec", gvm, index=ivf.with_reduced_centers(iv, s_gl, gvm))
+    ids = retrieval.retrieve(ri, QT, 10, kappa=50)
+    assert float(metrics.recall_at_k(jnp.asarray(ids), gt)) > 0.8
+
+
+def test_sharded_local_reference_recall(setup):
+    """Mesh-free ShardedIndex (the placement axis without devices): flat /
+    IVF / graph sharded searches stay near their unsharded recall."""
+    ds, X, lin, gvm, _ = setup
+    QT = jnp.asarray(ds.queries_test)
+    gt = jnp.asarray(ds.gt[:, :10])
+    for kind, floor in (("flat", 0.85), ("ivf", 0.8), ("graph", 0.7)):
+        sh, stacked = distributed.build_sharded_index(
+            kind, "gleanvec", X, gvm, n_shards=4,
+            key=jax.random.PRNGKey(1), n_lists=16, nprobe=8,
+            graph_kwargs={"r": 12, "n_iters": 3, "seed": 0})
+        _, ids = sh.search(QT, stacked, 10, kappa=40)
+        rec = float(metrics.recall_at_k(ids, gt))
+        assert rec > floor, (kind, rec)
+    # the retrieval layer mounts the sharded placement too: the STACKED
+    # scorer rides in via the scorer= override
+    from repro.serve import retrieval
+    ri = retrieval.build_retrieval_index(X, "gleanvec", gvm, index=sh,
+                                         scorer=stacked)
+    ids = retrieval.retrieve(ri, QT, 10, kappa=40)
+    assert float(metrics.recall_at_k(jnp.asarray(ids), gt)) > 0.7
+
+
+# ---------------------------------------------------------------------------
+# Multi-device parity (subprocess: the main process must keep 1 device).
+# ---------------------------------------------------------------------------
+
+
+def _run(body: str) -> str:
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, {src!r})
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.utils.jax_compat import make_mesh, set_mesh
+        from repro.core import gleanvec as gv, leanvec_sphering as lvs
+        from repro.core import scorer as sc
+        from repro.data import vectors
+        from repro.index import distributed, ivf
+        mesh = make_mesh((4,), ("shard",))
+        ALL_MODES = {modes!r}
+    """).format(src=REPO_SRC, modes=ALL_MODES) + textwrap.dedent(body)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.mark.parametrize("regime", ["ood", "id"])
+@pytest.mark.parametrize("kind", ["ivf", "graph"])
+def test_sharded_parity_all_scorers(kind, regime):
+    """Sharded IVF and sharded graph on a 4-way CPU mesh return IDENTICAL
+    (value, id) results to their single-device counterparts (the same
+    per-shard searches merged on one device) for every scorer family,
+    sorted layouts included."""
+    out = _run(f"""
+        ood = {regime!r} == "ood"
+        ds = vectors.make_dataset("par-{kind}-{regime}", n=2048, d=64,
+                                  n_queries=16, ood=ood, seed=3)
+        X = jnp.asarray(ds.database)
+        Q = jnp.asarray(ds.queries_learn)
+        QT = jnp.asarray(ds.queries_test)
+        gvm = gv.fit(jax.random.PRNGKey(0), Q, X, c=8, d=24)
+        lin = lvs.fit(Q, X, 24)
+        for mode in ALL_MODES:
+            model = (None if mode == "full"
+                     else lin if mode.startswith("sphering") else gvm)
+            sh, stacked = distributed.build_sharded_index(
+                {kind!r}, mode, X, model, mesh=mesh,
+                key=jax.random.PRNGKey(1), n_lists=16, nprobe=8,
+                graph_kwargs=dict(r=12, n_iters=3, seed=0))
+            ref_v, ref_i = sh.search_local(QT, stacked, 10, kappa=20)
+            with set_mesh(mesh):
+                v, i = jax.jit(
+                    lambda q, s: sh.search(q, s, 10, kappa=20))(QT, stacked)
+            assert np.allclose(np.asarray(v), np.asarray(ref_v),
+                               rtol=1e-5, atol=1e-5), mode
+            assert np.array_equal(np.asarray(i), np.asarray(ref_i)), mode
+        print("PARITY_OK")
+    """)
+    assert "PARITY_OK" in out
+
+
+def test_sharded_ivf_matches_global_ivf():
+    """Row-sharded posting lists + replicated coarse quantizer probe the
+    SAME lists as the global IVF, so the merged top-k equals the global
+    single-index search exactly (non-quantized modes: per-shard scorer
+    encodes are float-identical row slices of the global encode)."""
+    out = _run("""
+        ds = vectors.make_dataset("par-global", n=2048, d=64,
+                                  n_queries=16, ood=True, seed=5)
+        X = jnp.asarray(ds.database)
+        Q = jnp.asarray(ds.queries_learn)
+        QT = jnp.asarray(ds.queries_test)
+        gvm = gv.fit(jax.random.PRNGKey(0), Q, X, c=8, d=24)
+        lin = lvs.fit(Q, X, 24)
+        key = jax.random.PRNGKey(1)
+        for mode in ("full", "sphering", "gleanvec"):
+            model = (None if mode == "full"
+                     else lin if mode.startswith("sphering") else gvm)
+            s_global = sc.build_scorer(mode, X, model)
+            iv = ivf.build(key, X, n_lists=16)
+            gv_v, gv_i = ivf.search_scorer(QT, s_global, iv, k=10, nprobe=8)
+            sh, stacked = distributed.build_sharded_index(
+                "ivf", mode, X, model, mesh=mesh, key=key, n_lists=16,
+                nprobe=8)
+            with set_mesh(mesh):
+                v, i = jax.jit(
+                    lambda q, s: sh.search(q, s, 10, kappa=10))(QT, stacked)
+            order_g = np.argsort(np.asarray(gv_i), axis=1)
+            order_s = np.argsort(np.asarray(i), axis=1)
+            assert np.array_equal(np.take_along_axis(np.asarray(i),
+                                                     order_s, 1),
+                                  np.take_along_axis(np.asarray(gv_i),
+                                                     order_g, 1)), mode
+            assert np.allclose(np.take_along_axis(np.asarray(v),
+                                                  order_s, 1),
+                               np.take_along_axis(np.asarray(gv_v),
+                                                  order_g, 1),
+                               rtol=1e-5, atol=1e-5), mode
+        print("GLOBAL_PARITY_OK")
+    """)
+    assert "GLOBAL_PARITY_OK" in out
