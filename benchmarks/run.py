@@ -27,7 +27,7 @@ def main(argv=None) -> None:
 
     from benchmarks import (common, fig4_fig5_linear, fig6_cluster_structure,
                             fig7_tag_access, fig8_gleanvec, kernels_micro,
-                            table1_search)
+                            serving_stream, table1_search)
     saved = (common.BENCH_N, common.BENCH_QUERIES)
     try:
         if args.smoke:
@@ -40,6 +40,7 @@ def main(argv=None) -> None:
         if args.smoke:
             table1_search.run()
             kernels_micro.run(n=4000, dim=128, d=48, c=8, m=8)
+            serving_stream.run(cycles=2, batch=32)
         else:
             fig4_fig5_linear.run()
             fig6_cluster_structure.run()
@@ -47,6 +48,7 @@ def main(argv=None) -> None:
             fig8_gleanvec.run()
             table1_search.run()
             kernels_micro.run()
+            serving_stream.run()
         out = args.out or os.path.join(os.path.dirname(__file__), "..",
                                        "results", "bench.csv")
         os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)

@@ -1,0 +1,129 @@
+"""Streaming serving (Section 3.2) through the state-passing engine:
+steady-state QPS / p50 / p99 under live traffic, hot-swap latency,
+refresh-cycle cost, and -- the redesign's whole point -- recompile counts
+per swap for the state-passing engine (0) vs the closure-rebuild baseline
+the serving stack used before (1 full re-jit per artifact swap). Rows land
+in ``BENCH_serving_stream.json`` via ``common.write_json_results``.
+
+CPU wall times characterize the harness; the recompile counts and the
+state-swap vs re-jit latency RATIO are the architecture's signal.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BENCH_QUERIES, BENCH_N, emit, time_fn
+from repro.core import gleanvec as gv, metrics, streaming
+from repro.core import search as msearch
+from repro.data import vectors
+from repro.serve.engine import ServingEngine, make_search_fn
+
+MODES = ("gleanvec-int8", "gleanvec-int8-sorted")
+
+
+def _compile_count():
+    """Process-wide XLA backend-compile counter via jax.monitoring."""
+    counter = {"n": 0}
+
+    def listener(event, duration, **kwargs):
+        if event == "/jax/core/compile/backend_compile_duration":
+            counter["n"] += 1
+
+    jax.monitoring.register_event_duration_secs_listener(listener)
+    return counter
+
+
+def run(cycles: int = 3, batch: int = 64):
+    n = min(BENCH_N, 8000)
+    dim, d, c = 128, 32, 8
+    n0 = int(n * 0.8)
+    step = max(1, (n - n0) // (cycles + 1))   # +1: warmup cycle inserts too
+    ds = vectors.make_dataset("serving-stream", n=n, d=dim,
+                              n_queries=max(BENCH_QUERIES, 4 * batch),
+                              ood=True, seed=5)
+    X = jnp.asarray(ds.database)
+    QT = np.asarray(ds.queries_test)
+    rng = np.random.default_rng(0)
+    q_init = np.asarray(X)[rng.integers(0, n0, 512)] \
+        + 0.1 * rng.standard_normal((512, dim)).astype(np.float32)
+    model = gv.fit(jax.random.PRNGKey(0), jnp.asarray(q_init), X[:n0],
+                   c=c, d=d)
+    counter = _compile_count()
+
+    for mode in MODES:
+        arts = streaming.build_streaming_artifacts(
+            mode, X[:n0], model, capacity=n, sort_block=256, slack_blocks=2)
+        engine = ServingEngine(msearch.make_state(arts), k=10, kappa=50,
+                               batch_size=batch, dim=dim)
+        stream = streaming.init_from_artifacts(arts, q_init,
+                                               refresh_every=step)
+        # steady-state serving (post-warmup)
+        engine.submit(QT[:batch])
+        engine.stats.latencies_ms.clear()
+        engine.stats.n_queries = engine.stats.n_batches = 0
+        engine.stats.total_s = 0.0
+        t_steady = time_fn(lambda: engine.submit(QT[:4 * batch]))
+        s = engine.stats
+        emit(f"serving_stream/steady-{mode}", t_steady / 4,
+             f"qps={s.qps:.0f};p50_ms={s.percentile_ms(50):.2f};"
+             f"p99_ms={s.percentile_ms(99):.2f}")
+
+        # streaming refresh cycles: observe -> insert -> refresh -> swap;
+        # cycle 0 is the warmup (compiles the eager host-loop ops once)
+        # and is excluded from the recompile count and the timers
+        c0, refresh_us, inserted, swaps0 = counter["n"], [], 0, 0
+        for cycle in range(cycles + 1):
+            obs = QT[(cycle * batch) % len(QT):][:batch]
+            engine.submit(obs)
+            stream = streaming.observe_queries(stream, jnp.asarray(obs))
+            rows = X[n0 + cycle * step: n0 + (cycle + 1) * step]
+            t0 = time.perf_counter()
+            arts2, _ = streaming.insert_rows(engine.state.artifacts, rows)
+            engine.swap(engine.state._replace(artifacts=arts2))
+            stream = streaming.insert(stream, rows)
+            stream = streaming.refresh(stream)
+            engine.swap(streaming.refresh_state(engine.state, stream,
+                                                source="full"))
+            jax.block_until_ready(engine.state.artifacts.scorer)
+            refresh_us.append((time.perf_counter() - t0) * 1e6)
+            inserted += rows.shape[0]
+            if cycle == 0:      # end of warmup: start counting
+                c0, refresh_us, inserted = counter["n"], [], 0
+                engine.stats.swap_ms.clear()
+                swaps0 = engine.n_swaps
+        recompiles = counter["n"] - c0
+        swap_us = float(np.median(engine.stats.swap_ms)) * 1e3
+        emit(f"serving_stream/swap-{mode}", swap_us,
+             f"recompiles={recompiles};cycles={cycles};"
+             f"inserted={inserted};swaps={engine.n_swaps - swaps0}")
+        emit(f"serving_stream/refresh_cycle-{mode}",
+             float(np.median(refresh_us)),
+             f"recompiles={recompiles};rows_per_cycle={step}")
+
+        # post-stream quality on the drifted distribution
+        live = streaming.live_mask(engine.state.artifacts)
+        gt = np.nonzero(live)[0][vectors.exact_topk(
+            QT[:128], np.asarray(engine.state.artifacts.x_full)[live], 10)]
+        rec = float(metrics.recall_at_k(
+            jnp.asarray(engine.submit(QT[:128])), jnp.asarray(gt)))
+        emit(f"serving_stream/recall-{mode}", 0.0, f"recall10={rec:.3f}")
+
+        # the pre-redesign baseline: every artifact swap rebuilds + re-jits
+        # the closure -- measure one full re-jit + first batch per swap
+        c1 = counter["n"]
+        t0 = time.perf_counter()
+        fn = jax.jit(make_search_fn(engine.state.artifacts, k=10, kappa=50))
+        jax.block_until_ready(fn(jnp.asarray(QT[:batch])))
+        rebuild_us = (time.perf_counter() - t0) * 1e6
+        emit(f"serving_stream/rebuild_swap-{mode}", rebuild_us,
+             f"recompiles={counter['n'] - c1};"
+             f"speedup={rebuild_us / max(swap_us, 1e-9):.0f}x")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

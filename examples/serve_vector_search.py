@@ -1,6 +1,7 @@
 """End-to-end serving driver (the paper's deployment scenario): build a
 GleanVec index over a vector collection and serve batched queries through
-the ServingEngine, reporting QPS / latency percentiles / recall.
+the state-passing ServingEngine, reporting QPS / latency percentiles /
+recall -- then hot-swap a refreshed state with zero recompiles.
 
     PYTHONPATH=src python examples/serve_vector_search.py [--n 50000]
 """
@@ -15,8 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gleanvec as gv, metrics
+from repro.core import search as msearch
 from repro.data import vectors
-from repro.index import bruteforce
 from repro.serve.engine import ServingEngine
 
 
@@ -36,21 +37,14 @@ def main():
     X = jnp.asarray(ds.database)
     gmodel = gv.fit(jax.random.PRNGKey(0), jnp.asarray(ds.queries_learn), X,
                     c=args.clusters, d=args.d)
-    tags, x_low = gv.encode_database(gmodel, X)
+    artifacts = msearch.build_artifacts("gleanvec", X, gmodel)
     print(f"encoded: {args.dim * 4}B -> {args.d * 4 + 1}B per vector "
           f"({args.dim * 4 / (args.d * 4 + 1):.1f}x bandwidth saving)")
 
-    def search_fn(queries):
-        q_views = gv.project_queries_eager(gmodel, queries)     # Alg. 4
-        _, cand = bruteforce.search_gleanvec(q_views, tags, x_low,
-                                             args.kappa)
-        vecs = X[jnp.where(cand >= 0, cand, 0)]                 # rerank
-        full = jnp.einsum("mkd,md->mk", vecs, queries)
-        top = jax.lax.top_k(jnp.where(cand >= 0, full, -3.4e38), 10)[1]
-        return jnp.take_along_axis(cand, top, axis=1)
-
     print("== compiling + serving ==")
-    engine = ServingEngine(search_fn, batch_size=args.batch, dim=args.dim)
+    engine = ServingEngine(msearch.make_state(artifacts), k=10,
+                           kappa=args.kappa, batch_size=args.batch,
+                           dim=args.dim)
     ids = engine.submit(ds.queries_test)
     rec = metrics.recall_at_k(jnp.asarray(ids),
                               jnp.asarray(ds.gt[:, :10]))
@@ -58,6 +52,18 @@ def main():
     print(f"queries={s.n_queries} batches={s.n_batches}")
     print(f"QPS={s.qps:.0f}  p50={s.percentile_ms(50):.1f}ms  "
           f"p99={s.percentile_ms(99):.1f}ms  recall@10={float(rec):.3f}")
+
+    # the artifacts are a pytree ARGUMENT of the compiled step, so a
+    # same-treedef update (here: a refit on the served query traffic)
+    # swaps in without recompiling anything
+    refit = gv.fit(jax.random.PRNGKey(1), jnp.asarray(ds.queries_test), X,
+                   c=args.clusters, d=args.d)
+    engine.swap(engine.state._replace(
+        artifacts=msearch.build_artifacts("gleanvec", X, refit)))
+    engine.submit(ds.queries_test[: args.batch])
+    print(f"hot-swapped refit model: version={engine.version} "
+          f"swap_p50={np.median(engine.stats.swap_ms):.2f}ms "
+          f"compiles={engine.n_compiles} (still the warmup executable)")
 
 
 if __name__ == "__main__":

@@ -23,8 +23,8 @@ import jax.numpy as jnp
 from repro.core import linalg, spherical_kmeans
 from repro.core.leanvec_sphering import SpheringModel
 
-__all__ = ["GleanVecModel", "fit", "fit_from_moments", "encode_database",
-           "sort_by_tag", "inverse_permutation",
+__all__ = ["GleanVecModel", "fit", "fit_from_moments", "assign_tags",
+           "encode_database", "sort_by_tag", "inverse_permutation",
            "project_queries_eager", "inner_products_lazy",
            "inner_products_eager", "per_cluster_moments"]
 
@@ -95,16 +95,25 @@ def fit(key: jax.Array, queries: jax.Array, database: jax.Array, c: int,
     return fit_from_moments(km.centers, k_q, k_x_c, d, rel_eps)
 
 
+def assign_tags(model: GleanVecModel, database: jax.Array) -> jax.Array:
+    """Eq. (19) cluster assignment under the model's fixed landmarks (the
+    tag half of :func:`encode_database`; streaming inserts use it alone to
+    route rank-1 moment updates)."""
+    x_unit = spherical_kmeans.normalize_rows(
+        jnp.asarray(database, jnp.float32))
+    return spherical_kmeans.assign(x_unit, model.centers)
+
+
 def encode_database(model: GleanVecModel, database: jax.Array):
     """Eq. (14)-(15): tags ``c_i`` and reduced vectors ``x_i_low = B_{c_i} x_i``.
 
     Returns ``(tags: (n,) int32, x_low: (n, d))``. The pair is what a
     deployment stores contiguously per vector.
     """
-    x_unit = spherical_kmeans.normalize_rows(database.astype(jnp.float32))
-    tags = spherical_kmeans.assign(x_unit, model.centers)
+    database = jnp.asarray(database, jnp.float32)
+    tags = assign_tags(model, database)
     # x_low_i = B_{tags_i} x_i: gather the (d, D) block then contract.
-    x_low = jnp.einsum("ndk,nk->nd", model.b[tags], database.astype(jnp.float32))
+    x_low = jnp.einsum("ndk,nk->nd", model.b[tags], database)
     return tags, x_low
 
 
@@ -127,12 +136,18 @@ def inner_products_eager(q_views: jax.Array, tags: jax.Array,
     return jnp.sum(q_views[tags] * x_low, axis=-1)
 
 
-def sort_by_tag(tags, x_low, x_full=None, block: int = 4096):
+def sort_by_tag(tags, x_low, x_full=None, block: int = 4096,
+                slack_blocks: int = 0):
     """Cluster-contiguous layout for the sorted scorers / scans (see
     core.scorer.SortedGleanVecScorer): sorts rows by tag and pads each
     cluster to a ``block`` multiple, so every block of the sorted database
     carries exactly one tag. Works for any (n, d) row array -- f32 reduced
     vectors or u8 codes (pads with zeros of the input dtype).
+
+    ``slack_blocks`` appends that many EXTRA all-padding blocks per
+    cluster beyond the round-up -- free slots the streaming path's
+    ``insert_rows`` can fill without changing the layout's shape (and
+    hence without recompiling anything that closed over it).
 
     Returns (x_low_sorted, block_tags, perm, x_full_sorted) where
     ``perm[i_sorted] = original id`` (padding rows map to id -1 and are
@@ -150,7 +165,7 @@ def sort_by_tag(tags, x_low, x_full=None, block: int = 4096):
     x_full_np = None if x_full is None else np.asarray(x_full)
     for ci in range(c):
         sel = order[sorted_tags == ci]
-        pad = (-len(sel)) % block
+        pad = (-len(sel)) % block + slack_blocks * block
         rows.append(x_low_np[sel])
         perm.append(sel.astype(np.int64))
         if full_rows is not None:

@@ -33,11 +33,24 @@ class SQDatabase(NamedTuple):
         return 8
 
 
-def quantize(x: jax.Array, bits: int = 8) -> SQDatabase:
-    """Per-dimension affine quantization to ``bits`` (<=8) levels."""
+def quantize(x: jax.Array, bits: int = 8,
+             valid: jax.Array = None) -> SQDatabase:
+    """Per-dimension affine quantization to ``bits`` (<=8) levels.
+
+    ``valid`` ((n,) bool, optional) restricts the (lo, hi) range fit to
+    the marked rows -- streaming stores quantize fixed-capacity arrays
+    whose dead/padding rows must not stretch the scales. Codes are still
+    produced for every row (out-of-range rows clip)."""
     levels = (1 << bits) - 1
-    lo = jnp.min(x, axis=0)
-    hi = jnp.max(x, axis=0)
+    if valid is None:
+        lo = jnp.min(x, axis=0)
+        hi = jnp.max(x, axis=0)
+    else:
+        v = valid[:, None]
+        lo = jnp.min(jnp.where(v, x, jnp.inf), axis=0)
+        hi = jnp.max(jnp.where(v, x, -jnp.inf), axis=0)
+        lo = jnp.where(jnp.isfinite(lo), lo, 0.0)   # no valid rows at all
+        hi = jnp.where(jnp.isfinite(hi), hi, 0.0)
     delta = jnp.maximum(hi - lo, 1e-12) / levels
     codes = jnp.clip(jnp.round((x - lo[None, :]) / delta[None, :]), 0,
                      levels).astype(jnp.uint8)
@@ -51,16 +64,26 @@ class ClusteredSQDatabase(NamedTuple):
 
 
 def quantize_per_cluster(x: jax.Array, tags: jax.Array, n_clusters: int,
-                         bits: int = 8) -> ClusteredSQDatabase:
+                         bits: int = 8,
+                         valid: jax.Array = None) -> ClusteredSQDatabase:
     """Per-cluster per-dimension affine quantization (the GleanVec ∘ SQ
     composition): each cluster's B_c x vectors get their own (lo, delta)
     per dimension, so anisotropy WITHIN a cluster is preserved at full
     8-bit resolution and the scales still fold into the per-cluster query
-    views A_c q."""
+    views A_c q.
+
+    ``valid`` ((n,) bool, optional) excludes rows from the per-cluster
+    range fit (dead / padding rows of streaming stores); their codes are
+    still produced (clipped). A cluster with no valid rows falls into the
+    existing empty-cluster guard."""
     levels = (1 << bits) - 1
     x = x.astype(jnp.float32)
-    lo = jax.ops.segment_min(x, tags, num_segments=n_clusters)
-    hi = jax.ops.segment_max(x, tags, num_segments=n_clusters)
+    x_lo, x_hi = x, x
+    if valid is not None:
+        x_lo = jnp.where(valid[:, None], x, jnp.inf)
+        x_hi = jnp.where(valid[:, None], x, -jnp.inf)
+    lo = jax.ops.segment_min(x_lo, tags, num_segments=n_clusters)
+    hi = jax.ops.segment_max(x_hi, tags, num_segments=n_clusters)
     empty = ~jnp.isfinite(lo)          # empty cluster -> +-inf sentinels
     lo = jnp.where(empty, 0.0, lo)
     hi = jnp.where(~jnp.isfinite(hi), 0.0, hi)

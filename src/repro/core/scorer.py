@@ -150,12 +150,99 @@ def _pad0(x: jax.Array, pad: int) -> jax.Array:
     return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
 
 
+# ---------------------------------------------------------------------------
+# Streaming-store helpers (the ``live`` mask + row-level update machinery).
+#
+# A scorer built by ``streaming.build_streaming_artifacts`` is a FIXED-
+# CAPACITY store: its row arrays are pre-allocated and an optional ``live``
+# mask ((n,) bool) marks which slots currently hold a vector. Dead slots
+# score -inf and translate to id -1, so they can never reach the rerank;
+# ``insert_rows`` / ``remove_rows`` flip slots without changing any leaf
+# shape -- which is what lets the serving engine swap the updated scorer in
+# with zero recompiles. ``live=None`` (the default everywhere) means "all
+# rows live" and keeps the static path's pytree structure and HLO
+# unchanged.
+# ---------------------------------------------------------------------------
+
+
+def _encode_rows_gleanvec(model, rows: jax.Array):
+    """Tag + per-cluster projection of full-D ``rows`` -- the SAME
+    Eq. 14-15 pipeline as build time, so streamed inserts can never drift
+    from the original encoding."""
+    return gv.encode_database(model, jnp.asarray(rows, jnp.float32))
+
+
+def _mask_live_block(live, start, block: int, scores: jax.Array):
+    if live is None:
+        return scores
+    lv = jax.lax.dynamic_slice_in_dim(live, start, block, axis=0)
+    return jnp.where(lv[None, :], scores, NEG_INF)
+
+
+def _mask_live_ids(live, ids: jax.Array, scores: jax.Array):
+    if live is None:
+        return scores
+    return jnp.where(live[ids], scores, NEG_INF)
+
+
+def _translate_live(live, n_rows: int, ids: jax.Array) -> jax.Array:
+    """Row-aligned ``translate_ids`` under a live mask: dead (or padding)
+    rows map to -1 so downstream consumers drop them like sorted-layout
+    padding."""
+    if live is None:
+        return ids
+    safe = jnp.clip(ids, 0, n_rows - 1)
+    ok = (ids >= 0) & (ids < n_rows) & live[safe]
+    return jnp.where(ok, ids, -1)
+
+
+def _set_live(live, ids: jax.Array, value: bool, n_rows: int):
+    """Functional live-mask update; materializes the mask on first remove
+    (which changes the scorer's treedef -- streaming stores pre-materialize
+    it at build time precisely so later updates don't)."""
+    if live is None:
+        if value:
+            return None         # all rows already live
+        live = jnp.ones((n_rows,), jnp.bool_)
+    return live.at[ids].set(value)
+
+
+def _sorted_claim_slots(perm, inv_perm, block_tags, layout_block: int,
+                        ids, tags):
+    """Host-side slot allocation for the sorted layouts: for each new row's
+    cluster tag, claim the first padding slot (perm == -1) inside that
+    cluster's single-tag blocks. An id that is ALREADY live releases its
+    old slot first (re-insert == overwrite, matching the row-aligned
+    scorers -- never two sorted rows translating to one external id).
+    Returns ``(slots, freed_old_slots)``; raises when a cluster is out of
+    slack."""
+    import numpy as np
+    perm_np = np.asarray(perm).copy()
+    old = np.asarray(inv_perm)[np.asarray(ids)]
+    freed = old[old >= 0]
+    perm_np[freed] = -1
+    row_tags = np.asarray(block_tags)[
+        np.arange(perm_np.shape[0]) // layout_block]
+    free = perm_np < 0
+    slots = np.empty(len(tags), np.int64)
+    for j, t in enumerate(np.asarray(tags)):
+        cand = np.nonzero(free & (row_tags == int(t)))[0]
+        if cand.size == 0:
+            raise ValueError(
+                f"sorted layout: cluster {int(t)} has no free slots; "
+                "rebuild the layout with more slack_blocks")
+        slots[j] = cand[0]
+        free[cand[0]] = False
+    return slots, freed
+
+
 class LinearScorer(NamedTuple):
     """Linear DR scoring: <Aq, Bx>. ``a=None`` means identity (exact MIPS
     over whatever ``x_low`` stores -- including the full-precision x)."""
 
     x_low: jax.Array                 # (n, d)
     a: Optional[jax.Array] = None    # (d, D) query transform
+    live: Optional[jax.Array] = None  # (n,) bool slot mask (None = all)
 
     @property
     def n_rows(self) -> int:
@@ -166,27 +253,65 @@ class LinearScorer(NamedTuple):
         return q if self.a is None else q @ self.a.T
 
     def pad_rows(self, pad: int) -> "LinearScorer":
-        return self if not pad else self._replace(x_low=_pad0(self.x_low,
-                                                              pad))
+        if not pad:
+            return self
+        return self._replace(
+            x_low=_pad0(self.x_low, pad),
+            live=None if self.live is None else _pad0(self.live, pad))
 
     def score_block(self, qstate: jax.Array, start, block: int) -> jax.Array:
         blk = jax.lax.dynamic_slice_in_dim(self.x_low, start, block, axis=0)
-        return qstate @ blk.T
+        return _mask_live_block(self.live, start, block, qstate @ blk.T)
 
     def score_ids(self, qstate: jax.Array, ids: jax.Array) -> jax.Array:
         vecs = self.x_low[ids]                          # (m, p, d)
-        return jnp.einsum("mpd,md->mp", vecs, qstate)
+        return _mask_live_ids(self.live, ids,
+                              jnp.einsum("mpd,md->mp", vecs, qstate))
 
     def shard_specs(self, axes) -> "LinearScorer":
         from jax.sharding import PartitionSpec as P
         return LinearScorer(x_low=P(tuple(axes), None),
-                            a=None if self.a is None else P())
+                            a=None if self.a is None else P(),
+                            live=None if self.live is None
+                            else P(tuple(axes)))
 
     def translate_ids(self, ids: jax.Array) -> jax.Array:
-        return ids          # rows are stored in external id order
+        return _translate_live(self.live, self.n_rows, ids)
 
     def globalize_ids(self, ids: jax.Array, shard_idx) -> jax.Array:
         return _globalize_row_aligned(ids, shard_idx, self.n_rows)
+
+    # ---- streaming row-level ops (Section 3.2) ----------------------------
+
+    def insert_rows(self, ids: jax.Array, rows: jax.Array,
+                    model=None) -> "LinearScorer":
+        """Encode full-D ``rows`` into slots ``ids`` and mark them live."""
+        rows = jnp.asarray(rows, jnp.float32)
+        enc = rows if self.a is None else rows @ model.b.T
+        return self._replace(
+            x_low=self.x_low.at[ids].set(enc),
+            live=_set_live(self.live, ids, True, self.n_rows))
+
+    def remove_rows(self, ids: jax.Array) -> "LinearScorer":
+        """Tombstone slots ``ids`` (their contents stop mattering)."""
+        return self._replace(live=_set_live(self.live, ids, False,
+                                            self.n_rows))
+
+    def refresh(self, model, transition=None, x_full=None,
+                pending=None) -> "LinearScorer":
+        """Re-encode under a refreshed ``model``: via the Eq. (12)
+        transition matrix over the STORED reduced vectors (default), or
+        exactly from ``x_full`` when given. ``pending`` ((n,) bool)
+        selects the lazy subset; unmarked rows keep their old projection."""
+        if self.a is None:
+            return self     # exact scorer: stores the raw vectors
+        if x_full is not None:
+            new_low = jnp.asarray(x_full, jnp.float32) @ model.b.T
+        else:
+            new_low = self.x_low @ transition.T
+        if pending is not None:
+            new_low = jnp.where(pending[:, None], new_low, self.x_low)
+        return self._replace(x_low=new_low, a=model.a)
 
     def encode_centers(self, centers: jax.Array,
                        model=None) -> "LinearScorer":
@@ -208,6 +333,7 @@ class GleanVecScorer(NamedTuple):
     x_low: jax.Array                 # (n, d) = B_{tag_i} x_i
     tags: jax.Array                  # (n,) int32 cluster of each vector
     a: Optional[jax.Array] = None    # (C, d, D) per-cluster query maps
+    live: Optional[jax.Array] = None  # (n,) bool slot mask (None = all)
 
     @property
     def n_rows(self) -> int:
@@ -224,32 +350,67 @@ class GleanVecScorer(NamedTuple):
         if not pad:
             return self
         return self._replace(x_low=_pad0(self.x_low, pad),
-                             tags=_pad0(self.tags, pad))
+                             tags=_pad0(self.tags, pad),
+                             live=None if self.live is None
+                             else _pad0(self.live, pad))
 
     def score_block(self, qstate: jax.Array, start, block: int) -> jax.Array:
         blk = jax.lax.dynamic_slice_in_dim(self.x_low, start, block, axis=0)
         tag = jax.lax.dynamic_slice_in_dim(self.tags, start, block, axis=0)
         q_sel = qstate[:, tag, :]                       # (m, block, d)
-        return jnp.einsum("mbd,bd->mb", q_sel, blk)
+        return _mask_live_block(self.live, start, block,
+                                jnp.einsum("mbd,bd->mb", q_sel, blk))
 
     def score_ids(self, qstate: jax.Array, ids: jax.Array) -> jax.Array:
         vecs = self.x_low[ids]                          # (m, p, d)
         tag = self.tags[ids]                            # (m, p)
         m = qstate.shape[0]
         q_sel = qstate[jnp.arange(m)[:, None], tag]     # (m, p, d)
-        return jnp.sum(q_sel * vecs, axis=-1)
+        return _mask_live_ids(self.live, ids,
+                              jnp.sum(q_sel * vecs, axis=-1))
 
     def shard_specs(self, axes) -> "GleanVecScorer":
         from jax.sharding import PartitionSpec as P
         return GleanVecScorer(x_low=P(tuple(axes), None),
                               tags=P(tuple(axes)),
-                              a=None if self.a is None else P())
+                              a=None if self.a is None else P(),
+                              live=None if self.live is None
+                              else P(tuple(axes)))
 
     def translate_ids(self, ids: jax.Array) -> jax.Array:
-        return ids          # rows are stored in external id order
+        return _translate_live(self.live, self.n_rows, ids)
 
     def globalize_ids(self, ids: jax.Array, shard_idx) -> jax.Array:
         return _globalize_row_aligned(ids, shard_idx, self.n_rows)
+
+    # ---- streaming row-level ops (Section 3.2) ----------------------------
+
+    def insert_rows(self, ids: jax.Array, rows: jax.Array,
+                    model=None) -> "GleanVecScorer":
+        tags_new, enc = _encode_rows_gleanvec(model, rows)
+        return self._replace(
+            x_low=self.x_low.at[ids].set(enc),
+            tags=self.tags.at[ids].set(tags_new.astype(self.tags.dtype)),
+            live=_set_live(self.live, ids, True, self.n_rows))
+
+    def remove_rows(self, ids: jax.Array) -> "GleanVecScorer":
+        return self._replace(live=_set_live(self.live, ids, False,
+                                            self.n_rows))
+
+    def refresh(self, model, transition=None, x_full=None,
+                pending=None) -> "GleanVecScorer":
+        """Per-cluster Eq. (12): row i maps through T_{tag_i} ((C, d, d)
+        ``transition``), or re-encodes exactly from ``x_full``. Tags are
+        untouched -- the k-means landmarks are fixed under streaming."""
+        if x_full is not None:
+            new_low = jnp.einsum("ndk,nk->nd", model.b[self.tags],
+                                 jnp.asarray(x_full, jnp.float32))
+        else:
+            new_low = jnp.einsum("nij,nj->ni", transition[self.tags],
+                                 self.x_low)
+        if pending is not None:
+            new_low = jnp.where(pending[:, None], new_low, self.x_low)
+        return self._replace(x_low=new_low, a=model.a)
 
     def encode_centers(self, centers: jax.Array,
                        model=None) -> "GleanVecScorer":
@@ -266,6 +427,7 @@ class QuantizedScorer(NamedTuple):
     lo: jax.Array                    # (d,)
     delta: jax.Array                 # (d,)
     a: Optional[jax.Array] = None    # (d, D) query transform
+    live: Optional[jax.Array] = None  # (n,) bool slot mask (None = all)
 
     @property
     def n_rows(self) -> int:
@@ -279,30 +441,76 @@ class QuantizedScorer(NamedTuple):
                                q_lo=q @ self.lo)
 
     def pad_rows(self, pad: int) -> "QuantizedScorer":
-        return self if not pad else self._replace(codes=_pad0(self.codes,
-                                                              pad))
+        if not pad:
+            return self
+        return self._replace(
+            codes=_pad0(self.codes, pad),
+            live=None if self.live is None else _pad0(self.live, pad))
 
     def score_block(self, qstate: QuantQueryState, start,
                     block: int) -> jax.Array:
         c = jax.lax.dynamic_slice_in_dim(self.codes, start, block, axis=0)
-        return qstate.q_scaled @ c.astype(jnp.float32).T \
-            + qstate.q_lo[:, None]
+        return _mask_live_block(self.live, start, block,
+                                qstate.q_scaled @ c.astype(jnp.float32).T
+                                + qstate.q_lo[:, None])
 
     def score_ids(self, qstate: QuantQueryState, ids: jax.Array) -> jax.Array:
         c = self.codes[ids].astype(jnp.float32)         # (m, p, d)
-        return jnp.einsum("mpd,md->mp", c, qstate.q_scaled) \
-            + qstate.q_lo[:, None]
+        return _mask_live_ids(self.live, ids,
+                              jnp.einsum("mpd,md->mp", c, qstate.q_scaled)
+                              + qstate.q_lo[:, None])
 
     def shard_specs(self, axes) -> "QuantizedScorer":
         from jax.sharding import PartitionSpec as P
         return QuantizedScorer(codes=P(tuple(axes), None), lo=P(), delta=P(),
-                               a=None if self.a is None else P())
+                               a=None if self.a is None else P(),
+                               live=None if self.live is None
+                               else P(tuple(axes)))
 
     def translate_ids(self, ids: jax.Array) -> jax.Array:
-        return ids          # rows are stored in external id order
+        return _translate_live(self.live, self.n_rows, ids)
 
     def globalize_ids(self, ids: jax.Array, shard_idx) -> jax.Array:
         return _globalize_row_aligned(ids, shard_idx, self.n_rows)
+
+    # ---- streaming row-level ops (Section 3.2) ----------------------------
+
+    def insert_rows(self, ids: jax.Array, rows: jax.Array,
+                    model=None) -> "QuantizedScorer":
+        """New rows are coded under the EXISTING scales (clipped if they
+        fall outside the fitted range); the next ``refresh`` refits them.
+        Streaming row ops assume the serving modes' 8-bit coding (the
+        scorer stores no ``bits`` field; sub-8-bit stores would need
+        one)."""
+        rows = jnp.asarray(rows, jnp.float32)
+        low = rows if self.a is None else rows @ model.b.T
+        levels = 255
+        enc = jnp.clip(jnp.round((low - self.lo[None, :])
+                                 / self.delta[None, :]), 0,
+                       levels).astype(self.codes.dtype)
+        return self._replace(
+            codes=self.codes.at[ids].set(enc),
+            live=_set_live(self.live, ids, True, self.n_rows))
+
+    def remove_rows(self, ids: jax.Array) -> "QuantizedScorer":
+        return self._replace(live=_set_live(self.live, ids, False,
+                                            self.n_rows))
+
+    def refresh(self, model, transition=None, x_full=None,
+                pending=None) -> "QuantizedScorer":
+        """Dequantize -> Eq. (12) reproject (or re-encode from ``x_full``)
+        -> requantize with freshly fitted scales over the live rows."""
+        old_low = self.codes.astype(jnp.float32) * self.delta[None, :] \
+            + self.lo[None, :]
+        if x_full is not None:
+            new_low = jnp.asarray(x_full, jnp.float32) @ model.b.T
+        else:
+            new_low = old_low @ transition.T
+        if pending is not None:
+            new_low = jnp.where(pending[:, None], new_low, old_low)
+        db = quant.quantize(new_low, valid=self.live)
+        return self._replace(codes=db.codes, lo=db.lo, delta=db.delta,
+                             a=model.a)
 
     def encode_centers(self, centers: jax.Array,
                        model=None) -> "QuantizedScorer":
@@ -330,6 +538,7 @@ class GleanVecQuantizedScorer(NamedTuple):
     lo: jax.Array                    # (C, d) per-cluster lower bounds
     delta: jax.Array                 # (C, d) per-cluster steps
     a: jax.Array                     # (C, d, D) per-cluster query maps
+    live: Optional[jax.Array] = None  # (n,) bool slot mask (None = all)
 
     @property
     def n_rows(self) -> int:
@@ -345,7 +554,9 @@ class GleanVecQuantizedScorer(NamedTuple):
         if not pad:
             return self
         return self._replace(codes=_pad0(self.codes, pad),
-                             tags=_pad0(self.tags, pad))
+                             tags=_pad0(self.tags, pad),
+                             live=None if self.live is None
+                             else _pad0(self.live, pad))
 
     def score_block(self, qstate: QuantQueryState, start,
                     block: int) -> jax.Array:
@@ -353,7 +564,8 @@ class GleanVecQuantizedScorer(NamedTuple):
         tag = jax.lax.dynamic_slice_in_dim(self.tags, start, block, axis=0)
         q_sel = qstate.q_scaled[:, tag, :]              # (m, block, d)
         scores = jnp.einsum("mbd,bd->mb", q_sel, c.astype(jnp.float32))
-        return scores + qstate.q_lo[:, tag]
+        return _mask_live_block(self.live, start, block,
+                                scores + qstate.q_lo[:, tag])
 
     def score_ids(self, qstate: QuantQueryState, ids: jax.Array) -> jax.Array:
         c = self.codes[ids].astype(jnp.float32)         # (m, p, d)
@@ -361,19 +573,61 @@ class GleanVecQuantizedScorer(NamedTuple):
         m = tag.shape[0]
         q_sel = qstate.q_scaled[jnp.arange(m)[:, None], tag]
         lo_sel = jnp.take_along_axis(qstate.q_lo, tag, axis=1)
-        return jnp.sum(q_sel * c, axis=-1) + lo_sel
+        return _mask_live_ids(self.live, ids,
+                              jnp.sum(q_sel * c, axis=-1) + lo_sel)
 
     def shard_specs(self, axes) -> "GleanVecQuantizedScorer":
         from jax.sharding import PartitionSpec as P
         return GleanVecQuantizedScorer(codes=P(tuple(axes), None),
                                        tags=P(tuple(axes)),
-                                       lo=P(), delta=P(), a=P())
+                                       lo=P(), delta=P(), a=P(),
+                                       live=None if self.live is None
+                                       else P(tuple(axes)))
 
     def translate_ids(self, ids: jax.Array) -> jax.Array:
-        return ids          # rows are stored in external id order
+        return _translate_live(self.live, self.n_rows, ids)
 
     def globalize_ids(self, ids: jax.Array, shard_idx) -> jax.Array:
         return _globalize_row_aligned(ids, shard_idx, self.n_rows)
+
+    # ---- streaming row-level ops (Section 3.2) ----------------------------
+
+    def insert_rows(self, ids: jax.Array, rows: jax.Array,
+                    model=None) -> "GleanVecQuantizedScorer":
+        """Tag + project + code new rows under the EXISTING per-cluster
+        scales (clipped); the next ``refresh`` refits them. 8-bit coding
+        assumed, as everywhere on the streaming path."""
+        tags_new, low = _encode_rows_gleanvec(model, rows)
+        enc = jnp.clip(jnp.round((low - self.lo[tags_new])
+                                 / self.delta[tags_new]), 0,
+                       255).astype(self.codes.dtype)
+        return self._replace(
+            codes=self.codes.at[ids].set(enc),
+            tags=self.tags.at[ids].set(tags_new.astype(self.tags.dtype)),
+            live=_set_live(self.live, ids, True, self.n_rows))
+
+    def remove_rows(self, ids: jax.Array) -> "GleanVecQuantizedScorer":
+        return self._replace(live=_set_live(self.live, ids, False,
+                                            self.n_rows))
+
+    def refresh(self, model, transition=None, x_full=None,
+                pending=None) -> "GleanVecQuantizedScorer":
+        """Per-cluster dequantize -> T_{tag} reproject (or exact re-encode
+        from ``x_full``) -> per-cluster requantize over live rows."""
+        old_low = self.codes.astype(jnp.float32) * self.delta[self.tags] \
+            + self.lo[self.tags]
+        if x_full is not None:
+            new_low = jnp.einsum("ndk,nk->nd", model.b[self.tags],
+                                 jnp.asarray(x_full, jnp.float32))
+        else:
+            new_low = jnp.einsum("nij,nj->ni", transition[self.tags],
+                                 old_low)
+        if pending is not None:
+            new_low = jnp.where(pending[:, None], new_low, old_low)
+        db = quant.quantize_per_cluster(new_low, self.tags,
+                                        self.lo.shape[0], valid=self.live)
+        return self._replace(codes=db.codes, lo=db.lo, delta=db.delta,
+                             a=model.a)
 
     def encode_centers(self, centers: jax.Array,
                        model=None) -> "GleanVecQuantizedScorer":
@@ -446,11 +700,13 @@ class SortedGleanVecScorer(NamedTuple):
 
     def score_ids(self, qstate: jax.Array, ids: jax.Array) -> jax.Array:
         rows = self.inv_perm[ids]                           # (m, p)
+        ok = rows >= 0                # absent / removed ids score -inf
+        rows = jnp.where(ok, rows, 0)
         vecs = self.x_low[rows]                             # (m, p, d)
         tag = self.block_tags[rows // self.layout_block]    # (m, p)
         m = qstate.shape[0]
         q_sel = qstate[jnp.arange(m)[:, None], tag]         # (m, p, d)
-        return jnp.sum(q_sel * vecs, axis=-1)
+        return jnp.where(ok, jnp.sum(q_sel * vecs, axis=-1), NEG_INF)
 
     def shard_specs(self, axes) -> "SortedGleanVecScorer":
         # Row-shard the sorted layout: the shard count must divide the
@@ -473,6 +729,58 @@ class SortedGleanVecScorer(NamedTuple):
         """The sorted layout prepares the SAME (m, C, d) eager views as the
         row-aligned GleanVec scorer, so its probe companion is one too."""
         return _center_views_scorer(centers, model)
+
+    # ---- streaming row-level ops (Section 3.2) ----------------------------
+
+    def insert_rows(self, ids: jax.Array, rows: jax.Array,
+                    model=None) -> "SortedGleanVecScorer":
+        """Claim free padding slots inside each new row's cluster blocks
+        (host-side allocation; the layout's shape never changes).
+        Already-live ids release their old slot first (re-insert ==
+        overwrite)."""
+        tags_new, enc = _encode_rows_gleanvec(model, rows)
+        slots, freed = _sorted_claim_slots(self.perm, self.inv_perm,
+                                           self.block_tags,
+                                           self.layout_block, ids,
+                                           tags_new)
+        perm = self.perm
+        if freed.size:
+            perm = perm.at[jnp.asarray(freed)].set(-1)
+        slots = jnp.asarray(slots)
+        ids = jnp.asarray(ids)
+        return self._replace(
+            x_low=self.x_low.at[slots].set(enc),
+            perm=perm.at[slots].set(ids.astype(self.perm.dtype)),
+            inv_perm=self.inv_perm.at[ids].set(
+                slots.astype(self.inv_perm.dtype)))
+
+    def remove_rows(self, ids: jax.Array) -> "SortedGleanVecScorer":
+        import numpy as np
+        slots = np.asarray(self.inv_perm)[np.asarray(ids)]
+        slots = jnp.asarray(slots[slots >= 0])
+        return self._replace(
+            perm=self.perm.at[slots].set(-1),
+            inv_perm=self.inv_perm.at[jnp.asarray(ids)].set(-1))
+
+    def refresh(self, model, transition=None, x_full=None,
+                pending=None) -> "SortedGleanVecScorer":
+        """Per-cluster Eq. (12) over the SORTED rows (one T per single-tag
+        block); padding rows stay masked by ``perm``."""
+        row_tags = self.block_tags[jnp.arange(self.n_rows)
+                                   // self.layout_block]
+        valid = self.perm >= 0
+        if x_full is not None:
+            safe = jnp.where(valid, self.perm, 0)
+            full_rows = jnp.asarray(x_full, jnp.float32)[safe]
+            new_low = jnp.einsum("ndk,nk->nd", model.b[row_tags], full_rows)
+            new_low = jnp.where(valid[:, None], new_low, 0.0)
+        else:
+            new_low = jnp.einsum("nij,nj->ni", transition[row_tags],
+                                 self.x_low)
+        if pending is not None:
+            p_rows = valid & pending[jnp.where(valid, self.perm, 0)]
+            new_low = jnp.where(p_rows[:, None], new_low, self.x_low)
+        return self._replace(x_low=new_low, a=model.a)
 
 
 class SortedGleanVecQuantizedScorer(NamedTuple):
@@ -530,12 +838,14 @@ class SortedGleanVecQuantizedScorer(NamedTuple):
 
     def score_ids(self, qstate: QuantQueryState, ids: jax.Array) -> jax.Array:
         rows = self.inv_perm[ids]                           # (m, p)
+        ok = rows >= 0                # absent / removed ids score -inf
+        rows = jnp.where(ok, rows, 0)
         c = self.codes[rows].astype(jnp.float32)            # (m, p, d)
         tag = self.block_tags[rows // self.layout_block]    # (m, p)
         m = tag.shape[0]
         q_sel = qstate.q_scaled[jnp.arange(m)[:, None], tag]
         lo_sel = jnp.take_along_axis(qstate.q_lo, tag, axis=1)
-        return jnp.sum(q_sel * c, axis=-1) + lo_sel
+        return jnp.where(ok, jnp.sum(q_sel * c, axis=-1) + lo_sel, NEG_INF)
 
     def shard_specs(self, axes) -> "SortedGleanVecQuantizedScorer":
         # Same sharding contract as SortedGleanVecScorer: shard count must
@@ -557,6 +867,69 @@ class SortedGleanVecQuantizedScorer(NamedTuple):
         int8 scorer; probe companion is the pseudo-code variant."""
         return _center_pseudo_scorer(centers, model, self.lo, self.delta,
                                      self.a)
+
+    # ---- streaming row-level ops (Section 3.2) ----------------------------
+
+    @property
+    def _row_tags(self) -> jax.Array:
+        return self.block_tags[jnp.arange(self.n_rows) // self.layout_block]
+
+    def insert_rows(self, ids: jax.Array, rows: jax.Array,
+                    model=None) -> "SortedGleanVecQuantizedScorer":
+        """Claim free padding slots in the new rows' clusters; code under
+        the EXISTING per-cluster scales (refit at the next refresh).
+        Already-live ids release their old slot first (re-insert ==
+        overwrite)."""
+        tags_new, low = _encode_rows_gleanvec(model, rows)
+        enc = jnp.clip(jnp.round((low - self.lo[tags_new])
+                                 / self.delta[tags_new]), 0,
+                       255).astype(self.codes.dtype)
+        slots, freed = _sorted_claim_slots(self.perm, self.inv_perm,
+                                           self.block_tags,
+                                           self.layout_block, ids,
+                                           tags_new)
+        perm = self.perm
+        if freed.size:
+            perm = perm.at[jnp.asarray(freed)].set(-1)
+        slots = jnp.asarray(slots)
+        ids = jnp.asarray(ids)
+        return self._replace(
+            codes=self.codes.at[slots].set(enc),
+            perm=perm.at[slots].set(ids.astype(self.perm.dtype)),
+            inv_perm=self.inv_perm.at[ids].set(
+                slots.astype(self.inv_perm.dtype)))
+
+    def remove_rows(self, ids: jax.Array) -> "SortedGleanVecQuantizedScorer":
+        import numpy as np
+        slots = np.asarray(self.inv_perm)[np.asarray(ids)]
+        slots = jnp.asarray(slots[slots >= 0])
+        return self._replace(
+            perm=self.perm.at[slots].set(-1),
+            inv_perm=self.inv_perm.at[jnp.asarray(ids)].set(-1))
+
+    def refresh(self, model, transition=None, x_full=None,
+                pending=None) -> "SortedGleanVecQuantizedScorer":
+        """Per-cluster dequantize -> T_{tag} (or exact re-encode from
+        ``x_full``) -> per-cluster requantize; padding rows are excluded
+        from the refitted scale ranges."""
+        row_tags = self._row_tags
+        valid = self.perm >= 0
+        old_low = self.codes.astype(jnp.float32) * self.delta[row_tags] \
+            + self.lo[row_tags]
+        if x_full is not None:
+            safe = jnp.where(valid, self.perm, 0)
+            full_rows = jnp.asarray(x_full, jnp.float32)[safe]
+            new_low = jnp.einsum("ndk,nk->nd", model.b[row_tags], full_rows)
+        else:
+            new_low = jnp.einsum("nij,nj->ni", transition[row_tags],
+                                 old_low)
+        if pending is not None:
+            p_rows = valid & pending[jnp.where(valid, self.perm, 0)]
+            new_low = jnp.where(p_rows[:, None], new_low, old_low)
+        db = quant.quantize_per_cluster(new_low, row_tags,
+                                        self.lo.shape[0], valid=valid)
+        return self._replace(codes=db.codes, lo=db.lo, delta=db.delta,
+                             a=model.a)
 
 
 Scorer = Union[LinearScorer, GleanVecScorer, QuantizedScorer,
@@ -606,12 +979,14 @@ def gleanvec_quantized_scorer(model, database: jax.Array,
                                    delta=db.delta, a=model.a)
 
 
-def sorted_gleanvec_scorer(model, database: jax.Array,
-                           block: int = 4096) -> SortedGleanVecScorer:
+def sorted_gleanvec_scorer(model, database: jax.Array, block: int = 4096,
+                           slack_blocks: int = 0) -> SortedGleanVecScorer:
     """GleanVec in the tag-sorted (cluster-contiguous) layout: each cluster
-    padded to a ``block`` multiple, one tag per block."""
+    padded to a ``block`` multiple, one tag per block. ``slack_blocks``
+    reserves extra free blocks per cluster for streaming inserts."""
     tags, x_low = gv.encode_database(model, database)
-    xs, block_tags, perm, _ = gv.sort_by_tag(tags, x_low, block=block)
+    xs, block_tags, perm, _ = gv.sort_by_tag(tags, x_low, block=block,
+                                             slack_blocks=slack_blocks)
     inv = gv.inverse_permutation(perm, x_low.shape[0])
     return SortedGleanVecScorer(x_low=xs, block_tags=block_tags,
                                 perm=perm.astype(jnp.int32), inv_perm=inv,
@@ -620,14 +995,16 @@ def sorted_gleanvec_scorer(model, database: jax.Array,
 
 def sorted_gleanvec_quantized_scorer(
         model, database: jax.Array, block: int = 4096,
-        bits: int = 8) -> SortedGleanVecQuantizedScorer:
+        bits: int = 8,
+        slack_blocks: int = 0) -> SortedGleanVecQuantizedScorer:
     """GleanVec + per-cluster int8 SQ in the tag-sorted layout: the SAME
     codes/scales as :func:`gleanvec_quantized_scorer` (quantize first, then
     sort), so scores match the unsorted scorer exactly."""
     tags, x_low = gv.encode_database(model, database)
     db: ClusteredSQDatabase = quant.quantize_per_cluster(
         x_low, tags, model.n_clusters, bits)
-    cs, block_tags, perm, _ = gv.sort_by_tag(tags, db.codes, block=block)
+    cs, block_tags, perm, _ = gv.sort_by_tag(tags, db.codes, block=block,
+                                             slack_blocks=slack_blocks)
     inv = gv.inverse_permutation(perm, x_low.shape[0])
     return SortedGleanVecQuantizedScorer(
         codes=cs, block_tags=block_tags, perm=perm.astype(jnp.int32),

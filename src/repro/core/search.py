@@ -20,8 +20,9 @@ import jax.numpy as jnp
 from repro.core import scorer as sc
 from repro.index.topk import NEG_INF
 
-__all__ = ["SearchArtifacts", "build_artifacts", "build_artifacts_sphering",
-           "build_artifacts_gleanvec", "multi_step_search", "rerank"]
+__all__ = ["SearchArtifacts", "ServingState", "build_artifacts",
+           "build_artifacts_sphering", "build_artifacts_gleanvec",
+           "make_state", "state_search", "multi_step_search", "rerank"]
 
 
 class SearchArtifacts(NamedTuple):
@@ -79,6 +80,50 @@ def build_artifacts(mode: str, database: jax.Array,
     return SearchArtifacts(scorer=sc.build_scorer(mode, database, model),
                            x_full=jnp.asarray(database, jnp.float32),
                            model=model)
+
+
+class ServingState(NamedTuple):
+    """The complete runtime state of a serving search, as ONE pytree.
+
+    This is the state-passing serving contract (Section 3.2): instead of
+    closing a jitted function over the artifacts, the artifacts -- and the
+    Index-protocol traversal mounted over them -- ride through the
+    compiled ``state_search(queries, state)`` as a regular argument. jit
+    specializes on the state's TREEDEF (scorer/index classes, static index
+    config) and leaf avals only, so any weight update that preserves both
+    (a streaming refresh, a row insert into pre-allocated capacity, a
+    re-quantization) swaps in with ZERO recompiles.
+
+    ``version`` is a data leaf (scalar int32), not treedef metadata, so
+    bumping it never invalidates the compiled function; it exists so
+    engines / logs can tell which state generation produced a result.
+    """
+
+    artifacts: SearchArtifacts
+    index: Any                # Index-protocol pytree (FlatIndex & friends)
+    version: jax.Array        # scalar int32 state generation counter
+
+
+def make_state(artifacts: SearchArtifacts, index=None, block: int = 4096,
+               version: int = 0) -> ServingState:
+    """Mount ``artifacts`` behind ``index`` (None = flat blocked scan) as a
+    :class:`ServingState`."""
+    from repro.index.protocol import FlatIndex
+
+    if index is None:
+        index = FlatIndex(block=block)
+    return ServingState(artifacts=artifacts, index=index,
+                        version=jnp.asarray(version, jnp.int32))
+
+
+def state_search(queries: jax.Array, state: ServingState, k: int,
+                 kappa: int) -> jax.Array:
+    """Algorithm 1 over a :class:`ServingState`: the single function every
+    serving surface compiles. ``k`` / ``kappa`` are static; everything
+    else -- scorer weights, index arrays, the full-precision store -- is a
+    pytree argument, so refreshed states reuse the compiled executable."""
+    return multi_step_search(queries, state.artifacts, state.index, k,
+                             kappa)
 
 
 def rerank(queries: jax.Array, artifacts: SearchArtifacts,

@@ -234,10 +234,11 @@ class ShardedIndex:
     def search_local(self, queries: jax.Array, scorer, k: int,
                      kappa: Optional[int] = None):
         """Mesh-free reference: the SAME per-shard searches + merge, run
-        sequentially on the current device."""
+        sequentially on the current device. jit-safe (the serving layer
+        compiles it with the index as a pytree argument): the per-shard
+        row offsets stay traced scalars."""
         kappa = kappa or k
         queries = queries.astype(jnp.float32)
-        starts = np.asarray(self.row_starts)
         all_vals, all_ids = [], []
         for s in range(self.n_shards):
             s_scorer = _take_shard(scorer, s)
@@ -246,7 +247,7 @@ class ShardedIndex:
             vals, ids = s_index.candidates(qs, s_scorer, kappa)
             all_vals.append(vals)
             all_ids.append(s_index.globalize_ids(s_scorer, ids,
-                                                 int(starts[s])))
+                                                 self.row_starts[s]))
         vals = jnp.concatenate(all_vals, axis=1)
         ids = jnp.concatenate(all_ids, axis=1)
         top, sel = jax.lax.top_k(vals, k)
@@ -257,6 +258,14 @@ class ShardedIndex:
 
     def globalize_ids(self, scorer, ids: jax.Array, row_start) -> jax.Array:
         return ids          # candidates are already global original ids
+
+    def refreshed(self, scorer, model) -> "ShardedIndex":
+        """Streaming-refresh hook: delegate to one representative sub-index
+        (they share their class) over the STACKED scorer only when the
+        sub-index kind derives nothing from the representation; per-shard
+        derived state (stacked IVF reduced centers) is a ROADMAP follow-up
+        and passes through unchanged."""
+        return self
 
 
 register_index_pytree(ShardedIndex,

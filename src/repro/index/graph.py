@@ -72,6 +72,14 @@ class GraphIndex:
     def globalize_ids(self, scorer, ids: jax.Array, row_start) -> jax.Array:
         return _offset_ids(ids, row_start)
 
+    def refreshed(self, scorer, model) -> "GraphIndex":
+        """Streaming-refresh hook: the edge set was built from FULL-D
+        geometry, which a projection refresh does not change -- the graph
+        passes through unchanged. (Incremental edge insertion for grown
+        databases is a ROADMAP follow-up; until then serve streams via
+        flat or IVF traversals.)"""
+        return self
+
 
 register_index_pytree(GraphIndex, data_fields=("neighbors", "entries"),
                       static_fields=("beam", "max_hops"))

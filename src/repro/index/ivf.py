@@ -37,8 +37,8 @@ from repro.index.protocol import (_offset_ids, register_index_pytree,
 from repro.index.topk import NEG_INF
 
 __all__ = ["IVFIndex", "IVFQueryState", "build", "build_sharded",
-           "with_reduced_centers", "coarse_scores", "search",
-           "search_scorer"]
+           "with_reduced_centers", "with_list_slack", "insert_ids",
+           "remove_ids", "coarse_scores", "search", "search_scorer"]
 
 
 class IVFQueryState(NamedTuple):
@@ -91,6 +91,17 @@ class IVFIndex:
 
     def globalize_ids(self, scorer, ids: jax.Array, row_start) -> jax.Array:
         return _offset_ids(ids, row_start)
+
+    def refreshed(self, scorer, model) -> "IVFIndex":
+        """Streaming-refresh hook: the reduced-space center companion was
+        derived from the OLD model's projections, so re-encode it under
+        the refreshed scorer/model (same treedef: ``encode_centers``
+        returns the same companion class with the same shapes)."""
+        if self.center_scorer is None:
+            return self
+        return replace(self,
+                       center_scorer=scorer.encode_centers(self.centers,
+                                                           model))
 
 
 register_index_pytree(IVFIndex,
@@ -173,6 +184,44 @@ def with_reduced_centers(index: IVFIndex, scorer, model=None) -> IVFIndex:
                                                        model))
 
 
+def with_list_slack(index: IVFIndex, extra: int) -> IVFIndex:
+    """Widen every posting list by ``extra`` -1 slots (build-time only --
+    this CHANGES the lists' shape). Streaming serving pre-allocates the
+    slack here so later :func:`insert_ids` calls never reshape the index
+    under a compiled engine.
+
+    ``extra`` is PER LIST and sets the probe's gather width for the whole
+    run: size it to the expected per-list fill (plus skew headroom), not
+    the total insert count."""
+    lists = jnp.pad(index.lists, ((0, 0), (0, extra)), constant_values=-1)
+    return replace(index, lists=lists)
+
+
+def insert_ids(index: IVFIndex, vecs: jax.Array, ids) -> IVFIndex:
+    """Append external ``ids`` (with full-D ``vecs``) to their nearest
+    centers' posting lists, filling pre-allocated -1 slots (host-side;
+    shape-preserving). Raises when a list is out of slack."""
+    x_unit = spherical_kmeans.normalize_rows(jnp.asarray(vecs, jnp.float32))
+    tags = np.asarray(spherical_kmeans.assign(x_unit, index.centers))
+    lists = np.asarray(index.lists).copy()
+    for t, i in zip(tags, np.asarray(ids)):
+        free = np.nonzero(lists[t] < 0)[0]
+        if free.size == 0:
+            raise ValueError(
+                f"posting list {int(t)} is full; pre-allocate slack with "
+                "with_list_slack before serving streams")
+        lists[t, free[0]] = int(i)
+    return replace(index, lists=jnp.asarray(lists))
+
+
+def remove_ids(index: IVFIndex, ids) -> IVFIndex:
+    """Drop external ``ids`` from every posting list (slots return to the
+    -1 free pool; shape-preserving)."""
+    lists = np.asarray(index.lists).copy()
+    lists[np.isin(lists, np.asarray(ids))] = -1
+    return replace(index, lists=jnp.asarray(lists))
+
+
 # ---------------------------------------------------------------------------
 # Search.
 # ---------------------------------------------------------------------------
@@ -199,7 +248,10 @@ def _probe_and_score(qstate: IVFQueryState, scorer, index: IVFIndex,
     scores = scorer.score_ids(qstate.qstate, safe)          # (m, nprobe*L)
     scores = jnp.where(cand >= 0, scores, NEG_INF)
     vals, sel = jax.lax.top_k(scores, k)
-    return vals, jnp.take_along_axis(cand, sel, axis=1)
+    ids = jnp.take_along_axis(cand, sel, axis=1)
+    # -inf winners are padding slots or tombstoned (dead) rows a streaming
+    # store masked; strip their ids so the rerank never resurrects them.
+    return vals, jnp.where(vals > NEG_INF, ids, -1)
 
 
 def search_scorer(queries: jax.Array, scorer, index: IVFIndex, k: int,

@@ -11,6 +11,15 @@ metadata) implementing:
     vals, ids = index.search(queries, scorer, k)      # prepare + candidates
     index.shard_specs(axes)                           # PartitionSpec tree
     index.globalize_ids(scorer, ids, row_start)       # local -> global ids
+    index.refreshed(scorer, model)                    # streaming refresh
+
+``refreshed(scorer, model)`` is the streaming-refresh hook (Section 3.2):
+after the scorer's representation is re-encoded under a refreshed model,
+an index re-derives whatever it computed FROM that representation (the IVF
+reduced-space center companion) and returns a same-treedef copy; indexes
+with no derived state return themselves. The hook keeps the serving
+engine's zero-recompile swap invariant: same pytree structure, same leaf
+shapes.
 
 ``prepare_queries`` wraps ``scorer.prepare_queries`` plus whatever extra
 query state the traversal needs (the IVF coarse probe keeps the full-D
@@ -105,6 +114,9 @@ class FlatIndex:
 
     def globalize_ids(self, scorer, ids, row_start):
         return _offset_ids(ids, row_start)
+
+    def refreshed(self, scorer, model):
+        return self         # no state derived from the representation
 
 
 register_index_pytree(FlatIndex, data_fields=(), static_fields=("block",))

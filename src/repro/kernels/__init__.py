@@ -33,6 +33,19 @@ __all__ = [
 ]
 
 
+def _mask_live(scorer, scores):
+    """Dead slots of a fixed-capacity streaming store score -inf; the
+    ``live=None`` static path is untouched (identical HLO)."""
+    import jax.numpy as jnp
+
+    from repro.core import scorer as sc
+
+    live = getattr(scorer, "live", None)
+    if live is None:
+        return scores
+    return jnp.where(live[None, :], scores, sc.NEG_INF)
+
+
 def scorer_scores(scorer, queries, *, use_pallas=None, interpret=False):
     """Dense (m, n) scores of ``queries`` against a scorer's database,
     lowered to the scorer's kernel (TPU) or jnp mirror (elsewhere).
@@ -40,6 +53,8 @@ def scorer_scores(scorer, queries, *, use_pallas=None, interpret=False):
     ``n`` spans the scorer's INTERNAL row space: for the sorted scorers
     column j is sorted row j (translate through ``scorer.translate_ids`` to
     reach original ids); for every other scorer it is the original id.
+    Scorers carrying a streaming ``live`` mask get dead columns set to
+    -inf after the kernel.
     """
     import jax
     import jax.numpy as jnp
@@ -49,18 +64,21 @@ def scorer_scores(scorer, queries, *, use_pallas=None, interpret=False):
     kw = dict(use_pallas=use_pallas, interpret=interpret)
     if isinstance(scorer, sc.LinearScorer):
         q_low = scorer.prepare_queries(queries)
-        return q_low @ scorer.x_low.T      # plain MXU matmul; no kernel won
+        return _mask_live(scorer, q_low @ scorer.x_low.T)   # plain matmul
     if isinstance(scorer, sc.GleanVecScorer):
         q_views = scorer.prepare_queries(queries)
-        return gleanvec_ip(q_views, scorer.tags, scorer.x_low, **kw)
+        return _mask_live(scorer, gleanvec_ip(q_views, scorer.tags,
+                                              scorer.x_low, **kw))
     if isinstance(scorer, sc.QuantizedScorer):
         q = queries.astype(jnp.float32)
         q_low = q if scorer.a is None else q @ scorer.a.T
-        return sq_dot(q_low, scorer.codes, scorer.lo, scorer.delta, **kw)
+        return _mask_live(scorer, sq_dot(q_low, scorer.codes, scorer.lo,
+                                         scorer.delta, **kw))
     if isinstance(scorer, sc.GleanVecQuantizedScorer):
         qs = scorer.prepare_queries(queries)
-        return gleanvec_sq(qs.q_scaled, qs.q_lo, scorer.tags, scorer.codes,
-                           **kw)
+        return _mask_live(scorer, gleanvec_sq(qs.q_scaled, qs.q_lo,
+                                              scorer.tags, scorer.codes,
+                                              **kw))
     if isinstance(scorer, sc.SortedGleanVecScorer):
         q_views = scorer.prepare_queries(queries)
         q_lo = jnp.zeros(q_views.shape[:2], jnp.float32)   # no affine term
@@ -95,6 +113,17 @@ def scorer_topk(scorer, queries, k: int, *, use_pallas=None,
     from repro.core import scorer as sc
 
     kw = dict(use_pallas=use_pallas, interpret=interpret)
+    live = getattr(scorer, "live", None)
+    live_ids = (None if live is None else
+                jnp.where(live, jnp.arange(live.shape[0], dtype=jnp.int32),
+                          -1))
+    if isinstance(scorer, (sc.LinearScorer, sc.QuantizedScorer)) \
+            and live is not None:
+        # ip_topk has no row-id masking input; a live-masked linear store
+        # falls back to dense scores + top_k (streaming stores are served
+        # through the blocked scan anyway).
+        scores = scorer_scores(scorer, queries, **kw)
+        return jax.lax.top_k(scores, k)
     if isinstance(scorer, sc.LinearScorer):
         q_low = scorer.prepare_queries(queries)
         return ip_topk(q_low, scorer.x_low, k, **kw)
@@ -106,11 +135,11 @@ def scorer_topk(scorer, queries, k: int, *, use_pallas=None,
         q_views = scorer.prepare_queries(queries)
         q_lo = jnp.zeros(q_views.shape[:2], jnp.float32)   # no affine term
         return gleanvec_sq_topk(q_views, q_lo, scorer.tags, scorer.x_low,
-                                k, **kw)
+                                k, row_ids=live_ids, **kw)
     if isinstance(scorer, sc.GleanVecQuantizedScorer):
         qs = scorer.prepare_queries(queries)
         return gleanvec_sq_topk(qs.q_scaled, qs.q_lo, scorer.tags,
-                                scorer.codes, k, **kw)
+                                scorer.codes, k, row_ids=live_ids, **kw)
     if isinstance(scorer, sc.SortedGleanVecScorer):
         q_views = scorer.prepare_queries(queries)
         q_lo = jnp.zeros(q_views.shape[:2], jnp.float32)   # no affine term

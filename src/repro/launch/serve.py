@@ -6,6 +6,8 @@ synthetic collection with selectable scoring mode, index and placement.
         --index ivf --nprobe 12 --reduced-probe
     PYTHONPATH=src python -m repro.launch.serve --mode gleanvec \
         --index ivf --shards 4
+    PYTHONPATH=src python -m repro.launch.serve --mode gleanvec-int8 \
+        --stream --cycles 4
 
 The three axes are orthogonal: every scorer mode (full / sphering /
 gleanvec / sphering-int8 / gleanvec-int8 / gleanvec-sorted /
@@ -16,6 +18,12 @@ Index protocol path -- the flags are the only thing that differs between a
 full-precision flat service and a sharded cluster-contiguous GleanVec+int8
 IVF one. ``--reduced-probe`` projects the IVF coarse centers into the
 scorer's reduced space so the probe consumes the prepared queries (R^d).
+
+``--stream`` drives the Section 3.2 lifecycle under live traffic: the
+engine keeps serving drifted (OOD) queries while each cycle observes them
+into K_Q, inserts new database rows into the fixed-capacity store, and
+swaps the Eq. 11-12 refreshed state in -- zero recompiles after warmup,
+asserted by the engine's compile counter.
 """
 from __future__ import annotations
 
@@ -27,11 +35,12 @@ import numpy as np
 
 from repro.core import gleanvec as gv, leanvec_sphering as lvs, metrics
 from repro.core import search as msearch
+from repro.core import streaming
 from repro.core.scorer import MODES
 from repro.data import vectors
 from repro.index import distributed, graph, ivf
 from repro.index.protocol import replace
-from repro.serve.engine import ServingEngine, make_search_fn
+from repro.serve.engine import ServingEngine
 
 
 def build_index(args, X, scorer, model):
@@ -49,6 +58,81 @@ def build_index(args, X, scorer, model):
                                    n_iters=4, seed=0),
                        beam=args.beam, max_hops=args.max_hops)
     raise ValueError(f"unknown index {args.index!r}")
+
+
+def run_stream(args):
+    """Section 3.2 lifecycle under live traffic: serve drifted queries,
+    observe them into K_Q, insert rows, refresh, hot-swap -- one compiled
+    executable throughout."""
+    n0 = int(args.n * 0.7)
+    step = (args.n - n0) // args.cycles
+    ds = vectors.make_dataset("serve-stream", n=args.n, d=args.dim,
+                              n_queries=max(512, args.batch * args.cycles),
+                              ood=True, seed=0)
+    X = jnp.asarray(ds.database)
+    QT = np.asarray(ds.queries_test)
+    rng = np.random.default_rng(0)
+    # the model serving at t=0 was fit on ID (database-like) queries; the
+    # live traffic below is OOD -- the drift the refreshes adapt to
+    q_init = np.asarray(X)[rng.integers(0, n0, 1024)] \
+        + 0.1 * rng.standard_normal((1024, args.dim)).astype(np.float32)
+    if args.mode.startswith("sphering"):
+        model = lvs.fit(jnp.asarray(q_init), X[:n0], args.d)
+    else:
+        model = gv.fit(jax.random.PRNGKey(0), jnp.asarray(q_init), X[:n0],
+                       c=args.clusters, d=args.d)
+    artifacts = streaming.build_streaming_artifacts(
+        args.mode, X[:n0], model, capacity=args.n, sort_block=256,
+        slack_blocks=2)
+    index = None
+    if args.index == "ivf":
+        index = ivf.build(jax.random.PRNGKey(1), X[:n0], n_lists=args.lists,
+                          nprobe=args.nprobe)
+        # slack is per list: expected fill + 4x skew headroom, NOT the
+        # total insert count (that would inflate every probe's gather)
+        slack = 4 * max(1, (args.n - n0) // args.lists)
+        index = ivf.with_list_slack(index, slack)
+        if args.reduced_probe:
+            index = ivf.with_reduced_centers(index, artifacts.scorer, model)
+    engine = ServingEngine(msearch.make_state(artifacts, index=index),
+                           k=10, kappa=args.kappa, batch_size=args.batch,
+                           dim=args.dim)
+    stream = streaming.init_from_artifacts(artifacts, q_init,
+                                           refresh_every=step)
+    print(f"stream mode={args.mode} index={args.index} n0={n0} "
+          f"capacity={args.n} D={args.dim} d={args.d} "
+          f"cycles={args.cycles} inserts/cycle={step}")
+    for cycle in range(args.cycles):
+        obs = QT[(cycle * args.batch) % len(QT):][:args.batch]
+        live_idx = np.nonzero(streaming.live_mask(engine.state.artifacts))[0]
+        served = engine.submit(obs)           # live traffic keeps flowing
+        gt = live_idx[vectors.exact_topk(
+            obs, np.asarray(engine.state.artifacts.x_full)[live_idx], 10)]
+        rec = float(metrics.recall_at_k(jnp.asarray(served),
+                                        jnp.asarray(gt)))
+        stream = streaming.observe_queries(stream, jnp.asarray(obs))
+        rows = X[n0 + cycle * step: n0 + (cycle + 1) * step]
+        arts2, new_ids = streaming.insert_rows(engine.state.artifacts, rows)
+        stream = streaming.insert(stream, rows)
+        state2 = engine.state._replace(artifacts=arts2)
+        if index is not None:
+            state2 = state2._replace(
+                index=ivf.insert_ids(state2.index, rows, new_ids))
+        engine.swap(state2)
+        stream = streaming.refresh(stream)
+        engine.swap(streaming.refresh_state(engine.state, stream,
+                                            source=args.refresh_source))
+        print(f"  cycle {cycle}: served {served.shape[0]} queries "
+              f"recall@10={rec:.3f} live_rows="
+              f"{int(streaming.live_mask(engine.state.artifacts).sum())} "
+              f"version={engine.version} compiles={engine.n_compiles} "
+              f"swap_p50={np.median(engine.stats.swap_ms):.2f}ms")
+    s = engine.stats
+    print(f"QPS={s.qps:.0f} p50={s.percentile_ms(50):.1f}ms "
+          f"p99={s.percentile_ms(99):.1f}ms "
+          f"swaps={engine.n_swaps} compiles={engine.n_compiles} "
+          f"(zero recompiles after warmup: "
+          f"{engine.n_compiles in (None, 1)})")
 
 
 def main():
@@ -72,7 +156,23 @@ def main():
     ap.add_argument("--shards", type=int, default=0,
                     help="N per-shard sub-indexes merged via ShardedIndex "
                          "(0 = single index)")
+    ap.add_argument("--stream", action="store_true",
+                    help="drive the Section 3.2 observe -> insert -> "
+                         "refresh -> swap lifecycle under live traffic")
+    ap.add_argument("--cycles", type=int, default=3,
+                    help="streaming refresh cycles (--stream)")
+    ap.add_argument("--refresh-source", default="stored",
+                    choices=["stored", "full"],
+                    help="refresh via Eq. 12 over stored vectors or exact "
+                         "re-encode from the rerank store")
     args = ap.parse_args()
+
+    if args.stream:
+        if args.mode == "full" or args.shards or args.index == "graph":
+            raise SystemExit("--stream needs a DR mode and a flat or IVF "
+                             "single-device index")
+        run_stream(args)
+        return
 
     ds = vectors.make_dataset("serve", n=args.n, d=args.dim, n_queries=512,
                               ood=True, seed=0)
@@ -101,9 +201,10 @@ def main():
         artifacts = msearch.build_artifacts(args.mode, X, model)
         index = build_index(args, X, artifacts.scorer, model)
     kappa = 10 if args.mode == "full" else args.kappa
-    search_fn = make_search_fn(artifacts, k=10, kappa=kappa, index=index)
 
-    engine = ServingEngine(search_fn, batch_size=args.batch, dim=args.dim)
+    engine = ServingEngine(msearch.make_state(artifacts, index=index),
+                           k=10, kappa=kappa, batch_size=args.batch,
+                           dim=args.dim)
     ids = engine.submit(ds.queries_test)
     rec = metrics.recall_at_k(jnp.asarray(ids), jnp.asarray(ds.gt[:, :10]))
     s = engine.stats

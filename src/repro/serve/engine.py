@@ -1,44 +1,62 @@
-"""Batched vector-search serving engine (Algorithm 1 as a service).
+"""Batched vector-search serving engine (Algorithm 1 as a service), built
+around the state-passing contract of :class:`repro.core.search.ServingState`.
+
+The engine compiles ONE ``(queries, state) -> (ids, state)`` step and
+carries the state through every call (the classic jax state-passing loop:
+with donation the runtime aliases the state buffers input -> output, so the
+pass-through is free). Because the artifacts are an argument rather than a
+closure constant, ``swap(state)`` installs a refreshed scorer / index /
+database with ZERO recompilations -- the swap is a treedef + aval check and
+a pointer move, asserted by the compile counter the engine exposes
+(``n_compiles``) and by the ``compile_counter`` test fixture.
 
 Pulls requests from a host-side queue, pads to the compiled batch size,
-executes the jitted multi-step search, and reports per-batch latency / QPS.
-This is the measurement harness behind the paper's throughput axis; on CPU
-the numbers characterize the harness, on TPU the system.
+executes the jitted multi-step search, and reports per-batch latency / QPS
+plus swap latency. On CPU the numbers characterize the harness, on TPU the
+system.
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import search as msearch
+
 __all__ = ["ServeStats", "ServingEngine", "make_search_fn"]
+
+
+def _engine_step(queries, state: msearch.ServingState, *, k: int,
+                 kappa: int):
+    """The one compiled serving step: search + state pass-through.
+
+    Returning the (donated) state unchanged lets XLA alias its buffers
+    input -> output, so carrying multi-GB artifacts through the call costs
+    nothing and the caller's next step uses the same executable.
+    """
+    ids = msearch.state_search(queries, state, k, kappa)
+    return ids, state
 
 
 def make_search_fn(artifacts, k: int, kappa: int, block: int = 4096,
                    index=None):
-    """Close Algorithm 1 over ``artifacts`` for any scorer and any Index
-    protocol implementation: a jit-able ``queries (B, D) -> ids (B, k)``
-    with a main search + rerank.
+    """One-shot convenience: bind ``artifacts`` (+ optional Index-protocol
+    ``index``) into a jit-able ``queries (B, D) -> ids (B, k)``.
 
-    ``index`` defaults to the flat blocked scan (``FlatIndex(block)``);
-    pass an ``IVFIndex`` / ``GraphIndex`` / ``ShardedIndex`` to serve the
-    same artifacts through a different traversal -- the engine neither
-    knows nor cares which representation is scanned nor how it is
-    traversed or placed.
+    This is a thin wrapper over the state-passing path -- it builds a
+    :class:`~repro.core.search.ServingState` and partially applies it. For
+    anything long-lived (or refreshable) use :class:`ServingEngine`, which
+    keeps the state an argument so it can be hot-swapped.
     """
-    from repro.core import search as msearch
-    from repro.index.protocol import FlatIndex
-
-    if index is None:
-        index = FlatIndex(block=block)
+    state = msearch.make_state(artifacts, index=index, block=block)
 
     def search_fn(queries):
-        return msearch.multi_step_search(queries, artifacts, index, k,
-                                         kappa)
+        return msearch.state_search(queries, state, k, kappa)
 
     return search_fn
 
@@ -49,6 +67,7 @@ class ServeStats:
     n_batches: int = 0
     total_s: float = 0.0
     latencies_ms: List[float] = field(default_factory=list)
+    swap_ms: List[float] = field(default_factory=list)
 
     @property
     def qps(self) -> float:
@@ -60,16 +79,85 @@ class ServeStats:
 
 
 class ServingEngine:
-    """search_fn(queries (B, D)) -> ids (B, k); fixed compiled batch B."""
+    """Serves ``state_search(queries (B, D), state) -> ids (B, k)`` at a
+    fixed compiled batch size, with hot-swappable state.
 
-    def __init__(self, search_fn: Callable, batch_size: int, dim: int):
-        self.search_fn = jax.jit(search_fn)
+    ``state`` is the versioned :class:`~repro.core.search.ServingState`
+    pytree; ``swap`` installs a new state with the SAME treedef and leaf
+    avals and refuses anything that would trigger a recompile; the engine
+    bumps the state's version counter on every swap.
+
+    ``donate=True`` additionally donates the state argument so XLA aliases
+    its buffers input -> output (zero-copy carry of multi-GB artifacts on
+    accelerators). Donation makes the engine the EXCLUSIVE owner of every
+    leaf: outside references to the state passed in -- including arrays
+    SHARED with it, like a StreamingState's model or the array the
+    artifacts were built from -- die on the first call, so only enable it
+    when the host loop reads state exclusively through ``engine.state``.
+    It is off by default (and pointless on CPU, where jax does not
+    implement donation and would warn on every call).
+    """
+
+    def __init__(self, state: msearch.ServingState, k: int, kappa: int,
+                 batch_size: int, dim: int, donate: bool = False):
+        if donate and jax.default_backend() == "cpu":
+            donate = False      # not implemented on CPU; avoid the warning
+        self.k = k
+        self.kappa = kappa
         self.batch_size = batch_size
         self.dim = dim
         self.stats = ServeStats()
+        self.state = state
+        self.n_swaps = 0
+        self._version0 = int(state.version)
+        self._fn = jax.jit(functools.partial(_engine_step, k=k, kappa=kappa),
+                           donate_argnums=(1,) if donate else ())
         # warmup/compile with a dummy batch
         dummy = jnp.zeros((batch_size, dim), jnp.float32)
-        jax.block_until_ready(self.search_fn(dummy))
+        ids, self.state = self._fn(dummy, self.state)
+        jax.block_until_ready(ids)
+
+    @property
+    def version(self) -> int:
+        return int(self.state.version)
+
+    @property
+    def n_compiles(self) -> Optional[int]:
+        """Executables compiled for the serving step (1 after warmup; still
+        1 after any number of well-formed swaps)."""
+        cache_size = getattr(self._fn, "_cache_size", None)
+        return cache_size() if cache_size is not None else None
+
+    def swap(self, state: msearch.ServingState) -> None:
+        """Hot-swap the serving state: zero recompiles, by construction.
+
+        The new state must match the installed one's treedef (same scorer /
+        index classes, same static index config) and leaf shapes/dtypes --
+        exactly the invariants ``streaming.refresh_state`` preserves. A
+        mismatch raises instead of silently recompiling.
+        """
+        old_def = jax.tree_util.tree_structure(self.state)
+        new_def = jax.tree_util.tree_structure(state)
+        if old_def != new_def:
+            raise ValueError(
+                "swap would recompile: state treedef changed\n"
+                f"  installed: {old_def}\n  offered:   {new_def}")
+        old_leaves = jax.tree_util.tree_leaves(self.state)
+        new_leaves = jax.tree_util.tree_leaves(state)
+        for i, (o, n) in enumerate(zip(old_leaves, new_leaves)):
+            o_aval = (jnp.shape(o), jnp.result_type(o))
+            n_aval = (jnp.shape(n), jnp.result_type(n))
+            if o_aval != n_aval:
+                raise ValueError(
+                    f"swap would recompile: leaf {i} changed aval "
+                    f"{o_aval} -> {n_aval}")
+        t0 = time.perf_counter()
+        # host-side generation counter -> device scalar (a device_put, not
+        # a compiled add: swaps never compile anything, not even once)
+        self.n_swaps += 1
+        self.state = state._replace(
+            version=jnp.asarray(self._version0 + self.n_swaps, jnp.int32))
+        self.stats.swap_ms.append((time.perf_counter() - t0) * 1e3)
 
     def submit(self, queries: np.ndarray) -> np.ndarray:
         """Run all queries through fixed-size batches (pad the tail)."""
@@ -81,7 +169,9 @@ class ServingEngine:
             if pad:
                 chunk = np.pad(chunk, ((0, pad), (0, 0)))
             t0 = time.perf_counter()
-            ids = jax.block_until_ready(self.search_fn(jnp.asarray(chunk)))
+            ids, self.state = self._fn(jnp.asarray(chunk, jnp.float32),
+                                       self.state)
+            ids = jax.block_until_ready(ids)
             dt = time.perf_counter() - t0
             self.stats.n_batches += 1
             self.stats.n_queries += min(self.batch_size, n - s)

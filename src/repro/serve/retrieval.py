@@ -31,14 +31,14 @@ bytes to d*4 (+1 tag) or d*1, which is the paper's whole point.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+import functools
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 
 from repro.core import search as msearch
 from repro.core.scorer import build_scorer
 from repro.index.protocol import FlatIndex
-from repro.serve.engine import make_search_fn
 
 __all__ = ["RetrievalIndex", "build_retrieval_index", "retrieve"]
 
@@ -46,11 +46,19 @@ __all__ = ["RetrievalIndex", "build_retrieval_index", "retrieve"]
 class RetrievalIndex(NamedTuple):
     """``mode`` picks the scorer (representation), ``index`` the Index
     protocol traversal (None = flat blocked scan) -- the two axes are
-    orthogonal, so any mode serves through any index."""
+    orthogonal, so any mode serves through any index.
+
+    ``fn_cache`` memoizes the compiled search step keyed by
+    ``(k, kappa, state treedef)``: ``retrieve`` used to rebuild AND re-jit
+    its search fn on every call, recompiling Algorithm 1 per request; now
+    the first call per key traces once and every later call is a cache hit
+    (the state rides in as a pytree argument, so even swapping in refreshed
+    artifacts reuses the executable)."""
 
     mode: str
     artifacts: msearch.SearchArtifacts
     index: Any = None
+    fn_cache: Optional[Dict] = None
 
     @property
     def x_full(self) -> jax.Array:
@@ -76,17 +84,29 @@ def build_retrieval_index(candidates: jax.Array, mode: str = "full",
         scorer = build_scorer(mode, candidates, model)
     artifacts = msearch.SearchArtifacts(scorer=scorer, x_full=candidates,
                                         model=model)
-    return RetrievalIndex(mode=mode, artifacts=artifacts, index=index)
+    return RetrievalIndex(mode=mode, artifacts=artifacts, index=index,
+                          fn_cache={})
 
 
 def retrieve(index: RetrievalIndex, user_vecs: jax.Array, k: int,
              kappa: Optional[int] = None, block: int = 4096):
-    """``user_vecs (B, D)`` -> top-k candidate ids (B, k)."""
+    """``user_vecs (B, D)`` -> top-k candidate ids (B, k).
+
+    Compiles the state-passing search ONCE per ``(k, kappa, treedef)`` and
+    caches it on the RetrievalIndex; repeated calls (and calls against
+    refreshed same-treedef artifacts) reuse the executable.
+    """
     if index.mode == "full":    # exact search IS the answer; skip the rerank
         traversal = index.index or FlatIndex(block=block)
         _, ids = traversal.search(user_vecs, index.scorer, k)
         return ids
     kappa = kappa or max(k, 2 * k)
-    search_fn = make_search_fn(index.artifacts, k, kappa, block,
-                               index=index.index)
-    return search_fn(user_vecs)
+    state = msearch.make_state(index.artifacts, index=index.index,
+                               block=block)
+    key = (k, kappa, jax.tree_util.tree_structure(state))
+    cache = index.fn_cache if index.fn_cache is not None else {}
+    fn = cache.get(key)
+    if fn is None:
+        fn = cache.setdefault(key, jax.jit(functools.partial(
+            msearch.state_search, k=k, kappa=kappa)))
+    return fn(user_vecs, state)

@@ -96,3 +96,16 @@ def test_run_smoke_path(tmp_path):
     # dequantize-then-gleanvec_ip on the micro-bench shapes
     assert fused["vs_dequant_bytes"] >= 5.0
     assert isinstance(fused["bytes_per_vec"], float)
+
+    # streaming serving trajectory: the state-passing engine swaps with
+    # ZERO recompiles while the closure-rebuild baseline re-jits per swap
+    assert any(r.startswith("serving_stream/steady-") for r in rows)
+    stream = json.loads(
+        (tmp_path / "BENCH_serving_stream.json").read_text())
+    by_name = {e["name"]: e for e in stream["results"]}
+    for mode in ("gleanvec-int8", "gleanvec-int8-sorted"):
+        assert by_name[f"serving_stream/swap-{mode}"]["recompiles"] == 0
+        assert by_name[
+            f"serving_stream/rebuild_swap-{mode}"]["recompiles"] >= 1
+        assert by_name[f"serving_stream/recall-{mode}"]["recall10"] > 0.5
+        assert by_name[f"serving_stream/steady-{mode}"]["qps"] > 0

@@ -1,0 +1,388 @@
+"""Streaming serving (Section 3.2) x the state-passing engine.
+
+Three layers of guarantees:
+
+* MATH -- streamed moments + ``refresh`` match a from-scratch batch refit,
+  and Eq. 12 reprojection (linear AND per-cluster, eager and lazy
+  ``pending``) matches direct re-projection at d == D where it is exact;
+* SYSTEM -- one ``ServingEngine`` serves EVERY scorer mode through >= 3
+  full streaming cycles (observe -> insert -> refresh -> swap) with ZERO
+  XLA recompilations after warmup, asserted by the ``compile_counter``
+  fixture AND the engine's own executable cache size;
+* QUALITY -- on a drifted (OOD) query distribution, the refreshed model's
+  recall@10 beats the stale (pre-drift) model's on the same grown
+  database, for the gleanvec / gleanvec-int8 / gleanvec-int8-sorted
+  serving modes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gleanvec as gv, leanvec_sphering as lvs, linalg, \
+    metrics, streaming
+from repro.core import search as msearch
+from repro.core.scorer import MODES
+from repro.data import vectors
+from repro.index import ivf
+from repro.serve import retrieval
+from repro.serve.engine import ServingEngine
+
+pytestmark = pytest.mark.tier1
+
+D = 64
+N, N0, CAP = 1024, 768, 1024
+STEP, CYCLES = 64, 3
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = vectors.make_dataset("stream-serve", n=N, d=D, n_queries=512,
+                              ood=True, seed=3)
+    X = jnp.asarray(ds.database)
+    rng = np.random.default_rng(0)
+    # the t=0 model is fit on ID (database-like) queries; the live traffic
+    # (ds.queries_learn / ds.queries_test) is OOD -- the Figure-1 drift
+    q_init = np.asarray(X)[rng.integers(0, N0, 256)] \
+        + 0.1 * rng.standard_normal((256, D)).astype(np.float32)
+    gvm = gv.fit(jax.random.PRNGKey(0), jnp.asarray(q_init), X[:N0],
+                 c=4, d=8)
+    lin = lvs.fit(jnp.asarray(q_init), X[:N0], 8)
+    return ds, X, q_init, gvm, lin
+
+
+def _model_for(mode, gvm, lin):
+    if mode == "full":
+        return None
+    return lin if mode.startswith("sphering") else gvm
+
+
+def _run_cycles(engine, stream, ds, X, cycles, on_insert=None):
+    """The streaming lifecycle: serve OOD traffic, observe it, insert the
+    cycle's rows, refresh, swap -- once per index in ``cycles``. Returns
+    the stream state."""
+    obs_pool = np.asarray(ds.queries_learn)
+    for cycle in cycles:
+        obs = obs_pool[cycle * 128:cycle * 128 + 128]
+        engine.submit(obs[:32])
+        rows = X[N0 + cycle * STEP: N0 + (cycle + 1) * STEP]
+        arts2, new_ids = streaming.insert_rows(engine.state.artifacts, rows)
+        state2 = engine.state._replace(artifacts=arts2)
+        if on_insert is not None:
+            state2 = on_insert(state2, rows, new_ids)
+        engine.swap(state2)
+        if stream is not None:
+            stream = streaming.observe_queries(stream, jnp.asarray(obs))
+            stream = streaming.insert(stream, rows)
+            assert bool(streaming.needs_refresh(stream))
+            stream = streaming.refresh(stream)
+        engine.swap(streaming.refresh_state(engine.state, stream,
+                                            source="full"))
+    return stream
+
+
+# ---------------------------------------------------------------------------
+# MATH: streamed moments == batch refit; Eq. 12 == direct re-projection.
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_gleanvec_matches_batch(setup):
+    """Per-cluster K_X under batched rank-1 inserts/removes + refresh ==
+    a from-scratch ``gleanvec.fit_from_moments`` refit on the effective
+    set (same fixed landmarks)."""
+    ds, X, q_init, gvm, _ = setup
+    c = gvm.n_clusters
+    x0 = X[:500]
+    tags0 = streaming._assign(gvm, x0)
+    k_q = linalg.second_moment(jnp.asarray(q_init))
+    st = streaming.init_gleanvec(gvm, k_q,
+                                 gv.per_cluster_moments(x0, tags0, c),
+                                 refresh_every=100)
+    st = streaming.insert(st, X[500:560])
+    st = streaming.remove(st, X[:40])
+    obs = jnp.asarray(ds.queries_learn[:128])
+    st = streaming.observe_queries(st, obs)
+    assert int(st.updates_since) == 100
+    st = streaming.refresh(st)
+    assert int(st.updates_since) == 0
+    # reference: batch moments of the effective set X[40:560]
+    x_eff = X[40:560]
+    tags_eff = streaming._assign(gvm, x_eff)
+    k_x_ref = gv.per_cluster_moments(x_eff, tags_eff, c)
+    np.testing.assert_allclose(np.asarray(st.k_x), np.asarray(k_x_ref),
+                               rtol=2e-2, atol=2e-1)
+    m_ref = gv.fit_from_moments(gvm.centers, k_q + linalg.second_moment(obs),
+                                k_x_ref, gvm.dim)
+    # same moments -> same per-cluster fits: compare via scores (the
+    # eigendecomposition is sign/rotation free, scores are not)
+    q = jnp.asarray(ds.queries_test[:16])
+    qv1 = np.asarray(gv.project_queries_eager(st.model, q))   # (m, C, d)
+    qv2 = np.asarray(gv.project_queries_eager(m_ref, q))
+    t1, l1 = gv.encode_database(st.model, x_eff[:64])
+    t2, l2 = gv.encode_database(m_ref, x_eff[:64])
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    s1 = np.einsum("mnd,nd->mn", qv1[:, np.asarray(t1)], np.asarray(l1))
+    s2 = np.einsum("mnd,nd->mn", qv2[:, np.asarray(t2)], np.asarray(l2))
+    np.testing.assert_allclose(s1, s2, rtol=5e-2, atol=0.5)
+
+
+@pytest.mark.parametrize("regime", ["id", "ood"])
+def test_streaming_reproject_matches_direct_linear(setup, regime):
+    """Eq. 12 at d == D (full-rotation storage): reprojection of stored
+    vectors == direct projection under the refreshed model, for ID and
+    OOD query moments; the lazy ``pending`` path touches exactly the
+    marked rows."""
+    ds, X, q_init, _, _ = setup
+    x = X[:300]
+    q = jnp.asarray(q_init if regime == "id"
+                    else np.asarray(ds.queries_learn[:256]))
+    st = streaming.init(linalg.second_moment(q), linalg.second_moment(x),
+                        d=D, refresh_every=10)
+    x_low = x @ st.model.b.T
+    st = streaming.insert(st, x[:12] * 1.5)
+    st = streaming.observe_queries(st,
+                                   jnp.asarray(ds.queries_learn[256:384]))
+    st = streaming.refresh(st)
+    direct = x @ st.model.b.T
+    reproj = streaming.reproject(st, x_low)
+    np.testing.assert_allclose(np.asarray(reproj), np.asarray(direct),
+                               rtol=1e-2, atol=1e-2)
+    pending = jnp.arange(300) % 2 == 0
+    lazy = streaming.reproject(st, x_low, pending=pending)
+    np.testing.assert_allclose(np.asarray(lazy),
+                               np.where(np.asarray(pending)[:, None],
+                                        np.asarray(reproj),
+                                        np.asarray(x_low)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("regime", ["id", "ood"])
+def test_streaming_reproject_matches_direct_gleanvec(setup, regime):
+    """Per-cluster Eq. 12 at d == D: T_{c} maps each cluster's stored
+    vectors onto the refreshed per-cluster projection exactly."""
+    ds, X, q_init, _, _ = setup
+    x = X[:400]
+    q = jnp.asarray(q_init if regime == "id"
+                    else np.asarray(ds.queries_learn[:256]))
+    model = gv.fit(jax.random.PRNGKey(1), q, x, c=3, d=D)   # d == D
+    tags, x_low = gv.encode_database(model, x)
+    st = streaming.init_gleanvec(
+        model, linalg.second_moment(q),
+        gv.per_cluster_moments(x, tags, 3), refresh_every=10)
+    st = streaming.insert(st, x[:16] * 1.5)
+    st = streaming.observe_queries(st,
+                                   jnp.asarray(ds.queries_learn[256:384]))
+    st = streaming.refresh(st)
+    assert streaming.transition_matrix(st).shape == (3, D, D)
+    _, direct = gv.encode_database(st.model, x)
+    reproj = streaming.reproject(st, x_low, tags=tags)
+    np.testing.assert_allclose(np.asarray(reproj), np.asarray(direct),
+                               rtol=2e-2, atol=2e-2)
+    pending = jnp.arange(400) % 3 == 0
+    lazy = streaming.reproject(st, x_low, tags=tags, pending=pending)
+    np.testing.assert_allclose(np.asarray(lazy),
+                               np.where(np.asarray(pending)[:, None],
+                                        np.asarray(reproj),
+                                        np.asarray(x_low)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SYSTEM: zero recompiles across swaps, for every serving mode.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", list(MODES))
+def test_engine_swap_zero_recompiles(setup, mode, compile_counter):
+    """One ServingEngine per mode through 3 full streaming cycles
+    (observe + insert + refresh + swap): after the warmup cycle, ZERO
+    XLA backend compiles -- the compiled step is reused across every
+    swap, and the engine's executable cache stays at size 1."""
+    ds, X, q_init, gvm, lin = setup
+    model = _model_for(mode, gvm, lin)
+    arts = streaming.build_streaming_artifacts(mode, X[:N0], model,
+                                               capacity=CAP, sort_block=64,
+                                               slack_blocks=2)
+    engine = ServingEngine(msearch.make_state(arts, block=256), k=10,
+                           kappa=15, batch_size=32, dim=D)
+    stream = (None if model is None else
+              streaming.init_from_artifacts(arts, q_init,
+                                            refresh_every=STEP))
+    # cycle 0 is the warmup: compiles the serving step AND every eager op
+    # of the host-side streaming loop once
+    stream = _run_cycles(engine, stream, ds, X, [0])
+    compile_counter.reset()
+    stream = _run_cycles(engine, stream, ds, X, [1, 2])
+    engine.submit(np.asarray(ds.queries_test[:32]))
+    assert compile_counter.count == 0, \
+        f"{mode}: {compile_counter.count} recompiles across swap cycles"
+    assert engine.n_compiles in (None, 1)
+    assert engine.n_swaps == 2 * CYCLES
+    assert engine.version == 2 * CYCLES
+
+
+def test_engine_swap_zero_recompiles_ivf_reduced_probe(setup,
+                                                       compile_counter):
+    """The IVF traversal streams too: posting-list inserts fill
+    pre-allocated slack, removals tombstone, and the refresh hook
+    re-encodes the reduced-space center companion -- still zero
+    recompiles."""
+    ds, X, q_init, gvm, _ = setup
+    arts = streaming.build_streaming_artifacts("gleanvec-int8", X[:N0],
+                                               gvm, capacity=CAP)
+    index = ivf.build(jax.random.PRNGKey(1), X[:N0], n_lists=8, nprobe=4)
+    index = ivf.with_list_slack(index, CAP - N0)
+    index = ivf.with_reduced_centers(index, arts.scorer, gvm)
+    engine = ServingEngine(msearch.make_state(arts, index=index), k=10,
+                           kappa=15, batch_size=32, dim=D)
+    stream = streaming.init_from_artifacts(arts, q_init, refresh_every=STEP)
+
+    def on_insert(state, rows, new_ids):
+        return state._replace(index=ivf.insert_ids(state.index, rows,
+                                                   new_ids))
+
+    def remove_cycle(rm_ids):
+        nonlocal stream
+        arts2 = streaming.remove_rows(engine.state.artifacts, rm_ids)
+        engine.swap(engine.state._replace(
+            artifacts=arts2,
+            index=ivf.remove_ids(engine.state.index, rm_ids)))
+        stream = streaming.remove(stream, X[jnp.asarray(rm_ids)])
+        stream = streaming.refresh(stream)
+        engine.swap(streaming.refresh_state(engine.state, stream,
+                                            source="full"))
+
+    # warmup: one insert cycle + one remove cycle compile everything once
+    stream = _run_cycles(engine, stream, ds, X, [0], on_insert=on_insert)
+    remove_cycle(np.arange(8, dtype=np.int32))
+    compile_counter.reset()
+    stream = _run_cycles(engine, stream, ds, X, [1, 2], on_insert=on_insert)
+    remove_cycle(np.arange(8, 16, dtype=np.int32))
+    served = engine.submit(np.asarray(ds.queries_test[:32]))
+    assert compile_counter.count == 0, \
+        f"{compile_counter.count} recompiles across IVF streaming cycles"
+    assert engine.state.index.center_scorer is not None
+    assert not np.isin(served, np.arange(16)).any()   # tombstones stay dead
+
+
+def test_engine_swap_refuses_treedef_or_shape_change(setup):
+    ds, X, q_init, gvm, _ = setup
+    arts = streaming.build_streaming_artifacts("gleanvec", X[:N0], gvm,
+                                               capacity=CAP)
+    engine = ServingEngine(msearch.make_state(arts, block=256), k=10,
+                           kappa=15, batch_size=16, dim=D)
+    with pytest.raises(ValueError, match="treedef"):
+        engine.swap(msearch.make_state(arts, block=128))   # static config
+    grown = arts._replace(x_full=jnp.concatenate(
+        [arts.x_full, arts.x_full[:1]]))
+    with pytest.raises(ValueError, match="aval"):
+        engine.swap(engine.state._replace(artifacts=grown))
+
+
+# ---------------------------------------------------------------------------
+# QUALITY: post-refresh recall on the drifted distribution >= stale model.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["gleanvec", "gleanvec-int8",
+                                  "gleanvec-int8-sorted"])
+def test_streaming_refresh_beats_stale_model(setup, mode, compile_counter):
+    """The acceptance gate: >= 3 cycles of inserts + query observation +
+    refresh + swap with zero recompiles after warmup, and the refreshed
+    model's recall@10 on the drifted (OOD) distribution >= what the
+    stale (pre-drift) model scores on the same grown database."""
+    ds, X, q_init, gvm, _ = setup
+    arts = streaming.build_streaming_artifacts(mode, X[:N0], gvm,
+                                               capacity=CAP, sort_block=64,
+                                               slack_blocks=2)
+    engine = ServingEngine(msearch.make_state(arts, block=256), k=10,
+                           kappa=15, batch_size=32, dim=D)
+    stream = streaming.init_from_artifacts(arts, q_init, refresh_every=STEP)
+    stream = _run_cycles(engine, stream, ds, X, [0])      # warmup cycle
+    compile_counter.reset()
+    stream = _run_cycles(engine, stream, ds, X, [1, 2])   # counted cycles
+    assert compile_counter.count == 0, \
+        f"{mode}: {compile_counter.count} recompiles across refresh cycles"
+    assert engine.n_compiles in (None, 1)
+
+    n_final = N0 + CYCLES * STEP
+    QT = np.asarray(ds.queries_test)
+    gt = vectors.exact_topk(QT, np.asarray(X[:n_final]), 10)
+    refreshed_ids = engine.submit(QT)
+    r_new = float(metrics.recall_at_k(jnp.asarray(refreshed_ids),
+                                      jnp.asarray(gt)))
+    stale = msearch.build_artifacts(mode, X[:n_final], gvm)
+    stale_ids = msearch.state_search(jnp.asarray(QT),
+                                     msearch.make_state(stale, block=256),
+                                     10, 15)
+    r_stale = float(metrics.recall_at_k(stale_ids, jnp.asarray(gt)))
+    assert r_new >= r_stale, (mode, r_stale, r_new)
+    assert r_new > 0.85, (mode, r_new)
+
+
+# ---------------------------------------------------------------------------
+# Serving-layer satellites: retrieval compiled-fn cache, row roundtrips.
+# ---------------------------------------------------------------------------
+
+
+def test_retrieval_caches_compiled_fn(setup, compile_counter):
+    """retrieve() used to rebuild + re-jit the search fn per call; now the
+    compiled step is cached on the RetrievalIndex keyed by
+    (k, kappa, treedef) and repeat calls compile NOTHING."""
+    ds, X, q_init, gvm, _ = setup
+    ri = retrieval.build_retrieval_index(X, "gleanvec-int8", gvm)
+    users = jnp.asarray(ds.queries_test[:32])
+    ids1 = retrieval.retrieve(ri, users, k=10, kappa=20)
+    assert len(ri.fn_cache) == 1
+    (key,) = ri.fn_cache
+    assert key[0] == 10 and key[1] == 20
+    compile_counter.reset()
+    ids2 = retrieval.retrieve(ri, users, k=10, kappa=20)
+    assert compile_counter.count == 0
+    np.testing.assert_array_equal(np.asarray(ids1), np.asarray(ids2))
+    # a different (k, kappa) is a new entry, not a clobber
+    retrieval.retrieve(ri, users, k=5, kappa=20)
+    assert len(ri.fn_cache) == 2
+
+
+def test_insert_remove_roundtrip_all_modes(setup):
+    """Row-level scorer ops: a removed id is never served again; an
+    inserted row is retrievable by its own (exact-duplicate) query in
+    every mode."""
+    ds, X, q_init, gvm, lin = setup
+    # the max-norm row is its own exact MIPS top-1 (<x, y> < ||x||^2 for
+    # every shorter y), so self-retrieval is well-posed under IP
+    rid = int(np.argmax(np.linalg.norm(np.asarray(X[:N0]), axis=1)))
+    probe = X[rid][None, :]
+    new_row = np.asarray(X[N0 + 1][None, :]) * 3.0   # dominant-norm insert
+    for mode in MODES:
+        model = _model_for(mode, gvm, lin)
+        arts = streaming.build_streaming_artifacts(
+            mode, X[:N0], model, capacity=CAP, sort_block=64,
+            slack_blocks=2)
+        ids0 = msearch.state_search(probe,
+                                    msearch.make_state(arts, block=256),
+                                    10, 15)
+        assert np.isin(rid, np.asarray(ids0[0])), mode
+        arts = streaming.remove_rows(arts, jnp.asarray([rid]))
+        ids1 = msearch.state_search(probe,
+                                    msearch.make_state(arts, block=256),
+                                    10, 15)
+        assert not np.isin(np.asarray(ids1), [rid]).any(), mode
+        arts, new_ids = streaming.insert_rows(arts, new_row)
+        ids2 = msearch.state_search(jnp.asarray(new_row),
+                                    msearch.make_state(arts, block=256),
+                                    10, 15)
+        nid = int(np.asarray(new_ids)[0])
+        assert np.isin(nid, np.asarray(ids2[0])), mode
+        # re-insert at the SAME id == overwrite in every layout: the old
+        # encoding must be gone (no ghost slot keeps serving it)
+        arts, _ = streaming.insert_rows(arts, np.asarray(X[3][None, :]),
+                                        ids=np.asarray([nid]))
+        ids3 = msearch.state_search(jnp.asarray(new_row),
+                                    msearch.make_state(arts, block=256),
+                                    10, 15)
+        assert not np.isin(nid, np.asarray(ids3[0])), mode
+        if hasattr(arts.scorer, "perm"):
+            perm = np.asarray(arts.scorer.perm)
+            assert (perm == nid).sum() == 1, mode   # exactly one slot

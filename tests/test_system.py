@@ -8,8 +8,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gleanvec as gv, leanvec_sphering as lvs, metrics
+from repro.core import search as msearch
 from repro.data import vectors
-from repro.index import bruteforce, graph
+from repro.index import graph
+from repro.index.protocol import FlatIndex
 from repro.serve import retrieval
 from repro.serve.engine import ServingEngine
 
@@ -72,14 +74,20 @@ def test_serving_engine_stats():
                               seed=11)
     X = jnp.asarray(ds.database)
 
-    def search_fn(q):
-        _, ids = bruteforce.search(q, X, 10, block=512)
-        return ids
-
-    eng = ServingEngine(search_fn, batch_size=16, dim=32)
+    art = msearch.build_artifacts("full", X)
+    state = msearch.make_state(art, index=FlatIndex(block=512))
+    eng = ServingEngine(state, k=10, kappa=10, batch_size=16, dim=32)
     out = eng.submit(ds.queries_test[:40])
     assert out.shape == (40, 10)
     assert eng.stats.n_queries == 40
     assert eng.stats.n_batches == 3
     assert eng.stats.qps > 0
     assert eng.stats.percentile_ms(99) >= eng.stats.percentile_ms(50)
+    # the exact engine really is exact
+    gt = jnp.asarray(ds.gt[:40, :10])
+    assert float(metrics.recall_at_k(jnp.asarray(out), gt)) == 1.0
+    # state-passing engine: swapping the same-treedef state recompiles
+    # nothing and bumps the version counter
+    c0 = eng.n_compiles
+    eng.swap(eng.state)
+    assert eng.version == 1 and eng.n_compiles == c0
