@@ -23,6 +23,18 @@ BENCH_QUERIES = int(os.environ.get("BENCH_QUERIES", 1024))
 
 ROWS: List[str] = []
 RESULTS: List[Dict] = []
+# Row-name prefixes the bench modules have DECLARED they will emit this
+# run (``declare``): ``write_json_results`` fails if any is missing, so a
+# silently-skipped row (an early return, a renamed mode string) breaks
+# smoke instead of passing it.
+DECLARED: List[str] = []
+
+
+def declare(*prefixes: str) -> None:
+    """Register row-name prefixes this bench run MUST emit (idempotent)."""
+    for p in prefixes:
+        if p not in DECLARED:
+            DECLARED.append(p)
 
 
 @functools.lru_cache(maxsize=None)
@@ -74,7 +86,15 @@ def write_json_results(out_dir: str) -> List[str]:
     """One ``BENCH_<name>.json`` per top-level bench group (the prefix of
     each row name, e.g. ``table1/...`` -> BENCH_table1.json), each holding
     the structured rows emitted so far: us_per_call, ops_per_s and every
-    parsed ``derived`` field (recall10, bytes_per_vec, qps, ...)."""
+    parsed ``derived`` field (recall10, bytes_per_vec, qps, ...).
+
+    Raises if any ``declare``-d row prefix has no emitted row -- declared
+    rows must reach the written JSON for smoke to pass."""
+    missing = [p for p in DECLARED
+               if not any(e["name"].startswith(p) for e in RESULTS)]
+    if missing:
+        raise RuntimeError(
+            f"declared bench rows missing from results: {missing}")
     groups: Dict[str, List[Dict]] = {}
     for entry in RESULTS:
         groups.setdefault(entry["name"].split("/")[0], []).append(entry)

@@ -36,6 +36,7 @@ def main(argv=None) -> None:
             common.dataset.cache_clear()
             common.ROWS.clear()
             common.RESULTS.clear()
+            common.DECLARED.clear()
         print("name,us_per_call,derived")
         if args.smoke:
             table1_search.run()

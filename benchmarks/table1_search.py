@@ -17,13 +17,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import dataset, emit, time_fn
+from benchmarks.common import dataset, declare, emit, time_fn
 from repro.core import gleanvec as gv, leanvec_sphering as lvs, metrics
 from repro.core.quantization import quantize
-from repro.core.scorer import (gleanvec_quantized_scorer,
+from repro.core.scorer import (gleanvec_quantized_scorer, gleanvec_scorer,
                                sorted_gleanvec_quantized_scorer,
                                sorted_gleanvec_scorer)
 from repro.index import bruteforce, distributed, graph, ivf
+from repro.index.protocol import replace
+from repro.kernels.ivf_scan import fine_step_bytes
 from repro.utils import hlo_analysis
 
 
@@ -36,7 +38,38 @@ def _probe_flops(index, scorer, queries) -> float:
     return float(cost.get("flops", 0.0))
 
 
+def _fine_bytes_gathered(index, scorer, queries, kappa) -> float:
+    """Compiled HBM bytes of the GATHERED fine step (``_probe_and_score``:
+    posting-list gather + ``score_ids``), via ``normalize_cost``."""
+    qs = index.prepare_queries(scorer, queries)
+    cost = hlo_analysis.normalize_cost(
+        ivf._probe_and_score.lower(qs, scorer, index, kappa).compile()
+        .cost_analysis())
+    return float(cost.get("bytes accessed", 0.0))
+
+
+def _fine_bytes_fused(index, scorer, m: int, kappa: int) -> float:
+    """HBM bytes of the FUSED range-scan fine step: the kernel's traffic
+    is fixed by its BlockSpecs (``fine_step_bytes``), with the expected
+    schedule occupancy = nprobe * (mean blocks per cluster) slabs/query."""
+    ranges = np.asarray(scorer.list_block_ranges)
+    blocks_per_cluster = (ranges >= 0).sum() / ranges.shape[0]
+    visited = m * index.nprobe * blocks_per_cluster
+    rows = getattr(scorer, "codes", None)
+    if rows is None:
+        rows = scorer.x_low
+    return fine_step_bytes(m, visited, scorer.layout_block, rows.shape[1],
+                           ranges.shape[0],
+                           code_bytes=np.dtype(rows.dtype).itemsize,
+                           k=kappa)
+
+
 def run():
+    declare("table1_search/flat/", "table1_search/ivf/",
+            "table1_search/ivf-rprobe/", "table1_search/ivf-sorted-fused/",
+            "table1_search/ivf-sharded/", "table1_search/graph/",
+            "table1_search/graph-expand1/", "table1_search/graph-expand4/",
+            "table1_search/graph-sharded/")
     ds = dataset("laion-OOD")
     X = jnp.asarray(ds.database)
     Q = jnp.asarray(ds.queries_learn)
@@ -113,12 +146,43 @@ def run():
                   ivf.search_scorer(QT, gq, index, k=kappa, nprobe=8)[1]),
               extra=f";probe_flops={_probe_flops(index, gq, QT):.0f}")
 
+    # fused sorted-IVF range scan: the coarse quantizer IS the GleanVec
+    # clustering (build_aligned), so the fine step streams the probed
+    # clusters' single-tag slabs (scan_lists) -- no posting-list gather,
+    # no (m, nprobe*L) matrix. fine_bytes is the range-scan kernel's
+    # BlockSpec-determined HBM traffic; fine_bytes_gathered is the
+    # compiled gathered fine step's (normalize_cost) for the same probe.
+    iva = ivf.build_aligned(model, X, nprobe=8)
+    fb_fused = _fine_bytes_fused(iva, sgq, nq, kappa)
+    fb_gather = _fine_bytes_gathered(replace(iva, aligned_layout=False),
+                                     sgq, QT, kappa)
+    bench(f"ivf-sorted-fused/gleanvec-d{d}-int8-sorted",
+          lambda: finish(iva.search(QT, sgq, kappa)[1]),
+          extra=f";fine_bytes={fb_fused:.0f}"
+                f";fine_bytes_gathered={fb_gather:.0f}"
+                f";vs_gathered_bytes={fb_gather / fb_fused:.1f}x")
+
     # graph index (reduced space) + rerank
     g = graph.build(np.asarray(xg_low), r=24, n_iters=5, seed=0)
     bench(f"graph/gleanvec-d{d}",
           lambda: finish(graph.beam_search_gleanvec(
               q_views, tags, xg_low, g, k=kappa, beam=96,
               max_hops=200)[1]))
+
+    # multi-expansion beam search: expand=E pops the top-E frontier
+    # vertices per hop (E x fewer while_loop iterations, E x wider MXU
+    # contractions); expand=1 is the classic traversal. hops comes from
+    # the traced traversal at matched beam/recall.
+    gsc = gleanvec_scorer(model, X)
+    for e in (1, 4):
+        _, _, hops, _ = graph.beam_search_scorer(
+            QT, gsc, g, k=kappa, beam=96, max_hops=200, expand=e,
+            trace=True)
+        bench(f"graph-expand{e}/gleanvec-d{d}",
+              lambda e=e: finish(graph.beam_search_scorer(
+                  QT, gsc, g, k=kappa, beam=96, max_hops=200,
+                  expand=e)[1]),
+              extra=f";hops={int(hops)}")
 
     # sharded placements (4 shards; mesh-free reference path on one chip,
     # the same per-shard searches shard_map distributes on a real mesh)

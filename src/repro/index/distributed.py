@@ -279,8 +279,9 @@ def build_sharded_index(kind: str, mode: str, database, model=None, *,
                         n_shards: Optional[int] = None, key=None,
                         block: int = 4096, sort_block: int = 256,
                         n_lists: int = 32, nprobe: int = 8,
-                        reduced_probe: bool = False, beam: int = 64,
-                        max_hops: int = 256, graph_kwargs=None):
+                        reduced_probe: bool = False, aligned: bool = False,
+                        beam: int = 64, max_hops: int = 256,
+                        expand: int = 1, graph_kwargs=None):
     """Build a :class:`ShardedIndex` + matching stacked scorer.
 
     ``kind`` in {"flat", "ivf", "graph"} x ``mode`` in ``scorer.MODES`` x
@@ -289,8 +290,12 @@ def build_sharded_index(kind: str, mode: str, database, model=None, *,
     gets a self-contained scorer (``sc.build_scorer``) and sub-index (flat
     scan / local posting lists over one shared coarse quantizer / its own
     subgraph). With ``reduced_probe`` the IVF centers are projected into
-    each shard scorer's reduced space (``ivf.with_reduced_centers``).
-    Returns ``(sharded_index, stacked_scorer)``.
+    each shard scorer's reduced space (``ivf.with_reduced_centers``); with
+    ``aligned`` (sorted modes only) the per-shard coarse quantizer is the
+    GleanVec model's clustering (``ivf.build_aligned_sharded``), so each
+    shard's fine step runs the gather-free range scan. ``expand`` is the
+    graph traversal's multi-expansion width. Returns
+    ``(sharded_index, stacked_scorer)``.
     """
     X = jnp.asarray(database, jnp.float32)
     n = X.shape[0]
@@ -310,17 +315,24 @@ def build_sharded_index(kind: str, mode: str, database, model=None, *,
     if kind == "flat":
         subs = [FlatIndex(block=block)] * n_shards
     elif kind == "ivf":
-        if key is None:
-            key = jax.random.PRNGKey(0)
-        subs = ivf_mod.build_sharded(key, X, n_lists, n_shards,
-                                     nprobe=nprobe)
+        if aligned:
+            if not mode.endswith("-sorted"):
+                raise ValueError("aligned IVF sharding needs a sorted "
+                                 f"scorer mode, got {mode!r}")
+            subs = ivf_mod.build_aligned_sharded(model, X, n_shards,
+                                                 nprobe=nprobe)
+        else:
+            if key is None:
+                key = jax.random.PRNGKey(0)
+            subs = ivf_mod.build_sharded(key, X, n_lists, n_shards,
+                                         nprobe=nprobe)
         if reduced_probe:
             subs = [ivf_mod.with_reduced_centers(ix, s, model)
                     for ix, s in zip(subs, scorers)]
     elif kind == "graph":
         gkw = dict(graph_kwargs or {})
         subs = [replace(graph_mod.build(np.asarray(r), **gkw), beam=beam,
-                        max_hops=max_hops) for r in rows]
+                        max_hops=max_hops, expand=expand) for r in rows]
     else:
         raise ValueError(f"unknown index kind {kind!r}; "
                          "one of ('flat', 'ivf', 'graph')")

@@ -3,8 +3,12 @@
 
 TPU adaptation (DESIGN.md section 2): the paper's CPU graph traversal is
 memory-latency-bound with per-vector random fetches; here beams for a whole
-query batch advance in lockstep, each hop gathering (batch, R) neighbors and
-scoring them with one MXU-friendly contraction. The scoring function is
+query batch advance in lockstep, each hop popping the top-``expand``
+unvisited frontier vertices (CAGRA-style multi-expansion; ``expand=1`` is
+the classic best-first loop) and scoring their gathered
+(batch, expand * R) neighbors with one MXU-friendly contraction --
+~expand-fold fewer sequential ``while_loop`` iterations for the same
+number of vertices scored. The scoring function is
 pluggable so the same traversal serves plain LeanVec (q_low . x_low), eager
 GleanVec (Alg. 4: per-tag query views) and int8-quantized databases.
 
@@ -42,15 +46,21 @@ __all__ = ["GraphIndex", "build", "beam_search_scorer", "beam_search",
 @dataclass(frozen=True, eq=False)
 class GraphIndex:
     """Navigable graph implementing the Index protocol. ``beam`` /
-    ``max_hops`` are static search configuration for the protocol path
-    (``candidates``); the explicit entry points accept overrides. Entries
-    may be -1-padded (stacked per-shard graphs): padded slots are masked
-    out of the initial beam."""
+    ``max_hops`` / ``expand`` are static search configuration for the
+    protocol path (``candidates``); the explicit entry points accept
+    overrides. ``expand`` is the CAGRA-style multi-expansion width: each
+    hop pops the top-``expand`` unvisited frontier vertices and scores
+    their (batch, expand*R) gathered neighbors in one contraction --
+    ~expand-fold fewer ``while_loop`` iterations and expand-fold wider MXU
+    work per hop; ``expand=1`` reproduces the classic best-first traversal
+    exactly. Entries may be -1-padded (stacked per-shard graphs): padded
+    slots are masked out of the initial beam."""
 
     neighbors: jax.Array  # (n, R) int32, -1 padded
     entries: jax.Array    # (E,) int32 entry points (medoid + per-cluster)
     beam: int = 64
     max_hops: int = 256
+    expand: int = 1       # frontier vertices expanded per hop
 
     # ---- Index protocol ----------------------------------------------------
 
@@ -59,8 +69,10 @@ class GraphIndex:
 
     def candidates(self, qstate, scorer, k: int):
         top, ids, _, _ = _beam_qstate(qstate, scorer, self, k, self.beam,
-                                      self.max_hops)
-        return top, ids
+                                      self.max_hops, expand=self.expand)
+        # -inf winners are unfilled beam slots (or streaming-dead rows a
+        # scorer masked); strip their ids like the IVF path does.
+        return top, jnp.where(top > NEG_INF, ids, -1)
 
     def search(self, queries: jax.Array, scorer, k: int):
         return self.candidates(self.prepare_queries(scorer, queries),
@@ -82,7 +94,7 @@ class GraphIndex:
 
 
 register_index_pytree(GraphIndex, data_fields=("neighbors", "entries"),
-                      static_fields=("beam", "max_hops"))
+                      static_fields=("beam", "max_hops", "expand"))
 
 
 # ---------------------------------------------------------------------------
@@ -221,15 +233,46 @@ def build(x: np.ndarray, r: int = 32, alpha: float = 1.2, n_iters: int = 6,
 # ---------------------------------------------------------------------------
 
 
+def _beam_member_mask(ids: jax.Array, nbrs: jax.Array) -> jax.Array:
+    """(batch, P) membership of ``nbrs`` in the per-row ``ids`` beam, via a
+    per-row sort + searchsorted instead of the O(beam * P * beam) equality
+    broadcast (P = expand * R; the broadcast was the per-hop memory peak)."""
+    beam = ids.shape[1]
+    sorted_ids = jnp.sort(ids, axis=1)
+    pos = jax.vmap(jnp.searchsorted)(sorted_ids, nbrs)
+    pos = jnp.clip(pos, 0, beam - 1)
+    return jnp.take_along_axis(sorted_ids, pos, axis=1) == nbrs
+
+
+def _mask_duplicate_nbrs(nbrs: jax.Array) -> jax.Array:
+    """Set repeated ids within each row of ``nbrs`` to -1 (keep the first
+    occurrence in sorted order). Multi-expansion hops gather overlapping
+    neighborhoods; without this a vertex could hold several beam slots."""
+    order = jnp.argsort(nbrs, axis=1)
+    snb = jnp.take_along_axis(nbrs, order, axis=1)
+    dup_sorted = jnp.concatenate(
+        [jnp.zeros((nbrs.shape[0], 1), bool), snb[:, 1:] == snb[:, :-1]],
+        axis=1)
+    rows = jnp.arange(nbrs.shape[0])[:, None]
+    dup = jnp.zeros(nbrs.shape, bool).at[rows, order].set(dup_sorted)
+    return jnp.where(dup, -1, nbrs)
+
+
 def _beam_loop(score_ids, graph: GraphIndex, batch: int, beam: int,
-               max_hops: int, trace_tags: Optional[jax.Array] = None):
+               max_hops: int, expand: int = 1,
+               trace_tags: Optional[jax.Array] = None):
     """Shared traversal. ``score_ids(ids) -> (batch, k) scores`` for id >= 0.
 
-    Returns (scores, ids, n_hops, tag_trace) with tag_trace (batch, max_hops)
-    = tag of the vertex expanded at each hop (-1 = no hop), for Figure 7.
+    Each hop pops the top-``expand`` unvisited frontier vertices per query
+    and scores their concatenated (batch, expand*R) neighbor gather in one
+    contraction; ``expand=1`` is the classic best-first loop. Returns
+    (scores, ids, n_hops, tag_trace) with tag_trace (batch, max_hops) = tag
+    of the BEST vertex expanded at each hop (-1 = no hop), for Figure 7.
     """
     nbr_tbl = graph.neighbors
     r = nbr_tbl.shape[1]
+    e = max(1, expand)
+    assert e <= beam, "expand must not exceed the beam width"
 
     n_entry = graph.entries.shape[0]
     assert n_entry <= beam, "beam must hold all entry points"
@@ -252,30 +295,40 @@ def _beam_loop(score_ids, graph: GraphIndex, batch: int, beam: int,
         key_unused, scores, ids, visited, hop, tag_hist = state
         expandable = (~visited) & (ids >= 0)
         masked = jnp.where(expandable, scores, NEG_INF)
-        best = jnp.argmax(masked, axis=1)                      # (batch,)
+        _, best = jax.lax.top_k(masked, e)                     # (batch, e)
+        rows = jnp.arange(batch)[:, None]
+        # slots that actually hold expandable work (fewer than e frontier
+        # vertices -> the overflow selections are no-ops)
+        sel_ok = jnp.take_along_axis(expandable, best, axis=1)
         has_work = jnp.any(expandable, axis=1)
-        best_ids = jnp.take_along_axis(ids, best[:, None], axis=1)[:, 0]
-        visited = visited.at[jnp.arange(batch), best].set(
-            visited[jnp.arange(batch), best] | has_work)
-        # expand: gather neighbors of the chosen vertex
-        nbrs = nbr_tbl[jnp.where(best_ids >= 0, best_ids, 0)]  # (batch, R)
-        nbrs = jnp.where((nbrs >= 0) & has_work[:, None], nbrs, -1)
+        if e == 1:      # exact classic semantics: gate on the row, not the
+            sel_ok = has_work[:, None]  # slot (matches the argmax loop)
+        best_ids = jnp.take_along_axis(ids, best, axis=1)      # (batch, e)
+        visited = visited.at[rows, best].set(
+            jnp.take_along_axis(visited, best, axis=1) | sel_ok)
+        # expand: gather the chosen vertices' neighbors in one batch
+        nbrs = nbr_tbl[jnp.where(best_ids >= 0, best_ids, 0)]  # (b, e, R)
+        nbrs = jnp.where((nbrs >= 0) & sel_ok[:, :, None], nbrs, -1)
+        nbrs = nbrs.reshape(batch, e * r)
+        if e > 1:       # overlapping neighborhoods: drop within-hop dups
+            nbrs = _mask_duplicate_nbrs(nbrs)
         nscores = score_ids(nbrs)
         nscores = jnp.where(nbrs >= 0, nscores, NEG_INF)
-        # dedupe against current beam
-        present = jnp.any(nbrs[:, :, None] == ids[:, None, :], axis=2)
+        # dedupe against the current beam (sort-based membership)
+        present = _beam_member_mask(ids, nbrs)
         nscores = jnp.where(present, NEG_INF, nscores)
         # merge and keep top-beam
         all_scores = jnp.concatenate([scores, nscores], axis=1)
         all_ids = jnp.concatenate([ids, nbrs], axis=1)
         all_vis = jnp.concatenate(
-            [visited, jnp.zeros((batch, r), bool)], axis=1)
+            [visited, jnp.zeros((batch, e * r), bool)], axis=1)
         top_scores, sel = jax.lax.top_k(all_scores, beam)
         top_ids = jnp.take_along_axis(all_ids, sel, axis=1)
         top_vis = jnp.take_along_axis(all_vis, sel, axis=1)
         if trace_tags is not None:
-            tag = jnp.where(best_ids >= 0,
-                            trace_tags[jnp.where(best_ids >= 0, best_ids, 0)],
+            first = best_ids[:, 0]
+            tag = jnp.where(first >= 0,
+                            trace_tags[jnp.where(first >= 0, first, 0)],
                             -1)
             tag = jnp.where(has_work, tag, -1)
             tag_hist = tag_hist.at[:, hop].set(tag)
@@ -288,9 +341,11 @@ def _beam_loop(score_ids, graph: GraphIndex, batch: int, beam: int,
     return scores, ids, hops, tag_hist
 
 
-@functools.partial(jax.jit, static_argnames=("k", "beam", "max_hops"))
+@functools.partial(jax.jit, static_argnames=("k", "beam", "max_hops",
+                                             "expand"))
 def _beam_qstate(qstate, scorer, graph: GraphIndex, k: int, beam: int,
-                 max_hops: int, trace_tags: Optional[jax.Array] = None):
+                 max_hops: int, expand: int = 1,
+                 trace_tags: Optional[jax.Array] = None):
     """Traversal over any scorer with prepared queries ``qstate``."""
     m = batch_of(qstate)
 
@@ -299,25 +354,29 @@ def _beam_qstate(qstate, scorer, graph: GraphIndex, k: int, beam: int,
         return scorer.score_ids(qstate, safe)
 
     scores, ids, hops, tag_hist = _beam_loop(score_ids, graph, m, beam,
-                                             max_hops, trace_tags=trace_tags)
+                                             max_hops, expand=expand,
+                                             trace_tags=trace_tags)
     top, sel = jax.lax.top_k(scores, k)
     return top, jnp.take_along_axis(ids, sel, axis=1), hops, tag_hist
 
 
 def beam_search_scorer(queries: jax.Array, scorer, graph: GraphIndex,
                        k: int, beam: int = 64, max_hops: int = 256,
-                       trace: bool = False):
+                       expand: int = 1, trace: bool = False):
     """Unified-protocol beam search: ``queries (m, D)`` full-dimension.
 
-    With ``trace=True`` additionally returns (n_hops, (m, max_hops) tag
-    trace) -- requires a scorer with ``tags`` (Figure 7 measurement).
+    ``expand`` pops that many frontier vertices per hop (multi-expansion);
+    1 is the classic best-first traversal. With ``trace=True`` additionally
+    returns (n_hops, (m, max_hops) tag trace) -- requires a scorer with
+    ``tags`` (Figure 7 measurement).
     """
     qstate = scorer.prepare_queries(queries)
     trace_tags = getattr(scorer, "tags", None) if trace else None
     if trace and trace_tags is None:
         raise ValueError("trace=True needs a tagged scorer (GleanVec*)")
     top, ids, hops, tag_hist = _beam_qstate(qstate, scorer, graph, k, beam,
-                                            max_hops, trace_tags=trace_tags)
+                                            max_hops, expand=expand,
+                                            trace_tags=trace_tags)
     if trace:
         return top, ids, hops, tag_hist
     return top, ids

@@ -19,6 +19,18 @@ the scorer's reduced space at build time (``scorer.encode_centers``): the
 probe then consumes the scorer's ALREADY-PREPARED queries and touches d
 bytes per center instead of D -- the coarse step inherits the paper's D/d
 bandwidth cut and needs no full-D query anywhere in the search.
+
+The FINE step has two modes too. The default gathers the probed posting
+lists and scores them with ``scorer.score_ids`` -- per-row gathers that
+work for every scorer family. When the coarse quantizer is ALIGNED with a
+tag-sorted scorer's clustering (:func:`build_aligned`: the centers are the
+GleanVec model's landmarks, so posting list c == cluster c == a contiguous
+run of single-tag blocks), ``candidates`` instead dispatches to the
+scorer's gather-free ``scan_lists`` (``kernels/ivf_scan``): the probed
+clusters' slabs stream through the fused single-tag kernel with a running
+top-k in VMEM, no ``(m, nprobe*L)`` candidate-id or score matrix ever
+reaches HBM, and the posting lists themselves are never read (they are
+kept only so streaming ``insert_ids`` / ``remove_ids`` stay available).
 """
 from __future__ import annotations
 
@@ -37,6 +49,7 @@ from repro.index.protocol import (_offset_ids, register_index_pytree,
 from repro.index.topk import NEG_INF
 
 __all__ = ["IVFIndex", "IVFQueryState", "build", "build_sharded",
+           "build_aligned", "build_aligned_sharded",
            "with_reduced_centers", "with_list_slack", "insert_ids",
            "remove_ids", "coarse_scores", "search", "search_scorer"]
 
@@ -56,12 +69,16 @@ class IVFIndex:
     """Inverted-file index. ``center_scorer`` (optional) is a companion
     scorer over the C centers in the fine scorer's reduced representation;
     ``nprobe`` is static protocol-search configuration (override per call
-    via :func:`search_scorer` or ``dataclasses.replace``)."""
+    via :func:`search_scorer` or ``dataclasses.replace``). With
+    ``aligned_layout`` (set by :func:`build_aligned`) the coarse clusters
+    ARE the scorer's GleanVec clusters and ``candidates`` takes the
+    gather-free range-scan path for sorted scorers."""
 
     centers: jax.Array                    # (C, D) coarse centroids (unit)
     lists: jax.Array                      # (C, max_len) int32 ids, -1 pad
     center_scorer: Any = None             # reduced-space probe companion
     nprobe: int = 8
+    aligned_layout: bool = False          # clusters == sorted-layout tags
 
     @property
     def n_lists(self) -> int:
@@ -80,6 +97,9 @@ class IVFIndex:
                              q_coarse=q_coarse)
 
     def candidates(self, qstate: IVFQueryState, scorer, k: int):
+        if self.aligned_layout and \
+                getattr(scorer, "list_block_ranges", None) is not None:
+            return _probe_and_scan(qstate, scorer, self, k)
         return _probe_and_score(qstate, scorer, self, k)
 
     def search(self, queries: jax.Array, scorer, k: int):
@@ -106,7 +126,7 @@ class IVFIndex:
 
 register_index_pytree(IVFIndex,
                       data_fields=("centers", "lists", "center_scorer"),
-                      static_fields=("nprobe",))
+                      static_fields=("nprobe", "aligned_layout"))
 
 
 # ---------------------------------------------------------------------------
@@ -175,6 +195,48 @@ def build_sharded(key, x, n_lists: int, n_shards: int, n_iters: int = 20,
             for p in packed]
 
 
+def build_aligned(model, database, nprobe: int = 8) -> IVFIndex:
+    """IVF whose coarse quantizer IS the GleanVec model's clustering.
+
+    The centers are the model's k-means landmarks, so posting list ``c``
+    holds exactly the rows a tag-sorted scorer stores in cluster ``c``'s
+    contiguous single-tag blocks -- the precondition for the gather-free
+    range-scan fine step (``scorer.scan_lists``, dispatched automatically
+    by ``candidates``). The packed lists are kept ONLY for streaming
+    ``insert_ids`` / ``remove_ids`` and for non-sorted scorers; the fused
+    serving path never reads them."""
+    x_unit = spherical_kmeans.normalize_rows(
+        jnp.asarray(database, jnp.float32))
+    tags = np.asarray(spherical_kmeans.assign(x_unit, model.centers))
+    return IVFIndex(centers=jnp.asarray(model.centers, jnp.float32),
+                    lists=jnp.asarray(_pack_lists(tags, model.n_clusters)),
+                    nprobe=min(nprobe, model.n_clusters),
+                    aligned_layout=True)
+
+
+def build_aligned_sharded(model, database, n_shards: int,
+                          nprobe: int = 8):
+    """Per-shard :func:`build_aligned`: one shared coarse quantizer (the
+    model's landmarks), per-shard posting lists in LOCAL row ids, padded to
+    a common ``max_len`` so the tables stack under ``ShardedIndex``."""
+    X = jnp.asarray(database, jnp.float32)
+    n = X.shape[0]
+    if n % n_shards:
+        raise ValueError(f"n={n} not divisible by n_shards={n_shards}")
+    per = n // n_shards
+    x_unit = spherical_kmeans.normalize_rows(X)
+    tags = np.asarray(spherical_kmeans.assign(x_unit, model.centers))
+    packed = [_pack_lists(tags[s * per:(s + 1) * per], model.n_clusters)
+              for s in range(n_shards)]
+    max_len = max(p.shape[1] for p in packed)
+    packed = [np.pad(p, ((0, 0), (0, max_len - p.shape[1])),
+                     constant_values=-1) for p in packed]
+    return [IVFIndex(centers=jnp.asarray(model.centers, jnp.float32),
+                     lists=jnp.asarray(p),
+                     nprobe=min(nprobe, model.n_clusters),
+                     aligned_layout=True) for p in packed]
+
+
 def with_reduced_centers(index: IVFIndex, scorer, model=None) -> IVFIndex:
     """Project the coarse centers into ``scorer``'s reduced space: the
     probe will consume the scorer's prepared queries (R^d) instead of the
@@ -200,17 +262,35 @@ def with_list_slack(index: IVFIndex, extra: int) -> IVFIndex:
 def insert_ids(index: IVFIndex, vecs: jax.Array, ids) -> IVFIndex:
     """Append external ``ids`` (with full-D ``vecs``) to their nearest
     centers' posting lists, filling pre-allocated -1 slots (host-side;
-    shape-preserving). Raises when a list is out of slack."""
+    shape-preserving). Raises when a list is out of slack.
+
+    One argsort/bincount slot-assignment pass like ``_pack_lists`` -- no
+    per-insert ``np.nonzero`` scan over the slot table (that loop was
+    O(inserts * max_len) and dominated streaming cycles at wide slack)."""
     x_unit = spherical_kmeans.normalize_rows(jnp.asarray(vecs, jnp.float32))
     tags = np.asarray(spherical_kmeans.assign(x_unit, index.centers))
+    ids_np = np.asarray(ids)
     lists = np.asarray(index.lists).copy()
-    for t, i in zip(tags, np.asarray(ids)):
-        free = np.nonzero(lists[t] < 0)[0]
-        if free.size == 0:
-            raise ValueError(
-                f"posting list {int(t)} is full; pre-allocate slack with "
-                "with_list_slack before serving streams")
-        lists[t, free[0]] = int(i)
+    free = lists < 0                                    # (C, max_len)
+    need = np.bincount(tags, minlength=lists.shape[0])
+    short = np.nonzero(need > free.sum(axis=1))[0]
+    if short.size:
+        raise ValueError(
+            f"posting list {int(short[0])} is full; pre-allocate slack "
+            "with with_list_slack before serving streams")
+    # slot_of_rank[t, r] = column of list t's r-th free slot; each insert's
+    # within-list rank comes from the same argsort/cumsum bucketing as
+    # _pack_lists, so the fill order matches the sequential reference.
+    frank = np.cumsum(free, axis=1) - 1
+    slot_of_rank = np.zeros_like(lists)
+    rows_f, cols_f = np.nonzero(free)
+    slot_of_rank[rows_f, frank[rows_f, cols_f]] = cols_f
+    order = np.argsort(tags, kind="stable")
+    starts = np.zeros(lists.shape[0], np.int64)
+    starts[1:] = np.cumsum(need)[:-1]
+    rank = np.arange(tags.size) - starts[tags[order]]
+    lists[tags[order], slot_of_rank[tags[order], rank]] = \
+        ids_np[order].astype(lists.dtype)
     return replace(index, lists=jnp.asarray(lists))
 
 
@@ -234,6 +314,18 @@ def coarse_scores(index: IVFIndex, qstate: IVFQueryState) -> jax.Array:
     if index.center_scorer is None:
         return qstate.q_coarse @ index.centers.T
     return index.center_scorer.score_block(qstate.qstate, 0, index.n_lists)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _probe_and_scan(qstate: IVFQueryState, scorer, index: IVFIndex,
+                    k: int):
+    """Aligned fine step: probe ``nprobe`` clusters, stream their sorted
+    slabs through the scorer's gather-free ``scan_lists``. ``index.lists``
+    is never read (XLA drops the unused leaf), so the posting-list HBM
+    footprint vanishes from the compiled sorted serving path."""
+    coarse = coarse_scores(index, qstate)                   # (m, C)
+    _, probe = jax.lax.top_k(coarse, index.nprobe)          # (m, nprobe)
+    return scorer.scan_lists(qstate.qstate, probe, k)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

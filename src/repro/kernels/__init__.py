@@ -18,6 +18,8 @@ from repro.kernels.gleanvec_sq import (gleanvec_sq, gleanvec_sq_ref,
                                        gleanvec_sq_topk,
                                        gleanvec_sq_topk_ref)
 from repro.kernels.ip_topk import ip_topk, ip_topk_ref
+from repro.kernels.ivf_scan import (fine_step_bytes, ivf_scan_scores_ref,
+                                    ivf_scan_topk, ivf_scan_topk_ref)
 from repro.kernels.kmeans_assign import kmeans_assign, kmeans_assign_ref
 from repro.kernels.sq_dot import sq_dot, sq_dot_ref
 
@@ -27,6 +29,8 @@ __all__ = [
     "gleanvec_sq", "gleanvec_sq_ref", "gleanvec_sq_sorted_ref",
     "gleanvec_sq_topk", "gleanvec_sq_topk_ref",
     "ip_topk", "ip_topk_ref",
+    "ivf_scan_topk", "ivf_scan_topk_ref", "ivf_scan_scores_ref",
+    "fine_step_bytes",
     "kmeans_assign", "kmeans_assign_ref",
     "sq_dot", "sq_dot_ref",
     "scorer_scores", "scorer_topk",

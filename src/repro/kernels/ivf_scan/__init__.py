@@ -1,0 +1,5 @@
+from repro.kernels.ivf_scan.ops import (fine_step_bytes, ivf_scan_scores_ref,
+                                        ivf_scan_topk, ivf_scan_topk_ref)
+
+__all__ = ["ivf_scan_topk", "ivf_scan_topk_ref", "ivf_scan_scores_ref",
+           "fine_step_bytes"]

@@ -1,0 +1,157 @@
+"""Pallas TPU kernel: gather-free sorted-IVF range scan (fused fine step).
+
+The sorted scorers (core/scorer.SortedGleanVec*Scorer) store every cluster
+as a contiguous run of single-tag ``layout_block`` slabs. For an IVF whose
+coarse quantizer IS that clustering, the fine step therefore never needs a
+posting-list gather: probing cluster ``c`` means streaming ``c``'s slabs
+through the single-tag scoring path (one (1, d) x (d, TN) contraction plus
+a broadcast affine per tile) while a running (1, k) top-k lives in the
+revisited output block. The winning ORIGINAL ids come straight from the
+sort permutation (``row_ids``), exactly like ``gleanvec_sq_topk``.
+
+The per-query probe schedule rides in as a SCALAR-PREFETCH operand
+(``pltpu.PrefetchScalarGridSpec``): ``sched (M, S)`` holds the layout-block
+indices each query must visit (-1 = padding). The BlockSpec index maps read
+``sched`` to pick which codes/ids/tag slab the next grid step DMAs, so the
+kernel never touches an unprobed block and nothing shaped
+``(M, nprobe * L)`` -- neither a candidate-id matrix nor a dense score
+matrix -- ever exists in HBM. The grid is ``(M, S * tiles_per_block)``;
+queries are processed one per grid row because each query owns a private
+schedule (the per-query views (1, C, d) stay resident across the whole
+inner dimension -- their block index does not change with ``j``).
+
+HBM traffic per grid step: TN * d bytes of codes (u8, or f32 for the
+unquantized sorted scorer) + TN * 4 bytes of ids + 4 bytes of tag; per
+query: C * d * 4 + C * 4 bytes of prepared views. Nothing else.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -3.4e38  # python scalar: safe to close over inside the kernel
+
+
+def _range_scan_kernel(sched_ref, fill_ref, qs_ref, qlo_ref, tag_ref,
+                       rid_ref, x_ref, vals_ref, ids_ref, *, k: int):
+    """One (1, TN) tile of one query's schedule, folded into its running
+    (1, k) top-k. ``sched_ref`` is the scalar-prefetched tile schedule (a
+    negative entry marks a padding slot that must not score); ``fill_ref``
+    is its forward-filled twin the BlockSpec index maps read, so a padding
+    slot revisits the PREVIOUS slab (no fresh DMA) instead of fetching
+    slab 0."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, NEG_INF)
+        ids_ref[...] = jnp.full_like(ids_ref, -1)
+
+    tag = tag_ref[0]
+    q = jax.lax.dynamic_index_in_dim(qs_ref[...], tag, axis=1,
+                                     keepdims=False)       # (1, d)
+    lo = jax.lax.dynamic_index_in_dim(qlo_ref[...], tag, axis=1,
+                                      keepdims=False)      # (1,)
+    x = x_ref[...].astype(jnp.float32)                     # (TN, d)
+    scores = jax.lax.dot_general(q, x, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) \
+        + lo[:, None]                                      # (1, TN)
+    col_ids = jnp.broadcast_to(rid_ref[...][None, :], scores.shape)
+    ok = (col_ids >= 0) & (sched_ref[i, j] >= 0)
+    scores = jnp.where(ok, scores, NEG_INF)
+
+    # fold the tile into the running top-k: k rounds of max/mask over the
+    # concatenated (1, TN + k) candidates (same scheme as gleanvec_sq_topk).
+    cat_v = jnp.concatenate([vals_ref[...], scores], axis=1)
+    cat_i = jnp.concatenate([ids_ref[...], col_ids], axis=1)
+
+    def fold(r, carry):
+        cat_v, cat_i, out_v, out_i = carry
+        best = jnp.max(cat_v, axis=1)                      # (1,)
+        arg = jnp.argmax(cat_v, axis=1)                    # (1,)
+        bid = jnp.take_along_axis(cat_i, arg[:, None], axis=1)[:, 0]
+        out_v = jax.lax.dynamic_update_index_in_dim(out_v, best, r, 1)
+        out_i = jax.lax.dynamic_update_index_in_dim(out_i, bid, r, 1)
+        hit = (jax.lax.broadcasted_iota(jnp.int32, cat_v.shape, 1)
+               == arg[:, None])
+        cat_v = jnp.where(hit, NEG_INF, cat_v)
+        return cat_v, cat_i, out_v, out_i
+
+    out_v = jnp.zeros_like(vals_ref)
+    out_i = jnp.zeros_like(ids_ref)
+    _, _, out_v, out_i = jax.lax.fori_loop(
+        0, k, fold, (cat_v, cat_i, out_v, out_i))
+    vals_ref[...] = out_v
+    ids_ref[...] = out_i
+
+
+@functools.partial(jax.jit, static_argnames=("k", "layout_block", "tn",
+                                             "interpret"))
+def ivf_scan_topk(q_scaled: jax.Array, q_lo: jax.Array, block_tags: jax.Array,
+                  row_ids: jax.Array, codes: jax.Array, sched: jax.Array,
+                  k: int, layout_block: int, tn: int = 512,
+                  interpret: bool = False):
+    """Fused sorted-IVF range scan + blocked top-k.
+
+    ``q_scaled (M, C, d)`` / ``q_lo (M, C)``: prepared per-cluster query
+    views (``q_lo`` zeros for the unquantized sorted scorer);
+    ``block_tags (N // layout_block,)``: one tag per layout block;
+    ``row_ids (N,)``: external id per sorted row (-1 = padding, never wins);
+    ``codes (N, d)``: u8 codes or f32 rows of the tag-sorted layout;
+    ``sched (M, S)``: per-query layout-block indices to visit (-1 = pad).
+
+    Returns (vals (M, k) f32, ids (M, k) i32) with -inf winners' ids
+    stripped to -1. ``tn`` must divide ``layout_block`` (the dispatcher in
+    ops.py guarantees it).
+    """
+    m, c, d = q_scaled.shape
+    n = codes.shape[0]
+    assert n % layout_block == 0 and layout_block % tn == 0, \
+        (n, layout_block, tn)
+    s = sched.shape[1]
+    bpt = layout_block // tn                  # tiles per layout block
+    # expand the block schedule to tile indices (still -1-padded)
+    sched_t = jnp.where(
+        sched[:, :, None] >= 0,
+        sched[:, :, None] * bpt + jnp.arange(bpt, dtype=sched.dtype),
+        -1).reshape(m, s * bpt).astype(jnp.int32)
+    # forward-filled twin for the index maps: a padding slot keeps the
+    # last valid tile index, so its grid step revisits the already-resident
+    # slab (the pipeline skips the DMA) instead of re-fetching tile 0 --
+    # padding costs ~zero HBM traffic, matching ops.fine_step_bytes.
+    sched_f = jnp.maximum(jax.lax.associative_scan(
+        lambda a, b: jnp.where(b >= 0, b, a), sched_t, axis=1), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(m, s * bpt),
+        in_specs=[
+            pl.BlockSpec((1, c, d), lambda i, j, sr, fr: (i, 0, 0)),
+            pl.BlockSpec((1, c), lambda i, j, sr, fr: (i, 0)),
+            pl.BlockSpec((1,), lambda i, j, sr, fr: (fr[i, j] // bpt,)),
+            pl.BlockSpec((tn,), lambda i, j, sr, fr: (fr[i, j],)),
+            pl.BlockSpec((tn, d), lambda i, j, sr, fr: (fr[i, j], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, j, sr, fr: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, j, sr, fr: (i, 0)),
+        ],
+    )
+    vals, ids = pl.pallas_call(
+        functools.partial(_range_scan_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((m, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(sched_t, sched_f, q_scaled, q_lo, block_tags,
+      row_ids.astype(jnp.int32), codes)
+    # the top-k fold can recycle an already-taken slot's id once everything
+    # left is -inf; strip those ids like the gathered IVF path does.
+    return vals, jnp.where(vals > NEG_INF, ids, -1)

@@ -1,0 +1,60 @@
+"""Public ops: gather-free sorted-IVF range scan with Pallas kernel +
+jnp fallback, plus the kernel's HBM-traffic model.
+
+``ivf_scan_topk`` takes a per-query probe schedule of layout-block indices
+(-1-padded) and streams exactly those single-tag slabs -- Pallas with the
+schedule as a scalar-prefetch operand on TPU (and in interpret mode), the
+gathering jnp oracle elsewhere. When the requested tile does not divide
+the layout block, the dispatcher shrinks the tile to the layout block
+(every slab is then one grid step) -- never wrong, only coarser.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ivf_scan.ivf_scan import (ivf_scan_topk
+                                             as _pallas_ivf_scan_topk)
+from repro.kernels.ivf_scan.ref import (ivf_scan_scores_ref,
+                                        ivf_scan_topk_ref)
+
+__all__ = ["ivf_scan_topk", "ivf_scan_topk_ref", "ivf_scan_scores_ref",
+           "fine_step_bytes"]
+
+
+def ivf_scan_topk(q_scaled: jax.Array, q_lo: jax.Array,
+                  block_tags: jax.Array, row_ids: jax.Array,
+                  codes: jax.Array, sched: jax.Array, k: int,
+                  layout_block: int, tn: int = 512,
+                  use_pallas: bool | None = None, interpret: bool = False):
+    """``q_scaled (M, C, d)``, ``q_lo (M, C)``, ``block_tags (NB,)``,
+    ``row_ids (N,)``, ``codes (N, d)`` u8/f32, ``sched (M, S)`` layout-block
+    indices (-1 = pad) -> (vals (M, k), ids (M, k)), ids ORIGINAL (-1 for
+    -inf winners)."""
+    if use_pallas is None:
+        use_pallas = interpret or jax.default_backend() == "tpu"
+    if not use_pallas:
+        return ivf_scan_topk_ref(q_scaled, q_lo, block_tags, row_ids, codes,
+                                 sched, k, layout_block)
+    if layout_block % tn:
+        tn = layout_block                  # shrink: one grid step per slab
+    return _pallas_ivf_scan_topk(q_scaled, q_lo, block_tags, row_ids, codes,
+                                 sched, k, layout_block=layout_block, tn=tn,
+                                 interpret=interpret)
+
+
+def fine_step_bytes(m: int, blocks_visited: int, layout_block: int, d: int,
+                    c: int, code_bytes: int = 1, k: int = 10) -> float:
+    """HBM bytes the fused range-scan kernel moves for one query batch.
+
+    Determined by the kernel's BlockSpecs (see ivf_scan.py): per visited
+    slab TN*d bytes of codes + TN*4 of ids + 4 of tag; per query C*d*4 + C*4
+    of prepared views and 8k of running top-k. ``blocks_visited`` counts the
+    VALID schedule entries across the batch (padding slots DMA nothing new:
+    their index maps clamp to the previous slab). This is the fused side of
+    the >= 4x fine-step assertion; the gathered side comes from the
+    compiled ``_probe_and_score``'s ``cost_analysis`` via ``normalize_cost``.
+    """
+    per_block = layout_block * (d * code_bytes + 4) + 4
+    per_query = c * d * 4 + c * 4 + 2 * k * 4
+    return float(m * per_query + blocks_visited * per_block)

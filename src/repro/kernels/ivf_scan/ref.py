@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the fused sorted-IVF range scan.
+
+The oracle gathers the scheduled blocks' rows explicitly (it is allowed to
+-- it is the reference, not the fast path), scores them through the same
+per-cluster affine math as ``gleanvec_sq_ref``, masks padding rows /
+padding schedule slots to -inf, and reduces with ``top_k``. Because the
+gathers reproduce exactly what ``scorer.score_ids`` computes over a
+posting list holding the same rows, this oracle is ALSO the bridge the
+parity tests use between the fused path and the gathered IVF path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -3.4e38
+
+
+def ivf_scan_scores_ref(q_scaled: jax.Array, q_lo: jax.Array,
+                        block_tags: jax.Array, row_ids: jax.Array,
+                        codes: jax.Array, sched: jax.Array,
+                        layout_block: int):
+    """Dense per-schedule scores: returns ``(scores, ids)`` both
+    ``(M, S * layout_block)`` -- column order follows the schedule, invalid
+    slots score -inf with id -1."""
+    m, s = sched.shape
+    safe = jnp.where(sched >= 0, sched, 0)                     # (M, S)
+    rows = (safe[:, :, None] * layout_block
+            + jnp.arange(layout_block)[None, None, :]).reshape(m, -1)
+    x = codes[rows].astype(jnp.float32)                        # (M, P, d)
+    tag = jnp.broadcast_to(block_tags[safe][:, :, None],
+                           (m, s, layout_block)).reshape(m, -1)
+    q_sel = q_scaled[jnp.arange(m)[:, None], tag]              # (M, P, d)
+    lo_sel = jnp.take_along_axis(q_lo, tag, axis=1)            # (M, P)
+    scores = jnp.sum(q_sel * x, axis=-1) + lo_sel
+    ids = row_ids[rows].astype(jnp.int32)
+    ok = jnp.broadcast_to(sched[:, :, None] >= 0,
+                          (m, s, layout_block)).reshape(m, -1) & (ids >= 0)
+    return jnp.where(ok, scores, NEG_INF), jnp.where(ok, ids, -1)
+
+
+def ivf_scan_topk_ref(q_scaled: jax.Array, q_lo: jax.Array,
+                      block_tags: jax.Array, row_ids: jax.Array,
+                      codes: jax.Array, sched: jax.Array, k: int,
+                      layout_block: int):
+    """Gather + dense score + ``top_k`` oracle of :func:`ivf_scan_topk`;
+    -inf winners' ids are stripped to -1 exactly like the kernel."""
+    scores, ids = ivf_scan_scores_ref(q_scaled, q_lo, block_tags, row_ids,
+                                      codes, sched, layout_block)
+    vals, sel = jax.lax.top_k(scores, k)
+    out = jnp.take_along_axis(ids, sel, axis=1)
+    return vals, jnp.where(vals > NEG_INF, out, -1)

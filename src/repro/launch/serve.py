@@ -48,15 +48,22 @@ def build_index(args, X, scorer, model):
     if args.index == "flat":
         return None
     if args.index == "ivf":
-        idx = ivf.build(jax.random.PRNGKey(1), X, n_lists=args.lists,
-                        nprobe=args.nprobe)
+        if args.aligned:
+            if not args.mode.endswith("-sorted"):
+                raise SystemExit("--aligned needs a sorted scorer mode "
+                                 "(gleanvec-sorted / gleanvec-int8-sorted)")
+            idx = ivf.build_aligned(model, X, nprobe=args.nprobe)
+        else:
+            idx = ivf.build(jax.random.PRNGKey(1), X, n_lists=args.lists,
+                            nprobe=args.nprobe)
         if args.reduced_probe:
             idx = ivf.with_reduced_centers(idx, scorer, model)
         return idx
     if args.index == "graph":
         return replace(graph.build(np.asarray(X), r=args.graph_degree,
                                    n_iters=4, seed=0),
-                       beam=args.beam, max_hops=args.max_hops)
+                       beam=args.beam, max_hops=args.max_hops,
+                       expand=args.expand)
     raise ValueError(f"unknown index {args.index!r}")
 
 
@@ -86,11 +93,18 @@ def run_stream(args):
         slack_blocks=2)
     index = None
     if args.index == "ivf":
-        index = ivf.build(jax.random.PRNGKey(1), X[:n0], n_lists=args.lists,
-                          nprobe=args.nprobe)
+        if args.aligned:
+            if not args.mode.endswith("-sorted"):
+                raise SystemExit("--aligned needs a sorted scorer mode")
+            index = ivf.build_aligned(model, X[:n0], nprobe=args.nprobe)
+        else:
+            index = ivf.build(jax.random.PRNGKey(1), X[:n0],
+                              n_lists=args.lists, nprobe=args.nprobe)
         # slack is per list: expected fill + 4x skew headroom, NOT the
-        # total insert count (that would inflate every probe's gather)
-        slack = 4 * max(1, (args.n - n0) // args.lists)
+        # total insert count (that would inflate every probe's gather);
+        # sized from the BUILT index's list count (--aligned has
+        # model.n_clusters lists, not --lists)
+        slack = 4 * max(1, (args.n - n0) // index.n_lists)
         index = ivf.with_list_slack(index, slack)
         if args.reduced_probe:
             index = ivf.with_reduced_centers(index, artifacts.scorer, model)
@@ -150,8 +164,14 @@ def main():
     ap.add_argument("--nprobe", type=int, default=12)
     ap.add_argument("--reduced-probe", action="store_true",
                     help="IVF coarse probe in the scorer's reduced space")
+    ap.add_argument("--aligned", action="store_true",
+                    help="IVF coarse quantizer = the GleanVec clustering "
+                         "(sorted modes: gather-free range-scan fine step)")
     ap.add_argument("--beam", type=int, default=96)
     ap.add_argument("--max-hops", type=int, default=200)
+    ap.add_argument("--expand", type=int, default=1,
+                    help="graph frontier vertices expanded per hop "
+                         "(multi-expansion beam search; 1 = classic)")
     ap.add_argument("--graph-degree", type=int, default=24)
     ap.add_argument("--shards", type=int, default=0,
                     help="N per-shard sub-indexes merged via ShardedIndex "
@@ -193,7 +213,8 @@ def main():
             args.index, args.mode, X, model, n_shards=args.shards,
             key=jax.random.PRNGKey(1), n_lists=args.lists,
             nprobe=args.nprobe, reduced_probe=args.reduced_probe,
-            beam=args.beam, max_hops=args.max_hops,
+            aligned=args.aligned, beam=args.beam, max_hops=args.max_hops,
+            expand=args.expand,
             graph_kwargs={"r": args.graph_degree, "n_iters": 4, "seed": 0})
         artifacts = msearch.SearchArtifacts(scorer=stacked, x_full=X,
                                             model=model)

@@ -55,6 +55,28 @@ def test_table1_and_kernels():
     assert any(r.startswith("kernel/") for r in ROWS)
 
 
+def test_declared_rows_must_reach_json(tmp_path):
+    """A ``declare``-d row that never emits fails ``write_json_results``
+    (a silently-skipped bench row can no longer pass smoke)."""
+    import benchmarks.common as common
+    saved_rows = list(common.RESULTS)
+    saved_csv = list(common.ROWS)
+    saved_decl = list(common.DECLARED)
+    try:
+        common.RESULTS.clear()
+        common.DECLARED.clear()
+        common.emit("probe/exists", 1.0, "ok=1")
+        common.declare("probe/exists", "probe/never-emitted")
+        with pytest.raises(RuntimeError, match="probe/never-emitted"):
+            common.write_json_results(str(tmp_path))
+        common.DECLARED.remove("probe/never-emitted")
+        assert common.write_json_results(str(tmp_path))   # now it passes
+    finally:
+        common.RESULTS[:] = saved_rows
+        common.ROWS[:] = saved_csv
+        common.DECLARED[:] = saved_decl
+
+
 def test_run_smoke_path(tmp_path):
     """The CLI harness --smoke path runs end-to-end, writes the CSV and the
     machine-readable BENCH_<name>.json files, and covers the sorted,
@@ -74,7 +96,10 @@ def test_run_smoke_path(tmp_path):
                and "-int8-sorted" in r for r in rows)
     assert any(r.startswith("table1_search/ivf/") for r in rows)
     assert any(r.startswith("table1_search/ivf-rprobe/") for r in rows)
+    assert any(r.startswith("table1_search/ivf-sorted-fused/") for r in rows)
     assert any(r.startswith("table1_search/ivf-sharded/") for r in rows)
+    assert any(r.startswith("table1_search/graph-expand1/") for r in rows)
+    assert any(r.startswith("table1_search/graph-expand4/") for r in rows)
     assert any(r.startswith("table1_search/graph-sharded/") for r in rows)
     assert any(r.startswith("kernel/gleanvec_sq/fused-int8") for r in rows)
 
@@ -89,6 +114,19 @@ def test_run_smoke_path(tmp_path):
     flops = {e["name"].split("/")[1]: e["probe_flops"]
              for e in table1["results"] if "probe_flops" in e}
     assert flops["ivf-rprobe"] * 2 <= flops["ivf"], flops
+    # fused sorted-IVF fine step: the range-scan kernel's HBM traffic sits
+    # below the compiled gathered fine step's even at smoke shapes (the
+    # paper-proportioned >= 4x floor is asserted in tests/test_ivf_scan.py)
+    fused_row = next(e for e in table1["results"]
+                     if e["name"].startswith("table1_search/ivf-sorted-"))
+    assert fused_row["fine_bytes"] > 0
+    assert fused_row["fine_bytes"] < fused_row["fine_bytes_gathered"]
+    # multi-expansion beam search: expand=4 reaches matched recall in
+    # fewer sequential hops
+    by_prefix = {e["name"].split("/")[1]: e for e in table1["results"]}
+    e1, e4 = by_prefix["graph-expand1"], by_prefix["graph-expand4"]
+    assert e4["hops"] < e1["hops"], (e1["hops"], e4["hops"])
+    assert e4["recall10"] >= e1["recall10"] - 0.05
     kern = json.loads((tmp_path / "BENCH_kernel.json").read_text())
     fused = next(e for e in kern["results"]
                  if e["name"] == "kernel/gleanvec_sq/fused-int8")

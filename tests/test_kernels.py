@@ -9,8 +9,8 @@ from repro.kernels import (flash_attention, flash_attention_ref, gleanvec_ip,
                            gleanvec_ip_ref, gleanvec_sq, gleanvec_sq_ref,
                            gleanvec_sq_sorted_ref, gleanvec_sq_topk,
                            gleanvec_sq_topk_ref, ip_topk, ip_topk_ref,
-                           kmeans_assign, kmeans_assign_ref, sq_dot,
-                           sq_dot_ref)
+                           ivf_scan_topk, ivf_scan_topk_ref, kmeans_assign,
+                           kmeans_assign_ref, sq_dot, sq_dot_ref)
 
 RNG = np.random.default_rng(0)
 
@@ -141,6 +141,61 @@ def test_gleanvec_sq_topk_sorted_emits_external_ids():
                                atol=1e-3)
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
     assert (np.asarray(i1) >= 0).all()              # padding never wins
+
+
+def _scan_inputs(m, nb, c, d, lb, s, n_pad=0, f32=False, seed=1):
+    """Random sorted-layout inputs + a -1-padded per-query block schedule
+    (possibly with unscheduled blocks -- the kernel must never read them)."""
+    rng = np.random.default_rng(seed)
+    n = nb * lb
+    q_scaled, q_lo, _, codes = _sq_inputs(m, n, c, d)
+    if f32:
+        codes = _randn(n, d)
+    block_tags = jnp.asarray(rng.integers(0, c, nb).astype(np.int32))
+    perm = np.arange(n, dtype=np.int32)
+    if n_pad:
+        perm[rng.permutation(n)[:n_pad]] = -1        # dead/padding rows
+    sched = rng.integers(-1, nb, (m, s)).astype(np.int32)
+    return (q_scaled, q_lo, block_tags, jnp.asarray(perm), codes,
+            jnp.asarray(sched))
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("m,nb,c,d,lb,s,tn", [
+    (4, 8, 6, 32, 128, 3, 64),      # layout_block % tn == 0
+    (3, 5, 8, 48, 64, 5, 256),      # tn > layout_block -> tile shrink
+    (1, 6, 4, 16, 96, 2, 64),       # tn does not divide -> tile shrink
+])
+def test_ivf_scan_topk_matches_ref(m, nb, c, d, lb, s, tn):
+    """Scalar-prefetch range-scan kernel == gather oracle: schedule-driven
+    slab streaming, -1 schedule pads and -1 row_ids never win."""
+    qs, ql, bt, rid, codes, sched = _scan_inputs(m, nb, c, d, lb, s,
+                                                 n_pad=40)
+    v1, i1 = ivf_scan_topk(qs, ql, bt, rid, codes, sched, 7,
+                           layout_block=lb, tn=tn, interpret=True)
+    v2, i2 = ivf_scan_topk_ref(qs, ql, bt, rid, codes, sched, 7,
+                               layout_block=lb)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4,
+                               atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+@pytest.mark.tier1
+def test_ivf_scan_topk_f32_rows_and_empty_schedule():
+    """The unquantized sorted scorer's f32 rows ride the same kernel, and
+    an all-padding schedule row returns (-inf, -1) everywhere."""
+    qs, ql, bt, rid, codes, sched = _scan_inputs(2, 6, 4, 24, 64, 4,
+                                                 f32=True)
+    sched = sched.at[1].set(-1)                      # query 1: no blocks
+    v1, i1 = ivf_scan_topk(qs, ql, bt, rid, codes, sched, 5,
+                           layout_block=64, tn=64, interpret=True)
+    v2, i2 = ivf_scan_topk_ref(qs, ql, bt, rid, codes, sched, 5,
+                               layout_block=64)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    assert (np.asarray(i1)[1] == -1).all()
+    assert (np.asarray(v1)[1] < -1e37).all()
 
 
 @pytest.mark.parametrize("n,c,d,tn", [
