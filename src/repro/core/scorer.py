@@ -756,6 +756,21 @@ class SortedGleanVecScorer(NamedTuple):
                              self.x_low, sched, k,
                              layout_block=self.layout_block)
 
+    def scan_neighbors(self, qstate: jax.Array, nbr_rows: jax.Array,
+                       beam_vals: jax.Array, beam_ids: jax.Array,
+                       tn: int = 8):
+        """Gather-free graph hop (``kernels/graph_scan``): fold one
+        neighbor expansion -- given as SORTED-ROW indices ``nbr_rows
+        (m, S)``, -1 padded -- into the beam, streaming the rows' ``tn``-
+        slabs of this layout instead of gathering them. Returns the merged
+        ``(vals, ids) (m, beam)`` with ORIGINAL ids (slot order)."""
+        from repro.kernels.graph_scan import graph_scan_beam_step
+        q_lo = jnp.zeros(qstate.shape[:2], jnp.float32)   # no affine term
+        return graph_scan_beam_step(qstate, q_lo, self.block_tags,
+                                    self.perm, self.x_low, nbr_rows,
+                                    beam_vals, beam_ids,
+                                    layout_block=self.layout_block, tn=tn)
+
     def shard_specs(self, axes) -> "SortedGleanVecScorer":
         # Row-shard the sorted layout: the shard count must divide the
         # BLOCK count so no single-tag block straddles shards, and ``perm``
@@ -916,6 +931,18 @@ class SortedGleanVecQuantizedScorer(NamedTuple):
         return ivf_scan_topk(qstate.q_scaled, qstate.q_lo, self.block_tags,
                              self.perm, self.codes, sched, k,
                              layout_block=self.layout_block)
+
+    def scan_neighbors(self, qstate: QuantQueryState, nbr_rows: jax.Array,
+                       beam_vals: jax.Array, beam_ids: jax.Array,
+                       tn: int = 8):
+        """Gather-free graph hop over the sorted int8 codes: same contract
+        as :meth:`SortedGleanVecScorer.scan_neighbors`, with the
+        per-cluster affine terms riding the folded qstate."""
+        from repro.kernels.graph_scan import graph_scan_beam_step
+        return graph_scan_beam_step(qstate.q_scaled, qstate.q_lo,
+                                    self.block_tags, self.perm, self.codes,
+                                    nbr_rows, beam_vals, beam_ids,
+                                    layout_block=self.layout_block, tn=tn)
 
     def shard_specs(self, axes) -> "SortedGleanVecQuantizedScorer":
         # Same sharding contract as SortedGleanVecScorer: shard count must

@@ -260,12 +260,22 @@ class ShardedIndex:
         return ids          # candidates are already global original ids
 
     def refreshed(self, scorer, model) -> "ShardedIndex":
-        """Streaming-refresh hook: delegate to one representative sub-index
-        (they share their class) over the STACKED scorer only when the
-        sub-index kind derives nothing from the representation; per-shard
-        derived state (stacked IVF reduced centers) is a ROADMAP follow-up
-        and passes through unchanged."""
-        return self
+        """Streaming-refresh hook: slice each shard's (sub-index,
+        sub-scorer) pair out of the stacks, run the sub-index's own
+        ``refreshed`` hook against ITS scorer shard, and restack. Every
+        hook is shape-preserving (IVF re-encodes its reduced probe
+        centers, a fused graph re-derives its sorted-row edge lists), and
+        the shards were already padded to equal shapes at build time, so
+        the restacked pytree keeps the original treedef + leaf avals --
+        the zero-recompile ``ServingEngine.swap`` contract."""
+        subs = []
+        for s in range(self.n_shards):
+            s_index = _take_shard(self.sub_index, s)
+            s_scorer = _take_shard(scorer, s)
+            if hasattr(s_index, "refreshed"):
+                s_index = s_index.refreshed(s_scorer, model)
+            subs.append(s_index)
+        return replace(self, sub_index=stack_shards(subs))
 
 
 register_index_pytree(ShardedIndex,
@@ -281,7 +291,8 @@ def build_sharded_index(kind: str, mode: str, database, model=None, *,
                         n_lists: int = 32, nprobe: int = 8,
                         reduced_probe: bool = False, aligned: bool = False,
                         beam: int = 64, max_hops: int = 256,
-                        expand: int = 1, graph_kwargs=None):
+                        expand: int = 1, fused_graph: bool = False,
+                        graph_kwargs=None):
     """Build a :class:`ShardedIndex` + matching stacked scorer.
 
     ``kind`` in {"flat", "ivf", "graph"} x ``mode`` in ``scorer.MODES`` x
@@ -294,7 +305,10 @@ def build_sharded_index(kind: str, mode: str, database, model=None, *,
     ``aligned`` (sorted modes only) the per-shard coarse quantizer is the
     GleanVec model's clustering (``ivf.build_aligned_sharded``), so each
     shard's fine step runs the gather-free range scan. ``expand`` is the
-    graph traversal's multi-expansion width. Returns
+    graph traversal's multi-expansion width; ``fused_graph`` (sorted
+    scorer modes only) binds each shard's subgraph to its scorer's sorted
+    layout (``graph.with_fused_scan``) so every shard's hops run the
+    gather-free fused beam step. Returns
     ``(sharded_index, stacked_scorer)``.
     """
     X = jnp.asarray(database, jnp.float32)
@@ -333,6 +347,12 @@ def build_sharded_index(kind: str, mode: str, database, model=None, *,
         gkw = dict(graph_kwargs or {})
         subs = [replace(graph_mod.build(np.asarray(r), **gkw), beam=beam,
                         max_hops=max_hops, expand=expand) for r in rows]
+        if fused_graph:
+            if not mode.endswith("-sorted"):
+                raise ValueError("fused_graph needs a sorted scorer mode, "
+                                 f"got {mode!r}")
+            subs = [graph_mod.with_fused_scan(ix, s)
+                    for ix, s in zip(subs, scorers)]
     else:
         raise ValueError(f"unknown index kind {kind!r}; "
                          "one of ('flat', 'ivf', 'graph')")

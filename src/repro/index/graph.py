@@ -23,11 +23,28 @@ points are thin wrappers over it.
 The traversal also (optionally) records the cluster tag of every expanded
 vertex -- the data behind the paper's Figure 7 (tag access pattern favoring
 eager execution).
+
+Gather-free hops (``kernels/graph_scan``): a :class:`GraphIndex` carrying
+``nbr_rows`` -- its edge lists pre-translated into a tag-sorted scorer's
+SORTED-ROW space (``with_fused_scan``) -- replaces the per-hop gather +
+``score_ids`` + ``top_k`` merge with one fused Pallas beam step
+(``scorer.scan_neighbors``): the hop's neighbor rows become a slab
+schedule, and gather + dot + affine + beam dedupe + top-k update fuse in
+VMEM with no ``(batch, expand*R)`` score matrix in HBM. Exact (value, id)
+parity with the gathered path; the stored ``nbr_rows`` must be re-derived
+(``with_fused_scan`` / ``refreshed``) if the layout's slot assignment
+changes (insert after remove can REUSE a freed slot).
+
+Builds: :func:`build` (numpy NN-descent + RobustPrune, the paper's offline
+path) and :func:`build_device` (CAGRA-style: exact k-NN self-join through
+the fused ``scorer_topk`` kernels + rank-based detour pruning in
+vectorized JAX) -- ``build(method="auto")`` switches to the device build at
+``_DEVICE_BUILD_MIN_N`` rows.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as _dc_replace
 from typing import Optional
 
 import jax
@@ -39,8 +56,14 @@ from repro.index.protocol import (_offset_ids, register_index_pytree,
                                   stacked_specs)
 from repro.index.topk import NEG_INF
 
-__all__ = ["GraphIndex", "build", "beam_search_scorer", "beam_search",
-           "beam_search_gleanvec", "beam_search_traced"]
+__all__ = ["GraphIndex", "build", "build_device", "with_fused_scan",
+           "beam_search_scorer", "beam_search", "beam_search_gleanvec",
+           "beam_search_traced", "gathered_beam_step"]
+
+# build(method="auto") switches from numpy NN-descent to the on-device
+# CAGRA-style self-join at this many rows (where the O(n * iters) numpy
+# path stops being interactive).
+_DEVICE_BUILD_MIN_N = 8192
 
 
 @dataclass(frozen=True, eq=False)
@@ -54,13 +77,26 @@ class GraphIndex:
     ~expand-fold fewer ``while_loop`` iterations and expand-fold wider MXU
     work per hop; ``expand=1`` reproduces the classic best-first traversal
     exactly. Entries may be -1-padded (stacked per-shard graphs): padded
-    slots are masked out of the initial beam."""
+    slots are masked out of the initial beam.
+
+    ``nbr_rows`` + ``fused`` enable the gather-free hop: ``nbr_rows`` is
+    ``neighbors`` translated into a tag-sorted scorer's sorted-row space
+    (``with_fused_scan``; removed ids -> -1), and ``candidates`` then
+    routes hops through ``scorer.scan_neighbors`` (the fused Pallas beam
+    step) whenever the scorer has one. ``scan_tn`` is the kernel's slab
+    tile. The translation is layout-bound: re-derive after any slot churn
+    (see ``refreshed``)."""
 
     neighbors: jax.Array  # (n, R) int32, -1 padded
     entries: jax.Array    # (E,) int32 entry points (medoid + per-cluster)
+    # (n, R) int32 sorted-row translation of ``neighbors`` (-1 = pad or
+    # removed), present only on layout-aware (fused) variants
+    nbr_rows: Optional[jax.Array] = None
     beam: int = 64
     max_hops: int = 256
     expand: int = 1       # frontier vertices expanded per hop
+    fused: bool = False   # route hops through scorer.scan_neighbors
+    scan_tn: int = 8      # graph_scan slab tile (rows per DMA)
 
     # ---- Index protocol ----------------------------------------------------
 
@@ -86,15 +122,41 @@ class GraphIndex:
 
     def refreshed(self, scorer, model) -> "GraphIndex":
         """Streaming-refresh hook: the edge set was built from FULL-D
-        geometry, which a projection refresh does not change -- the graph
-        passes through unchanged. (Incremental edge insertion for grown
-        databases is a ROADMAP follow-up; until then serve streams via
-        flat or IVF traversals.)"""
+        geometry, which a projection refresh does not change -- but the
+        FUSED variant's ``nbr_rows`` binds edges to the scorer's slot
+        assignment, so it is re-derived against the (possibly churned)
+        layout here. The plain variant passes through unchanged.
+        (Incremental edge insertion for grown databases is a ROADMAP
+        follow-up; until then serve streams via flat or IVF traversals.)"""
+        if self.fused and getattr(scorer, "inv_perm", None) is not None:
+            return with_fused_scan(self, scorer, tn=self.scan_tn)
         return self
 
 
-register_index_pytree(GraphIndex, data_fields=("neighbors", "entries"),
-                      static_fields=("beam", "max_hops", "expand"))
+register_index_pytree(GraphIndex,
+                      data_fields=("neighbors", "entries", "nbr_rows"),
+                      static_fields=("beam", "max_hops", "expand", "fused",
+                                     "scan_tn"))
+
+
+def with_fused_scan(index: GraphIndex, scorer, tn: int = 8) -> GraphIndex:
+    """Layout-aware variant of ``index`` bound to a tag-sorted ``scorer``:
+    edge lists are pre-translated through ``scorer.inv_perm`` into sorted-
+    row space (removed ids -> -1) so each hop's DMA schedule is block-
+    contiguous, and ``candidates`` routes hops through the fused
+    ``scan_neighbors`` kernel. Host-side; re-run (or let ``refreshed`` do
+    it) after any slot churn -- a freed slot REUSED by a later insert
+    would otherwise silently alias the stored rows to the new tenant."""
+    inv_perm = getattr(scorer, "inv_perm", None)
+    if inv_perm is None:
+        raise ValueError("with_fused_scan needs a tag-sorted scorer "
+                         "(SortedGleanVec*) with an inv_perm")
+    nbrs = np.asarray(index.neighbors)
+    inv = np.asarray(inv_perm)
+    rows = inv[np.where(nbrs >= 0, nbrs, 0)]
+    rows = np.where((nbrs >= 0) & (rows >= 0), rows, -1)
+    return _dc_replace(index, nbr_rows=jnp.asarray(rows.astype(np.int32)),
+                       fused=True, scan_tn=tn)
 
 
 # ---------------------------------------------------------------------------
@@ -178,25 +240,13 @@ def _robust_prune(x: np.ndarray, cand: np.ndarray, r: int, alpha: float,
     return out
 
 
-def build(x: np.ndarray, r: int = 32, alpha: float = 1.2, n_iters: int = 6,
-          n_random: int = 4, n_entries: int = 16, seed: int = 0
-          ) -> GraphIndex:
-    """Build a degree-(R + n_random) navigable graph over ``x``.
-
-    Two connectivity safeguards beyond plain NN-descent (clustered data --
-    e.g. the paper's multi-modal embeddings -- yields *disconnected* kNN
-    graphs, on which greedy search provably stalls):
-      * ``n_random`` NSW-style long-range out-edges appended per node;
-      * ``n_entries`` search entry points: the medoid plus the database
-        vectors nearest to spherical k-means centroids (the same clustering
-        GleanVec uses), so every mixture component is reachable in one hop.
-    """
-    x = np.asarray(x, np.float32)
-    n = x.shape[0]
-    rng = np.random.default_rng(seed)
-    cand = _nn_descent(x, r, n_iters, rng)          # (n, 2R) sorted
-    nbrs = _robust_prune(x, cand, r, alpha)         # (n, R), -1 padded
-    # add reverse edges where slots remain (improves connectivity)
+def _reverse_edge_fill_ref(nbrs: np.ndarray, r: int) -> np.ndarray:
+    """Sequential reverse-edge fill (the original interpreted loop, kept
+    verbatim as the parity oracle for :func:`_reverse_edge_fill`): for
+    every forward edge dst -> src, append dst to src's list if a slot
+    remains and the edge is neither a self-loop nor already present."""
+    nbrs = nbrs.copy()
+    n = nbrs.shape[0]
     slots = np.sum(nbrs >= 0, axis=1)
     rev_src = nbrs.ravel()
     rev_dst = np.repeat(np.arange(n), r)
@@ -208,9 +258,70 @@ def build(x: np.ndarray, r: int = 32, alpha: float = 1.2, n_iters: int = 6,
             if dstv not in row[:s]:
                 nbrs[srcv, s] = dstv
                 slots[srcv] += 1
-    if n_random > 0:
-        rand_edges = rng.integers(0, n, size=(n, n_random), dtype=np.int64)
-        nbrs = np.concatenate([nbrs, rand_edges], axis=1)
+    return nbrs
+
+
+def _reverse_edge_fill(nbrs: np.ndarray, r: int) -> np.ndarray:
+    """Vectorized reverse-edge fill: same result as the sequential
+    reference, via argsort/bincount slot assignment instead of an O(n * R)
+    interpreted loop.
+
+    Equivalence: the reference processes candidates in ravel order; a
+    candidate (src, dst) is accepted iff dst is not in src's PRUNED row
+    and no earlier candidate already claimed the same (src, dst); accepted
+    candidates take consecutive slots after src's pruned edges, dropped
+    once the row is full. Here: mask existing edges with one whole-row
+    compare (the pruned matrix is front-packed, -1 tail), keep the first
+    occurrence per (src, dst) key, and a STABLE argsort by src preserves
+    ravel order within each src, so rank-within-src = the reference's slot
+    offset -- including which overflow candidates fall off the end."""
+    nbrs = nbrs.copy()
+    n = nbrs.shape[0]
+    slots0 = np.sum(nbrs >= 0, axis=1)
+    src = nbrs.ravel()
+    dst = np.repeat(np.arange(n), r)
+    ok = (src >= 0) & (src != dst)
+    idx = np.nonzero(ok)[0]
+    exists = np.any(nbrs[src[idx]] == dst[idx, None], axis=1)
+    idx = idx[~exists]
+    key = src[idx].astype(np.int64) * n + dst[idx]
+    _, first = np.unique(key, return_index=True)
+    idx = idx[np.sort(first)]                     # ravel order restored
+    order = np.argsort(src[idx], kind="stable")
+    idx = idx[order]
+    s_sorted = src[idx]
+    counts = np.bincount(s_sorted, minlength=n)
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    rank = np.arange(idx.size) - starts[s_sorted]
+    slot = slots0[s_sorted] + rank
+    keep = slot < r
+    nbrs[s_sorted[keep], slot[keep]] = dst[idx][keep]
+    return nbrs
+
+
+def _dedupe_rows(nbrs: np.ndarray) -> np.ndarray:
+    """Mask repeated ids within each row to -1 (keep the first occurrence).
+    Random long-range edges can collide with pruned/reverse edges; a
+    duplicate edge adds no reachability but would let the gathered
+    ``expand=1`` hop insert one vertex into TWO beam slots -- the builds
+    emit duplicate-free rows so the gathered and fused traversals agree on
+    every built graph (the fused kernel scores each distinct neighbor
+    exactly once by construction)."""
+    order = np.argsort(nbrs, axis=1, kind="stable")
+    snb = np.take_along_axis(nbrs, order, axis=1)
+    dup_sorted = np.concatenate(
+        [np.zeros((nbrs.shape[0], 1), bool),
+         (snb[:, 1:] == snb[:, :-1]) & (snb[:, 1:] >= 0)], axis=1)
+    dup = np.zeros(nbrs.shape, bool)
+    np.put_along_axis(dup, order, dup_sorted, axis=1)
+    return np.where(dup, -1, nbrs)
+
+
+def _entry_points(x: np.ndarray, n_entries: int, seed: int) -> np.ndarray:
+    """Medoid + the database vectors nearest to spherical k-means
+    centroids (the same clustering GleanVec uses), deduplicated -- so
+    every mixture component is reachable in one hop."""
+    n = x.shape[0]
     entries = [int(np.argmin(
         np.sum((x - x.mean(0, keepdims=True)) ** 2, axis=1)))]
     if n_entries > 1:
@@ -223,7 +334,127 @@ def build(x: np.ndarray, r: int = 32, alpha: float = 1.2, n_iters: int = 6,
             np.linalg.norm(x, axis=1, keepdims=True), 1e-12)
         sims = x_unit @ np.asarray(km.centers).T
         entries.extend(int(i) for i in np.argmax(sims, axis=0))
-    entries = np.unique(np.asarray(entries, np.int32))
+    return np.unique(np.asarray(entries, np.int32))
+
+
+def build(x: np.ndarray, r: int = 32, alpha: float = 1.2, n_iters: int = 6,
+          n_random: int = 4, n_entries: int = 16, seed: int = 0,
+          method: str = "numpy") -> GraphIndex:
+    """Build a degree-(R + n_random) navigable graph over ``x``.
+
+    ``method``: "numpy" (NN-descent + RobustPrune, this function),
+    "device" (delegate to :func:`build_device`), or "auto" (device at
+    ``n >= _DEVICE_BUILD_MIN_N``, numpy below -- the device self-join is
+    where large builds stop being numpy-bound).
+
+    Two connectivity safeguards beyond plain NN-descent (clustered data --
+    e.g. the paper's multi-modal embeddings -- yields *disconnected* kNN
+    graphs, on which greedy search provably stalls):
+      * ``n_random`` NSW-style long-range out-edges appended per node;
+      * ``n_entries`` search entry points (:func:`_entry_points`).
+    """
+    x = np.asarray(x, np.float32)
+    n = x.shape[0]
+    if method == "device" or (method == "auto" and n >= _DEVICE_BUILD_MIN_N):
+        return build_device(x, r=r, n_random=n_random, n_entries=n_entries,
+                            seed=seed)
+    if method not in ("numpy", "auto"):
+        raise ValueError(f"unknown graph build method: {method!r}")
+    rng = np.random.default_rng(seed)
+    cand = _nn_descent(x, r, n_iters, rng)          # (n, 2R) sorted
+    nbrs = _robust_prune(x, cand, r, alpha)         # (n, R), -1 padded
+    # add reverse edges where slots remain (improves connectivity)
+    nbrs = _reverse_edge_fill(nbrs, r)
+    if n_random > 0:
+        rand_edges = rng.integers(0, n, size=(n, n_random), dtype=np.int64)
+        nbrs = _dedupe_rows(np.concatenate([nbrs, rand_edges], axis=1))
+    entries = _entry_points(x, n_entries, seed)
+    return GraphIndex(neighbors=jnp.asarray(nbrs.astype(np.int32)),
+                      entries=jnp.asarray(entries))
+
+
+# ---------------------------------------------------------------------------
+# Build (on-device, CAGRA-style): fused-kernel k-NN self-join + rank-based
+# detour pruning -- no dense (n, n) matrix, no numpy NN-descent iterations.
+# ---------------------------------------------------------------------------
+
+
+def _device_knn(x: np.ndarray, k: int, batch: int = 1024,
+                interpret: bool = False) -> np.ndarray:
+    """Exact k-NN ids (self excluded, distance ascending) via the fused
+    ``scorer_topk`` kernel: the augmented-IP trick -- database rows
+    ``[x, -||x||^2 / 2]``, queries ``[q, 1]`` -- makes inner-product top-k
+    return exact L2 order, so the self-join is a blocked ``ip_topk`` with
+    no (n, n) matrix and no host-side distance math."""
+    from repro import kernels
+    n = x.shape[0]
+    xj = jnp.asarray(x, jnp.float32)
+    xsq = jnp.sum(xj * xj, axis=1)
+    scorer = LinearScorer(
+        x_low=jnp.concatenate([xj, -0.5 * xsq[:, None]], axis=1))
+    out = np.empty((n, k), np.int64)
+    for s in range(0, n, batch):
+        e = min(s + batch, n)
+        q = jnp.concatenate([xj[s:e], jnp.ones((e - s, 1), jnp.float32)],
+                            axis=1)
+        _, ids = kernels.scorer_topk(scorer, q, k + 1, interpret=interpret)
+        ids = np.asarray(ids)
+        # drop self (rank 0 barring exact duplicates); stable compaction
+        # keeps the remaining k in distance order
+        keep = ids != np.arange(s, e)[:, None]
+        sel = np.argsort(~keep, axis=1, kind="stable")[:, :k]
+        out[s:e] = np.take_along_axis(ids, sel, axis=1)
+    return out
+
+
+@jax.jit
+def _detour_mask(knn: jax.Array, nbr_c: jax.Array) -> jax.Array:
+    """CAGRA rank-based pruning predicate for one chunk of nodes:
+    ``nbr_c (b, k0)`` distance-ascending neighbor ids, ``knn (n, k0)`` the
+    full table. Edge p -> u_j is a detour iff some closer neighbor u_i
+    (i < j) reaches u_j at rank < j in ITS list -- the two-hop route
+    through u_i dominates, so the direct edge adds no reachability."""
+    k0 = nbr_c.shape[1]
+    wn = knn[nbr_c]                                        # (b, k0, k0)
+    hit = wn[:, :, None, :] == nbr_c[:, None, :, None]     # (b, i, j, slot)
+    slot = jax.lax.broadcasted_iota(jnp.int32, hit.shape, 3)
+    rank = jnp.min(jnp.where(hit, slot, k0), axis=3)       # (b, i, j)
+    j = jnp.arange(k0)
+    lower = j[:, None] < j[None, :]                        # i < j
+    return jnp.any(lower[None] & (rank < j[None, None, :]), axis=1)
+
+
+def build_device(x: np.ndarray, r: int = 32, k_base: Optional[int] = None,
+                 n_random: int = 4, n_entries: int = 16, seed: int = 0,
+                 batch: int = 1024, interpret: bool = False) -> GraphIndex:
+    """CAGRA-style graph build on the search accelerator: seed a
+    ``k_base``-NN graph with the fused ``scorer_topk`` self-join
+    (:func:`_device_knn`), rank-prune detour edges in vectorized JAX
+    (:func:`_detour_mask`, chunked -- the (b, k0, k0, k0) compare never
+    exceeds a few tens of MB), then the same reverse-edge fill / random
+    long-range edges / entry points as the numpy build. Replaces
+    NN-descent as the default at ``n >= _DEVICE_BUILD_MIN_N`` via
+    ``build(method="auto")``."""
+    x = np.asarray(x, np.float32)
+    n = x.shape[0]
+    k0 = k_base if k_base is not None else min(2 * r, n - 1)
+    knn = _device_knn(x, k0, batch=batch, interpret=interpret)
+    knn_j = jnp.asarray(knn.astype(np.int32))
+    nbrs = np.full((n, r), -1, np.int64)
+    chunk = max(16, 2 ** 24 // max(1, k0 ** 3))
+    for s in range(0, n, chunk):
+        e = min(s + chunk, n)
+        detour = np.asarray(_detour_mask(knn_j, knn_j[s:e]))
+        kept = ~detour                                     # (b, k0)
+        pos = np.cumsum(kept, axis=1) - 1
+        sel = kept & (pos < r)
+        nbrs[np.nonzero(sel)[0] + s, pos[sel]] = knn[s:e][sel]
+    nbrs = _reverse_edge_fill(nbrs, r)
+    rng = np.random.default_rng(seed)
+    if n_random > 0:
+        rand_edges = rng.integers(0, n, size=(n, n_random), dtype=np.int64)
+        nbrs = _dedupe_rows(np.concatenate([nbrs, rand_edges], axis=1))
+    entries = _entry_points(x, n_entries, seed)
     return GraphIndex(neighbors=jnp.asarray(nbrs.astype(np.int32)),
                       entries=jnp.asarray(entries))
 
@@ -258,9 +489,41 @@ def _mask_duplicate_nbrs(nbrs: jax.Array) -> jax.Array:
     return jnp.where(dup, -1, nbrs)
 
 
+def gathered_beam_step(score_ids, nbr_tbl: jax.Array, scores: jax.Array,
+                       ids: jax.Array, visited: jax.Array,
+                       best_ids: jax.Array, sel_ok: jax.Array, beam: int):
+    """One GATHERED hop merge: gather the popped vertices' neighbors from
+    ``nbr_tbl`` (original-id space), score via ``score_ids``, dedupe
+    against the beam and ``top_k``-merge. Module-level so the benches can
+    lower + cost-model exactly the per-hop work the fused kernel replaces
+    (``kernels.beam_step_bytes`` is its counterpart)."""
+    batch = ids.shape[0]
+    e = best_ids.shape[1]
+    r = nbr_tbl.shape[1]
+    nbrs = nbr_tbl[jnp.where(best_ids >= 0, best_ids, 0)]  # (b, e, R)
+    nbrs = jnp.where((nbrs >= 0) & sel_ok[:, :, None], nbrs, -1)
+    nbrs = nbrs.reshape(batch, e * r)
+    if e > 1:       # overlapping neighborhoods: drop within-hop dups
+        nbrs = _mask_duplicate_nbrs(nbrs)
+    nscores = score_ids(nbrs)
+    nscores = jnp.where(nbrs >= 0, nscores, NEG_INF)
+    # dedupe against the current beam (sort-based membership)
+    present = _beam_member_mask(ids, nbrs)
+    nscores = jnp.where(present, NEG_INF, nscores)
+    # merge and keep top-beam
+    all_scores = jnp.concatenate([scores, nscores], axis=1)
+    all_ids = jnp.concatenate([ids, nbrs], axis=1)
+    all_vis = jnp.concatenate(
+        [visited, jnp.zeros((batch, e * r), bool)], axis=1)
+    top_scores, sel = jax.lax.top_k(all_scores, beam)
+    top_ids = jnp.take_along_axis(all_ids, sel, axis=1)
+    top_vis = jnp.take_along_axis(all_vis, sel, axis=1)
+    return top_scores, top_ids, top_vis
+
+
 def _beam_loop(score_ids, graph: GraphIndex, batch: int, beam: int,
                max_hops: int, expand: int = 1,
-               trace_tags: Optional[jax.Array] = None):
+               trace_tags: Optional[jax.Array] = None, fused_step=None):
     """Shared traversal. ``score_ids(ids) -> (batch, k) scores`` for id >= 0.
 
     Each hop pops the top-``expand`` unvisited frontier vertices per query
@@ -268,9 +531,14 @@ def _beam_loop(score_ids, graph: GraphIndex, batch: int, beam: int,
     contraction; ``expand=1`` is the classic best-first loop. Returns
     (scores, ids, n_hops, tag_trace) with tag_trace (batch, max_hops) = tag
     of the BEST vertex expanded at each hop (-1 = no hop), for Figure 7.
-    """
+
+    ``fused_step(scores, ids, visited, best_ids, sel_ok) -> (scores, ids,
+    visited)`` replaces the gathered hop merge with the gather-free kernel
+    (see :func:`_beam_qstate`): identical top-``beam`` multiset, but the
+    beam stays in slot order (the kernel folds candidates in place) rather
+    than score-sorted -- every consumer (the pop's ``top_k``, the final
+    ``top_k``) is order-insensitive, so the traversal is unchanged."""
     nbr_tbl = graph.neighbors
-    r = nbr_tbl.shape[1]
     e = max(1, expand)
     assert e <= beam, "expand must not exceed the beam width"
 
@@ -306,25 +574,13 @@ def _beam_loop(score_ids, graph: GraphIndex, batch: int, beam: int,
         best_ids = jnp.take_along_axis(ids, best, axis=1)      # (batch, e)
         visited = visited.at[rows, best].set(
             jnp.take_along_axis(visited, best, axis=1) | sel_ok)
-        # expand: gather the chosen vertices' neighbors in one batch
-        nbrs = nbr_tbl[jnp.where(best_ids >= 0, best_ids, 0)]  # (b, e, R)
-        nbrs = jnp.where((nbrs >= 0) & sel_ok[:, :, None], nbrs, -1)
-        nbrs = nbrs.reshape(batch, e * r)
-        if e > 1:       # overlapping neighborhoods: drop within-hop dups
-            nbrs = _mask_duplicate_nbrs(nbrs)
-        nscores = score_ids(nbrs)
-        nscores = jnp.where(nbrs >= 0, nscores, NEG_INF)
-        # dedupe against the current beam (sort-based membership)
-        present = _beam_member_mask(ids, nbrs)
-        nscores = jnp.where(present, NEG_INF, nscores)
-        # merge and keep top-beam
-        all_scores = jnp.concatenate([scores, nscores], axis=1)
-        all_ids = jnp.concatenate([ids, nbrs], axis=1)
-        all_vis = jnp.concatenate(
-            [visited, jnp.zeros((batch, e * r), bool)], axis=1)
-        top_scores, sel = jax.lax.top_k(all_scores, beam)
-        top_ids = jnp.take_along_axis(all_ids, sel, axis=1)
-        top_vis = jnp.take_along_axis(all_vis, sel, axis=1)
+        if fused_step is not None:
+            top_scores, top_ids, top_vis = fused_step(scores, ids, visited,
+                                                      best_ids, sel_ok)
+        else:
+            top_scores, top_ids, top_vis = gathered_beam_step(
+                score_ids, nbr_tbl, scores, ids, visited, best_ids, sel_ok,
+                beam)
         if trace_tags is not None:
             first = best_ids[:, 0]
             tag = jnp.where(first >= 0,
@@ -346,16 +602,55 @@ def _beam_loop(score_ids, graph: GraphIndex, batch: int, beam: int,
 def _beam_qstate(qstate, scorer, graph: GraphIndex, k: int, beam: int,
                  max_hops: int, expand: int = 1,
                  trace_tags: Optional[jax.Array] = None):
-    """Traversal over any scorer with prepared queries ``qstate``."""
+    """Traversal over any scorer with prepared queries ``qstate``.
+
+    A fused graph (``with_fused_scan``) paired with a scorer exposing
+    ``scan_neighbors`` routes each hop through the gather-free Pallas beam
+    step: the popped vertices' PRE-TRANSLATED sorted rows (``nbr_rows``)
+    go straight to the kernel, which scores, dedupes against the beam and
+    folds in place -- the visited flag stays attached to its slot's id
+    (``visited & (new == old)``), which is exactly the gathered path's
+    permutation of visited flags through the merge (beam ids are
+    distinct). ``graph.fused`` is static aux data, so the dispatch is
+    trace-time; both paths share one cache entry structure."""
     m = batch_of(qstate)
 
     def score_ids(ids):
         safe = jnp.where(ids >= 0, ids, 0)
         return scorer.score_ids(qstate, safe)
 
+    fused_step = None
+    if graph.fused and graph.nbr_rows is not None \
+            and hasattr(scorer, "scan_neighbors"):
+        nbr_rows_tbl = graph.nbr_rows
+        e = max(1, expand)
+
+        def fused_step(scores, ids, visited, best_ids, sel_ok):
+            nrows = nbr_rows_tbl[jnp.where(best_ids >= 0, best_ids, 0)]
+            nrows = jnp.where((nrows >= 0) & sel_ok[:, :, None], nrows, -1)
+            nrows = nrows.reshape(m, e * nbr_rows_tbl.shape[1])
+            new_scores, new_ids = scorer.scan_neighbors(
+                qstate, nrows, scores, ids, tn=graph.scan_tn)
+            # The visited flag stays attached to its entry's ID, not its
+            # slot: new candidates enter unvisited, survivors keep their
+            # flag. A sort + searchsorted lookup against the PRE-hop beam
+            # transfers the flags regardless of output slot order (the
+            # Pallas kernel folds in place; the jnp fallback re-sorts) --
+            # exactly the gathered path's permutation of visited through
+            # its merge, since beam ids are distinct.
+            order = jnp.argsort(ids, axis=1)
+            sorted_ids = jnp.take_along_axis(ids, order, axis=1)
+            sorted_vis = jnp.take_along_axis(visited, order, axis=1)
+            pos = jnp.clip(jax.vmap(jnp.searchsorted)(sorted_ids, new_ids),
+                           0, beam - 1)
+            match = jnp.take_along_axis(sorted_ids, pos, axis=1) == new_ids
+            new_vis = match & jnp.take_along_axis(sorted_vis, pos, axis=1)
+            return new_scores, new_ids, new_vis
+
     scores, ids, hops, tag_hist = _beam_loop(score_ids, graph, m, beam,
                                              max_hops, expand=expand,
-                                             trace_tags=trace_tags)
+                                             trace_tags=trace_tags,
+                                             fused_step=fused_step)
     top, sel = jax.lax.top_k(scores, k)
     return top, jnp.take_along_axis(ids, sel, axis=1), hops, tag_hist
 

@@ -13,6 +13,10 @@ mentions kernels; it talks to scorers, and scorers lower here.
 """
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.gleanvec_ip import gleanvec_ip, gleanvec_ip_ref
+from repro.kernels.graph_scan import (beam_step_bytes, fresh_slab_count,
+                                      graph_scan_beam_step,
+                                      graph_scan_beam_step_ref,
+                                      graph_scan_scores_ref)
 from repro.kernels.gleanvec_sq import (gleanvec_sq, gleanvec_sq_ref,
                                        gleanvec_sq_sorted_ref,
                                        gleanvec_sq_topk,
@@ -29,6 +33,8 @@ __all__ = [
     "gleanvec_sq", "gleanvec_sq_ref", "gleanvec_sq_sorted_ref",
     "gleanvec_sq_topk", "gleanvec_sq_topk_ref",
     "ip_topk", "ip_topk_ref",
+    "graph_scan_beam_step", "graph_scan_beam_step_ref",
+    "graph_scan_scores_ref", "beam_step_bytes", "fresh_slab_count",
     "ivf_scan_topk", "ivf_scan_topk_ref", "ivf_scan_scores_ref",
     "fine_step_bytes",
     "kmeans_assign", "kmeans_assign_ref",

@@ -1,0 +1,9 @@
+"""Gather-free graph beam step: fused Pallas hop kernel + jnp oracle."""
+from repro.kernels.graph_scan.ops import (beam_step_bytes,
+                                          fresh_slab_count,
+                                          graph_scan_beam_step,
+                                          graph_scan_beam_step_ref,
+                                          graph_scan_scores_ref)
+
+__all__ = ["graph_scan_beam_step", "graph_scan_beam_step_ref",
+           "graph_scan_scores_ref", "beam_step_bytes", "fresh_slab_count"]

@@ -1,0 +1,84 @@
+"""Public ops: gather-free graph beam step with Pallas kernel + jnp
+fallback, plus the kernel's HBM-traffic model.
+
+``graph_scan_beam_step`` takes the hop's neighbor SORTED-ROW indices per
+query (-1-padded, any order) and folds their scores into the beam --
+Pallas with the slab schedule as a scalar-prefetch operand on TPU (and in
+interpret mode), the gathering jnp oracle elsewhere. The kernel leaves the
+beam in slot order; the oracle returns it sorted by score -- the same
+top-B multiset either way (the traversal's pop / final ``top_k`` are
+order-insensitive). When the requested slab tile does not divide the
+layout block, the dispatcher shrinks the tile to the layout block -- never
+wrong, only coarser.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.kernels.graph_scan.graph_scan import (graph_scan_beam_step
+                                                 as _pallas_beam_step)
+from repro.kernels.graph_scan.ref import (graph_scan_beam_step_ref,
+                                          graph_scan_scores_ref)
+
+__all__ = ["graph_scan_beam_step", "graph_scan_beam_step_ref",
+           "graph_scan_scores_ref", "beam_step_bytes", "fresh_slab_count"]
+
+
+def graph_scan_beam_step(q_scaled: jax.Array, q_lo: jax.Array,
+                         block_tags: jax.Array, row_ids: jax.Array,
+                         codes: jax.Array, nbr_rows: jax.Array,
+                         beam_vals: jax.Array, beam_ids: jax.Array,
+                         layout_block: int, tn: int = 8,
+                         use_pallas: bool | None = None,
+                         interpret: bool = False):
+    """``q_scaled (M, C, d)``, ``q_lo (M, C)``, ``block_tags (NB,)``,
+    ``row_ids (N,)``, ``codes (N, d)`` u8/f32, ``nbr_rows (M, S)`` hop
+    neighbor sorted-row indices (-1 = pad), ``beam_vals``/``beam_ids``
+    ``(M, B)`` -> merged ``(vals, ids) (M, B)``: the top-B multiset of
+    {beam} U {distinct live neighbors not already in the beam}, ids
+    ORIGINAL."""
+    if use_pallas is None:
+        use_pallas = interpret or jax.default_backend() == "tpu"
+    if not use_pallas:
+        return graph_scan_beam_step_ref(q_scaled, q_lo, block_tags,
+                                        row_ids, codes, nbr_rows,
+                                        beam_vals, beam_ids, layout_block)
+    if layout_block % tn:
+        tn = layout_block             # shrink: one grid step per slab
+    return _pallas_beam_step(q_scaled, q_lo, block_tags, row_ids, codes,
+                             nbr_rows, beam_vals, beam_ids,
+                             layout_block=layout_block, tn=tn,
+                             interpret=interpret)
+
+
+def beam_step_bytes(m: int, slabs_visited: float, tn: int, d: int, c: int,
+                    beam: int, s: int, code_bytes: int = 1) -> float:
+    """HBM bytes the fused beam-step kernel moves for one hop of one query
+    batch.
+
+    Determined by the kernel's BlockSpecs (see graph_scan.py): per fresh
+    slab TN*d bytes of codes + TN*4 of ids + 4 of tag; per query C*d*4 +
+    C*4 of prepared views, 3*S*4 of int32 schedule/neighbor-row arrays
+    (the ONLY per-candidate HBM footprint -- no f32 score or gathered-row
+    matrix exists) and 4*B*8 of beam state in/out. ``slabs_visited``
+    counts the FRESH schedule entries across the batch (repeated-slab and
+    padding slots DMA nothing new: their index maps clamp to the previous
+    slab). This is the fused side of the >= 3x beam-step assertion; the
+    gathered side comes from the compiled ``graph.gathered_beam_step``'s
+    ``cost_analysis`` via ``normalize_cost``.
+    """
+    per_slab = tn * (d * code_bytes + 4) + 4
+    per_query = c * d * 4 + c * 4 + 3 * s * 4 + 4 * beam * 8
+    return float(m * per_query + slabs_visited * per_slab)
+
+
+def fresh_slab_count(nbr_rows, tn: int) -> int:
+    """Total fresh slabs a hop with these neighbor rows DMAs (host-side:
+    the data-dependent occupancy term of :func:`beam_step_bytes`)."""
+    rows = np.asarray(nbr_rows)
+    total = 0
+    for r in rows:
+        v = r[r >= 0]
+        total += int(np.unique(v // tn).size)
+    return total

@@ -1,0 +1,68 @@
+"""Pure-jnp oracle for the fused graph beam step.
+
+The oracle gathers the hop's neighbor rows explicitly (it is allowed to --
+it is the reference, not the fast path), scores them through the same
+per-cluster affine math as the kernel, applies the same three masks
+(duplicate neighbor rows, dead rows, candidates already in the beam) and
+merges with ``top_k`` over the concatenated (beam + candidates) set.
+Because the masks reproduce exactly what ``graph._beam_loop``'s gathered
+body computes (``_mask_duplicate_nbrs`` + ``score_ids`` +
+``_beam_member_mask`` + merge), this oracle is ALSO the bridge the parity
+tests use between the fused hop and the gathered traversal.
+
+Note the ORDER contract difference: the kernel folds candidates into beam
+slots in place (unsorted); the oracle's ``top_k`` merge returns the beam
+sorted by score descending. Both are the same top-B multiset -- consumers
+(the traversal's pop and final ``top_k``) are order-insensitive.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -3.4e38
+
+
+def graph_scan_scores_ref(q_scaled: jax.Array, q_lo: jax.Array,
+                          block_tags: jax.Array, row_ids: jax.Array,
+                          codes: jax.Array, nbr_rows: jax.Array,
+                          layout_block: int):
+    """Dense per-candidate scores: returns ``(scores, ids)`` both
+    ``(M, S)`` in ascending-sorted-row order -- duplicate rows (beyond the
+    first occurrence), padding slots and dead rows score -inf with id -1.
+    Beam dedupe is NOT applied here (it needs the beam; see
+    :func:`graph_scan_beam_step_ref`)."""
+    m, s = nbr_rows.shape
+    n = codes.shape[0]
+    rows = jnp.sort(jnp.where(nbr_rows >= 0, nbr_rows, n), axis=1)
+    valid = rows < n
+    dup = jnp.concatenate(
+        [jnp.zeros((m, 1), bool), rows[:, 1:] == rows[:, :-1]], axis=1)
+    safe = jnp.where(valid, rows, 0)
+    x = codes[safe].astype(jnp.float32)                        # (M, S, d)
+    tag = block_tags[safe // layout_block]                     # (M, S)
+    q_sel = q_scaled[jnp.arange(m)[:, None], tag]              # (M, S, d)
+    lo_sel = jnp.take_along_axis(q_lo, tag, axis=1)            # (M, S)
+    scores = jnp.sum(q_sel * x, axis=-1) + lo_sel
+    ids = jnp.where(valid, row_ids[safe].astype(jnp.int32), -1)
+    ok = valid & ~dup & (ids >= 0)
+    return jnp.where(ok, scores, NEG_INF), jnp.where(ok, ids, -1)
+
+
+def graph_scan_beam_step_ref(q_scaled: jax.Array, q_lo: jax.Array,
+                             block_tags: jax.Array, row_ids: jax.Array,
+                             codes: jax.Array, nbr_rows: jax.Array,
+                             beam_vals: jax.Array, beam_ids: jax.Array,
+                             layout_block: int):
+    """Gather + mask + ``top_k``-merge oracle of
+    :func:`graph_scan_beam_step` (same top-B multiset, sorted order)."""
+    scores, ids = graph_scan_scores_ref(q_scaled, q_lo, block_tags,
+                                        row_ids, codes, nbr_rows,
+                                        layout_block)
+    present = jnp.any(ids[:, :, None] == beam_ids[:, None, :], axis=2)
+    scores = jnp.where(present, NEG_INF, scores)
+    ids = jnp.where(present, -1, ids)
+    all_v = jnp.concatenate([beam_vals.astype(jnp.float32), scores], axis=1)
+    all_i = jnp.concatenate([beam_ids.astype(jnp.int32), ids], axis=1)
+    top, sel = jax.lax.top_k(all_v, beam_vals.shape[1])
+    return top, jnp.take_along_axis(all_i, sel, axis=1)

@@ -18,6 +18,10 @@ Index protocol path -- the flags are the only thing that differs between a
 full-precision flat service and a sharded cluster-contiguous GleanVec+int8
 IVF one. ``--reduced-probe`` projects the IVF coarse centers into the
 scorer's reduced space so the probe consumes the prepared queries (R^d).
+``--fused-graph`` (sorted modes) binds the graph's edge lists to the
+tag-sorted layout so every hop runs the gather-free fused beam-step kernel;
+``--graph-build device`` constructs the graph on the accelerator
+(CAGRA-style fused self-join) instead of numpy NN-descent.
 
 ``--stream`` drives the Section 3.2 lifecycle under live traffic: the
 engine keeps serving drifted (OOD) queries while each cycle observes them
@@ -60,10 +64,17 @@ def build_index(args, X, scorer, model):
             idx = ivf.with_reduced_centers(idx, scorer, model)
         return idx
     if args.index == "graph":
-        return replace(graph.build(np.asarray(X), r=args.graph_degree,
-                                   n_iters=4, seed=0),
-                       beam=args.beam, max_hops=args.max_hops,
-                       expand=args.expand)
+        idx = replace(graph.build(np.asarray(X), r=args.graph_degree,
+                                  n_iters=4, seed=0,
+                                  method=args.graph_build),
+                      beam=args.beam, max_hops=args.max_hops,
+                      expand=args.expand)
+        if args.fused_graph:
+            if not args.mode.endswith("-sorted"):
+                raise SystemExit("--fused-graph needs a sorted scorer mode "
+                                 "(gleanvec-sorted / gleanvec-int8-sorted)")
+            idx = graph.with_fused_scan(idx, scorer)
+        return idx
     raise ValueError(f"unknown index {args.index!r}")
 
 
@@ -173,6 +184,14 @@ def main():
                     help="graph frontier vertices expanded per hop "
                          "(multi-expansion beam search; 1 = classic)")
     ap.add_argument("--graph-degree", type=int, default=24)
+    ap.add_argument("--graph-build", default="numpy",
+                    choices=["numpy", "device", "auto"],
+                    help="graph construction: numpy NN-descent, on-device "
+                         "CAGRA-style self-join, or auto (device at large n)")
+    ap.add_argument("--fused-graph", action="store_true",
+                    help="sorted modes: bind the graph to the tag-sorted "
+                         "layout (graph.with_fused_scan) so every hop runs "
+                         "the gather-free fused beam-step kernel")
     ap.add_argument("--shards", type=int, default=0,
                     help="N per-shard sub-indexes merged via ShardedIndex "
                          "(0 = single index)")
@@ -214,8 +233,9 @@ def main():
             key=jax.random.PRNGKey(1), n_lists=args.lists,
             nprobe=args.nprobe, reduced_probe=args.reduced_probe,
             aligned=args.aligned, beam=args.beam, max_hops=args.max_hops,
-            expand=args.expand,
-            graph_kwargs={"r": args.graph_degree, "n_iters": 4, "seed": 0})
+            expand=args.expand, fused_graph=args.fused_graph,
+            graph_kwargs={"r": args.graph_degree, "n_iters": 4, "seed": 0,
+                          "method": args.graph_build})
         artifacts = msearch.SearchArtifacts(scorer=stacked, x_full=X,
                                             model=model)
     else:

@@ -8,7 +8,8 @@ from repro.core.quantization import quantize, quantize_per_cluster
 from repro.kernels import (flash_attention, flash_attention_ref, gleanvec_ip,
                            gleanvec_ip_ref, gleanvec_sq, gleanvec_sq_ref,
                            gleanvec_sq_sorted_ref, gleanvec_sq_topk,
-                           gleanvec_sq_topk_ref, ip_topk, ip_topk_ref,
+                           gleanvec_sq_topk_ref, graph_scan_beam_step,
+                           graph_scan_beam_step_ref, ip_topk, ip_topk_ref,
                            ivf_scan_topk, ivf_scan_topk_ref, kmeans_assign,
                            kmeans_assign_ref, sq_dot, sq_dot_ref)
 
@@ -196,6 +197,80 @@ def test_ivf_scan_topk_f32_rows_and_empty_schedule():
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
     assert (np.asarray(i1)[1] == -1).all()
     assert (np.asarray(v1)[1] < -1e37).all()
+
+
+def _graph_scan_inputs(m, nb, c, d, lb, s, b, n_pad=0, f32=False, seed=3):
+    """Random sorted-layout inputs + per-query neighbor sorted-row lists
+    (with -1 pads and repeats) + a random incoming beam (distinct ids,
+    some empty slots)."""
+    rng = np.random.default_rng(seed)
+    n = nb * lb
+    q_scaled, q_lo, _, codes = _sq_inputs(m, n, c, d)
+    if f32:
+        codes = _randn(n, d)
+    block_tags = jnp.asarray(rng.integers(0, c, nb).astype(np.int32))
+    perm = rng.permutation(n).astype(np.int32)
+    if n_pad:
+        perm[rng.permutation(n)[:n_pad]] = -1        # dead/padding rows
+    nbr = rng.integers(-1, n, (m, s)).astype(np.int32)
+    nbr[0, 1:] = nbr[0, 0]                           # repeated rows
+    bvals = 50.0 * rng.standard_normal((m, b)).astype(np.float32)
+    bids = np.stack([rng.choice(n, b, replace=False)
+                     for _ in range(m)]).astype(np.int32)
+    empty = rng.random((m, b)) < 0.25                # unfilled beam slots
+    bvals[empty] = np.float32(-3.4e38)
+    bids[empty] = -1
+    return (q_scaled, q_lo, block_tags, jnp.asarray(perm), codes,
+            jnp.asarray(nbr), jnp.asarray(bvals), jnp.asarray(bids))
+
+
+def _assert_same_beam(kv, ki, rv, ri):
+    """Kernel beams are slot-ordered, the oracle's are score-sorted --
+    compare as (id -> value) maps: beam ids are distinct (-1 empties all
+    ride the -inf sentinel), so sorting by id aligns the multisets."""
+    kv, ki = np.asarray(kv), np.asarray(ki)
+    rv, ri = np.asarray(rv), np.asarray(ri)
+    ko, ro = np.argsort(ki, axis=1), np.argsort(ri, axis=1)
+    np.testing.assert_array_equal(np.take_along_axis(ki, ko, 1),
+                                  np.take_along_axis(ri, ro, 1))
+    np.testing.assert_allclose(np.take_along_axis(kv, ko, 1),
+                               np.take_along_axis(rv, ro, 1),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("m,nb,c,d,lb,s,b,tn", [
+    (4, 8, 6, 32, 128, 40, 12, 8),   # layout_block % tn == 0
+    (3, 5, 8, 48, 64, 24, 8, 48),    # tn does not divide -> tile shrink
+    (1, 6, 4, 16, 96, 10, 6, 128),   # tn > layout_block -> tile shrink
+])
+def test_graph_scan_beam_step_matches_ref(m, nb, c, d, lb, s, b, tn):
+    """Fused beam-step kernel == gather/top_k oracle: slab streaming from
+    the neighbor-row schedule, repeated rows score once, dead rows and
+    in-beam candidates never enter, beam multiset identical."""
+    qs, ql, bt, rid, codes, nbr, bv, bi = _graph_scan_inputs(
+        m, nb, c, d, lb, s, b, n_pad=30)
+    kv, ki = graph_scan_beam_step(qs, ql, bt, rid, codes, nbr, bv, bi,
+                                  layout_block=lb, tn=tn, interpret=True)
+    rv, ri = graph_scan_beam_step_ref(qs, ql, bt, rid, codes, nbr, bv, bi,
+                                      layout_block=lb)
+    _assert_same_beam(kv, ki, rv, ri)
+
+
+@pytest.mark.tier1
+def test_graph_scan_f32_rows_and_empty_expansion():
+    """The unquantized sorted scorer's f32 rows ride the same kernel, and
+    an all-padding neighbor row leaves that query's beam untouched."""
+    qs, ql, bt, rid, codes, nbr, bv, bi = _graph_scan_inputs(
+        3, 6, 4, 24, 64, 16, 8, f32=True)
+    nbr = nbr.at[1].set(-1)                          # query 1: no neighbors
+    kv, ki = graph_scan_beam_step(qs, ql, bt, rid, codes, nbr, bv, bi,
+                                  layout_block=64, tn=8, interpret=True)
+    rv, ri = graph_scan_beam_step_ref(qs, ql, bt, rid, codes, nbr, bv, bi,
+                                      layout_block=64)
+    _assert_same_beam(kv, ki, rv, ri)
+    np.testing.assert_array_equal(np.asarray(ki)[1], np.asarray(bi)[1])
+    np.testing.assert_allclose(np.asarray(kv)[1], np.asarray(bv)[1])
 
 
 @pytest.mark.parametrize("n,c,d,tn", [
