@@ -10,16 +10,19 @@ state-swap vs re-jit latency RATIO are the architecture's signal.
 """
 from __future__ import annotations
 
+import shutil
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import BENCH_QUERIES, BENCH_N, emit, time_fn
+from benchmarks.common import BENCH_QUERIES, BENCH_N, declare, emit, time_fn
 from repro.core import gleanvec as gv, metrics, streaming
 from repro.core import search as msearch
 from repro.data import vectors
+from repro.serve import faults, lifecycle
 from repro.serve.engine import ServingEngine, make_search_fn
 
 MODES = ("gleanvec-int8", "gleanvec-int8-sorted")
@@ -122,6 +125,111 @@ def run(cycles: int = 3, batch: int = 64):
         emit(f"serving_stream/rebuild_swap-{mode}", rebuild_us,
              f"recompiles={counter['n'] - c1};"
              f"speedup={rebuild_us / max(swap_us, 1e-9):.0f}x")
+
+    _run_faults(counter, batch=batch)
+
+
+def _recall(engine, queries, k=10):
+    live = streaming.live_mask(engine.state.artifacts)
+    gt = np.nonzero(live)[0][vectors.exact_topk(
+        queries, np.asarray(engine.state.artifacts.x_full)[live], k)]
+    return float(metrics.recall_at_k(jnp.asarray(engine.submit(queries)),
+                                     jnp.asarray(gt)))
+
+
+def _run_faults(counter, batch: int = 32):
+    """``serving_stream/faults/*``: the fault-tolerance section -- guarded
+    swap rejection latency (non-finite scan, canary battery), the
+    degrade -> recover -> swap cycle with recall measured while degraded,
+    and the corrupted-snapshot restore fallback with its recompile count.
+    Every row is DECLARED up front so ``run.py --smoke`` fails if a
+    refactor silently skips one."""
+    declare("serving_stream/faults/reject-nonfinite",
+            "serving_stream/faults/reject-canary",
+            "serving_stream/faults/recover-nan-moments",
+            "serving_stream/faults/restore-fallback")
+    n = min(BENCH_N, 4000)
+    dim, d, c = 128, 32, 8
+    n0 = int(n * 0.8)
+    ds = vectors.make_dataset("serving-faults", n=n, d=dim,
+                              n_queries=max(BENCH_QUERIES, 4 * batch),
+                              ood=True, seed=7)
+    X = jnp.asarray(ds.database)
+    QT = np.asarray(ds.queries_test)
+    rng = np.random.default_rng(0)
+    q_init = np.asarray(X)[rng.integers(0, n0, 512)] \
+        + 0.1 * rng.standard_normal((512, dim)).astype(np.float32)
+    model = gv.fit(jax.random.PRNGKey(0), jnp.asarray(q_init), X[:n0],
+                   c=c, d=d)
+    arts = streaming.build_streaming_artifacts(
+        "gleanvec-int8", X[:n0], model, capacity=n, sort_block=256,
+        slack_blocks=2)
+    engine = ServingEngine(msearch.make_state(arts), k=10, kappa=50,
+                           batch_size=batch, dim=dim)
+    guarded = lifecycle.GuardedEngine(engine, canary_queries=QT[:batch])
+    sup = lifecycle.RefreshSupervisor(guarded, backoff_s=0.0)
+    stream = streaming.init_from_artifacts(arts, q_init, refresh_every=256)
+    sup.note_queries(QT[: 4 * batch])
+    probe = QT[: 2 * batch]
+    # warm cycle: insert + supervised refresh through the guard
+    arts2, _ = streaming.insert_rows(engine.state.artifacts, X[n0:])
+    stream = streaming.insert(stream, X[n0:])
+    guarded.swap(engine.state._replace(artifacts=arts2))
+    stream, _ = sup.refresh_and_swap(stream, source="full")
+    before = guarded.submit(probe)
+
+    # guarded-swap rejection latency: non-finite scan, then canary battery
+    for row, inject, _reason in (
+            ("reject-nonfinite", faults.corrupt_scorer_leaf, "non-finite"),
+            ("reject-canary", faults.scramble_scorer_leaf,
+             "canary-overlap")):
+        bad = inject(engine.state)
+        t0 = time.perf_counter()
+        try:
+            guarded.swap(bad)
+            raise AssertionError(f"{row}: corrupted state was accepted")
+        except lifecycle.SwapRejected:
+            t_reject = (time.perf_counter() - t0) * 1e6
+        bitident = int(np.array_equal(guarded.submit(probe), before))
+        emit(f"serving_stream/faults/{row}", t_reject,
+             f"swaps_rejected={guarded.health.rejected};"
+             f"bitident={bitident}")
+
+    # degrade -> recover -> swap: poisoned Eq. 11 moments; the engine keeps
+    # serving the stale-but-valid state (recall measured while degraded),
+    # then the moments are rebuilt and the next refresh swaps clean
+    stream, rep = sup.refresh_and_swap(faults.nan_moments(stream),
+                                       source="stored")
+    recall_degraded = _recall(engine, probe)
+    t0 = time.perf_counter()
+    stream = sup.recover(stream)
+    stream, rep2 = sup.refresh_and_swap(stream, source="stored")
+    t_recover = (time.perf_counter() - t0) * 1e6
+    recall_recovered = _recall(engine, probe)
+    emit("serving_stream/faults/recover-nan-moments", t_recover,
+         f"degraded={sup.n_degraded};attempts={rep.attempts};"
+         f"outcome={rep2.outcome};recall_degraded={recall_degraded:.3f};"
+         f"recall_recovered={recall_recovered:.3f}")
+
+    # corrupted-snapshot restore: truncate the newest step, fall back to
+    # the previous one, reinstall through the guard -- zero recompiles
+    before = guarded.submit(probe)
+    snap = tempfile.mkdtemp(prefix="bench-snap-")
+    try:
+        lifecycle.snapshot(snap, engine.state, stream)
+        lifecycle.snapshot(snap, engine.state, stream)
+        faults.truncate_snapshot(snap, what="leaf")
+        c0 = counter["n"]
+        t0 = time.perf_counter()
+        serving, _, got, _ = lifecycle.restore(snap, engine.state, stream)
+        lifecycle.restore_into(guarded, serving)
+        t_restore = (time.perf_counter() - t0) * 1e6
+        bitident = int(np.array_equal(guarded.submit(probe), before))
+        emit("serving_stream/faults/restore-fallback", t_restore,
+             f"fallback={int(got == 0)};bitident={bitident};"
+             f"recompiles={counter['n'] - c0}")
+    finally:
+        shutil.rmtree(snap, ignore_errors=True)
 
 
 if __name__ == "__main__":

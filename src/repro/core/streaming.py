@@ -53,9 +53,9 @@ from repro.core.search import SearchArtifacts, ServingState
 
 __all__ = ["StreamingState", "init", "init_gleanvec", "init_from_artifacts",
            "insert", "remove", "observe_queries", "needs_refresh",
-           "refresh", "transition_matrix", "reproject",
-           "build_streaming_artifacts", "live_mask", "free_ids",
-           "insert_rows", "remove_rows", "refresh_artifacts",
+           "refresh", "transition_matrix", "transition_condition",
+           "reproject", "build_streaming_artifacts", "live_mask",
+           "free_ids", "insert_rows", "remove_rows", "refresh_artifacts",
            "refresh_state"]
 
 
@@ -189,6 +189,30 @@ def transition_matrix(state: StreamingState) -> jax.Array:
     if prev.ndim == 3:
         return jax.vmap(lambda nw, pv: nw @ jnp.linalg.pinv(pv))(new, prev)
     return new @ jnp.linalg.pinv(prev)
+
+
+def transition_condition(state: StreamingState) -> float:
+    """Condition number of the Eq. 12 denominator B_prev = P_{t-1} W_{t-1}
+    (max over clusters for GleanVec states): sigma_max / sigma_min of the
+    (d, D) projection whose pseudo-inverse the transition solve applies.
+
+    The ``pinv`` amplifies stored-vector noise by ~this factor, so a
+    near-dead cluster (its moment collapsed onto a subspace -> a tiny
+    trailing singular value) makes ``source="stored"`` reprojection
+    garbage while ``source="full"`` re-encoding stays exact -- the
+    escalation signal :class:`repro.serve.lifecycle.RefreshSupervisor`
+    keys on. Returns ``inf`` for a singular solve and ``nan`` for
+    non-finite inputs; callers should escalate unless the value is
+    finite AND below their threshold.
+    """
+    prev = jnp.asarray(state.prev_bw, jnp.float32)
+    if not bool(jnp.all(jnp.isfinite(prev))):
+        return float("nan")
+    s = jnp.linalg.svd(prev, compute_uv=False)       # (..., min(d, D))
+    smax = jnp.max(s, axis=-1)
+    smin = jnp.min(s, axis=-1)
+    cond = jnp.where(smin > 0, smax / smin, jnp.inf)
+    return float(jnp.max(cond))
 
 
 def reproject(state: StreamingState, x_low: jax.Array,

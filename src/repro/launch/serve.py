@@ -27,11 +27,21 @@ tag-sorted layout so every hop runs the gather-free fused beam-step kernel;
 engine keeps serving drifted (OOD) queries while each cycle observes them
 into K_Q, inserts new database rows into the fixed-capacity store, and
 swaps the Eq. 11-12 refreshed state in -- zero recompiles after warmup,
-asserted by the engine's compile counter.
+asserted by the engine's compile counter. The stream loop runs through
+the fault-tolerant lifecycle layer: every swap is GUARDED (non-finite
+scan + version monotonicity + canary top-k overlap, `serve/lifecycle.py`)
+and every refresh SUPERVISED (retry/backoff, stored->full escalation,
+graceful degradation). ``--snapshot-dir`` persists the
+ServingState + StreamingState pair each cycle; ``--restore`` resumes a
+killed process from the newest restorable snapshot -- template model, NO
+refit -- and continues the refresh cadence; ``--inject-fault <kind>``
+drills one full fail -> degrade -> recover -> swap cycle end-to-end
+(exits non-zero if the stack mishandles it).
 """
 from __future__ import annotations
 
 import argparse
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +54,9 @@ from repro.core.scorer import MODES
 from repro.data import vectors
 from repro.index import distributed, graph, ivf
 from repro.index.protocol import replace
+from repro.serve import faults, lifecycle
 from repro.serve.engine import ServingEngine
+from repro.train import checkpoint
 
 
 def build_index(args, X, scorer, model):
@@ -78,10 +90,109 @@ def build_index(args, X, scorer, model):
     raise ValueError(f"unknown index {args.index!r}")
 
 
+def _stream_model(args, q_init, X, n0, template: bool):
+    """The stream's DR model: a real fit, or (restore path) a structural
+    template -- same classes/treedef, placeholder weights, NO refit."""
+    if template:
+        return lifecycle.template_model(args.mode, args.dim, args.d,
+                                        clusters=args.clusters)
+    if args.mode.startswith("sphering"):
+        return lvs.fit(jnp.asarray(q_init), X[:n0], args.d)
+    return gv.fit(jax.random.PRNGKey(0), jnp.asarray(q_init), X[:n0],
+                  c=args.clusters, d=args.d)
+
+
+def _drill_fail(msg):
+    print(f"  drill FAIL: {msg}")
+    raise SystemExit(1)
+
+
+def _fault_drill(kind, guarded, supervisor, stream, obs, snap_dir):
+    """Inject one ``--inject-fault`` kind mid-stream and verify the stack
+    handles it. Immediate kinds (rejected swaps, snapshot fallback, query
+    hardening) are checked here; deferred kinds (poisoned moments, a
+    refresh exception) hand back a poisoned stream / failing refresh_fn
+    plus a check to run after the cycle's supervised refresh. Returns
+    ``(stream, refresh_fn, deferred_check)``; any mishandling exits 1."""
+    eng = guarded.engine
+    print(f"  -- injecting fault: {kind}")
+    if kind == "nan-moments":
+        def check(rep):
+            if rep.outcome != "degraded":
+                _drill_fail("poisoned moments were not degraded "
+                            f"(outcome={rep.outcome})")
+            if lifecycle.nonfinite_leaves(eng.state):
+                _drill_fail("engine is serving non-finite state")
+            print(f"  drill: refresh degraded after {rep.attempts} attempts "
+                  "(still serving last-known-good) -> recovering")
+        return faults.nan_moments(stream), streaming.refresh, check
+    if kind == "refresh-exception":
+        fn = faults.failing(streaming.refresh, n_failures=1)
+
+        def check(rep):
+            if rep.outcome != "ok" or rep.attempts < 2:
+                _drill_fail("retry did not absorb the injected exception "
+                            f"(outcome={rep.outcome} attempts={rep.attempts})")
+            print(f"  drill PASS: refresh-exception absorbed on attempt "
+                  f"{rep.attempts} (escalated={rep.escalated})")
+        return stream, fn, check
+    # immediate kinds: verified against a pre-fault result set
+    before = guarded.submit(obs)
+    if kind in ("corrupt-scorer", "scramble-scorer"):
+        bad = (faults.corrupt_scorer_leaf if kind == "corrupt-scorer"
+               else faults.scramble_scorer_leaf)(eng.state)
+        want = "non-finite" if kind == "corrupt-scorer" else "canary-overlap"
+        v0, s0 = guarded.version, eng.n_swaps
+        try:
+            guarded.swap(bad)
+            _drill_fail("corrupted state was accepted")
+        except lifecycle.SwapRejected as e:
+            if e.reason != want:
+                _drill_fail(f"rejected for {e.reason!r}, expected {want!r}")
+        if (guarded.version, eng.n_swaps) != (v0, s0):
+            _drill_fail("rejected swap mutated the engine")
+        if not np.array_equal(guarded.submit(obs), before):
+            _drill_fail("results changed across a rejected swap")
+        print(f"  drill PASS: {kind} rejected ({want}), "
+              "results bit-identical")
+    elif kind == "truncated-snapshot":
+        d = snap_dir or tempfile.mkdtemp(prefix="snap-drill-")
+        lifecycle.snapshot(d, eng.state, stream, meta={"drill": 0})
+        lifecycle.snapshot(d, eng.state, stream, meta={"drill": 1})
+        steps = checkpoint.available_steps(d)
+        faults.truncate_snapshot(d, what="manifest")
+        serving, _, got, meta = lifecycle.restore(d, eng.state, stream)
+        if got != steps[-2] or meta.get("drill") != 0:
+            _drill_fail(f"restore did not fall back (got step {got})")
+        lifecycle.restore_into(guarded, serving)
+        if not np.array_equal(guarded.submit(obs), before):
+            _drill_fail("restored state is not bit-identical")
+        print(f"  drill PASS: truncated step {steps[-1]} fell back to "
+              f"step {got}, restored results bit-identical")
+    elif kind == "poison-queries":
+        res = guarded.submit(faults.poison_queries(obs))
+        if not (res[0] == -1).all():
+            _drill_fail("poisoned row returned fabricated ids")
+        if not np.array_equal(res[1:], before[1:]):
+            _drill_fail("poisoned row contaminated its batch")
+        print("  drill PASS: poisoned row sanitized to -1, "
+              "batch uncontaminated")
+    elif kind == "wrong-dim-queries":
+        try:
+            guarded.submit(faults.wrong_dim_queries(obs))
+            _drill_fail("wrong-dimensionality batch was accepted")
+        except ValueError as e:
+            print(f"  drill PASS: wrong-dim batch refused ({e})")
+    else:
+        raise SystemExit(f"unknown fault kind {kind!r}")
+    return stream, streaming.refresh, None
+
+
 def run_stream(args):
     """Section 3.2 lifecycle under live traffic: serve drifted queries,
     observe them into K_Q, insert rows, refresh, hot-swap -- one compiled
-    executable throughout."""
+    executable throughout, every swap guarded and every refresh
+    supervised (see module docstring)."""
     n0 = int(args.n * 0.7)
     step = (args.n - n0) // args.cycles
     ds = vectors.make_dataset("serve-stream", n=args.n, d=args.dim,
@@ -94,11 +205,14 @@ def run_stream(args):
     # live traffic below is OOD -- the drift the refreshes adapt to
     q_init = np.asarray(X)[rng.integers(0, n0, 1024)] \
         + 0.1 * rng.standard_normal((1024, args.dim)).astype(np.float32)
-    if args.mode.startswith("sphering"):
-        model = lvs.fit(jnp.asarray(q_init), X[:n0], args.d)
-    else:
-        model = gv.fit(jax.random.PRNGKey(0), jnp.asarray(q_init), X[:n0],
-                       c=args.clusters, d=args.d)
+    restoring = False
+    if args.restore:
+        if not args.snapshot_dir:
+            raise SystemExit("--restore needs --snapshot-dir")
+        restoring = bool(checkpoint.available_steps(args.snapshot_dir))
+        if not restoring:
+            print(f"no snapshots under {args.snapshot_dir}; cold start")
+    model = _stream_model(args, q_init, X, n0, template=restoring)
     artifacts = streaming.build_streaming_artifacts(
         args.mode, X[:n0], model, capacity=args.n, sort_block=256,
         slack_blocks=2)
@@ -119,45 +233,105 @@ def run_stream(args):
         index = ivf.with_list_slack(index, slack)
         if args.reduced_probe:
             index = ivf.with_reduced_centers(index, artifacts.scorer, model)
-    engine = ServingEngine(msearch.make_state(artifacts, index=index),
-                           k=10, kappa=args.kappa, batch_size=args.batch,
-                           dim=args.dim)
-    stream = streaming.init_from_artifacts(artifacts, q_init,
-                                           refresh_every=step)
+    serving = msearch.make_state(artifacts, index=index)
+    stream, cycle0 = None, 0
+    if restoring:
+        # templates above supplied STRUCTURE; leaves come from the snapshot
+        serving, stream, snap_step, meta = lifecycle.restore(
+            args.snapshot_dir, serving,
+            lifecycle.template_stream(model, refresh_every=step))
+        cycle0 = int(meta.get("cycle", -1)) + 1
+        print(f"restored snapshot step {snap_step} -> resuming at cycle "
+              f"{cycle0} (version {int(np.asarray(serving.version))}, "
+              "no refit)")
+    engine = ServingEngine(serving, k=10, kappa=args.kappa,
+                           batch_size=args.batch, dim=args.dim)
+    guarded = lifecycle.GuardedEngine(engine, canary_queries=QT[:args.batch],
+                                      min_overlap=args.min_overlap)
+    supervisor = lifecycle.RefreshSupervisor(guarded)
+    if stream is None:
+        stream = streaming.init_from_artifacts(artifacts, q_init,
+                                               refresh_every=step)
     print(f"stream mode={args.mode} index={args.index} n0={n0} "
           f"capacity={args.n} D={args.dim} d={args.d} "
-          f"cycles={args.cycles} inserts/cycle={step}")
-    for cycle in range(args.cycles):
+          f"cycles={args.cycles} inserts/cycle={step} "
+          f"guard(min_overlap={args.min_overlap})")
+    drill_cycle = -1
+    if args.inject_fault:
+        if args.inject_fault == "nan-moments" and args.cycles - cycle0 < 2:
+            raise SystemExit("--inject-fault nan-moments needs >= 2 cycles "
+                             "(degrade, then the recovered swap)")
+        drill_cycle = max(cycle0, min(args.cycles // 2, args.cycles - 2))
+    for cycle in range(cycle0, args.cycles):
         obs = QT[(cycle * args.batch) % len(QT):][:args.batch]
-        live_idx = np.nonzero(streaming.live_mask(engine.state.artifacts))[0]
-        served = engine.submit(obs)           # live traffic keeps flowing
+        refresh_fn, deferred = streaming.refresh, None
+        if cycle == drill_cycle:
+            stream, refresh_fn, deferred = _fault_drill(
+                args.inject_fault, guarded, supervisor, stream, obs,
+                args.snapshot_dir)
+        live_idx = np.nonzero(streaming.live_mask(guarded.state.artifacts))[0]
+        served = guarded.submit(obs)          # live traffic keeps flowing
+        supervisor.note_queries(obs)
         gt = live_idx[vectors.exact_topk(
-            obs, np.asarray(engine.state.artifacts.x_full)[live_idx], 10)]
+            obs, np.asarray(guarded.state.artifacts.x_full)[live_idx], 10)]
         rec = float(metrics.recall_at_k(jnp.asarray(served),
                                         jnp.asarray(gt)))
         stream = streaming.observe_queries(stream, jnp.asarray(obs))
-        rows = X[n0 + cycle * step: n0 + (cycle + 1) * step]
-        arts2, new_ids = streaming.insert_rows(engine.state.artifacts, rows)
-        stream = streaming.insert(stream, rows)
-        state2 = engine.state._replace(artifacts=arts2)
-        if index is not None:
-            state2 = state2._replace(
-                index=ivf.insert_ids(state2.index, rows, new_ids))
-        engine.swap(state2)
-        stream = streaming.refresh(stream)
-        engine.swap(streaming.refresh_state(engine.state, stream,
-                                            source=args.refresh_source))
+        # the next unconsumed slice of X -- indexed off the LIVE count, not
+        # the cycle number, so a restored run (possibly with a different
+        # --cycles) continues exactly where the snapshot's store left off
+        rows = X[live_idx.size: min(live_idx.size + step, args.n)]
+        if rows.shape[0]:
+            arts2, new_ids = streaming.insert_rows(guarded.state.artifacts,
+                                                   rows)
+            stream = streaming.insert(stream, rows)
+            state2 = guarded.state._replace(artifacts=arts2)
+            if index is not None:
+                state2 = state2._replace(
+                    index=ivf.insert_ids(state2.index, rows, new_ids))
+            guarded.swap(state2)
+        stream, rep = supervisor.refresh_and_swap(
+            stream, source=args.refresh_source, refresh_fn=refresh_fn)
+        if deferred is not None:
+            deferred(rep)
+        if rep.outcome == "degraded":
+            # keep serving stale-but-valid; rebuild the moments from the
+            # last-known-good store + retained queries for the next cycle
+            stream = supervisor.recover(stream)
+        bad = lifecycle.nonfinite_leaves(guarded.state)
+        if bad:
+            raise SystemExit(f"SERVE INVARIANT VIOLATED: non-finite leaves "
+                             f"in served state: {bad[:4]}")
         print(f"  cycle {cycle}: served {served.shape[0]} queries "
               f"recall@10={rec:.3f} live_rows="
-              f"{int(streaming.live_mask(engine.state.artifacts).sum())} "
-              f"version={engine.version} compiles={engine.n_compiles} "
+              f"{int(streaming.live_mask(guarded.state.artifacts).sum())} "
+              f"version={guarded.version} compiles={guarded.n_compiles} "
+              f"refresh={rep.outcome}/{rep.source} "
               f"swap_p50={np.median(engine.stats.swap_ms):.2f}ms")
+        if args.snapshot_dir:
+            lifecycle.snapshot(args.snapshot_dir, guarded.state, stream,
+                               meta={"cycle": cycle})
+    if args.inject_fault == "nan-moments":
+        if supervisor.n_degraded < 1 or supervisor.n_recoveries < 1:
+            _drill_fail("degrade/recover cycle did not complete")
+        if supervisor.reports[-1].outcome != "ok":
+            _drill_fail("post-recovery refresh did not swap")
+        print("  drill PASS: nan-moments -> degraded -> recovered -> "
+              "swapped")
     s = engine.stats
+    h = supervisor
     print(f"QPS={s.qps:.0f} p50={s.percentile_ms(50):.1f}ms "
           f"p99={s.percentile_ms(99):.1f}ms "
           f"swaps={engine.n_swaps} compiles={engine.n_compiles} "
           f"(zero recompiles after warmup: "
           f"{engine.n_compiles in (None, 1)})")
+    print(f"guard: accepted={guarded.health.accepted} "
+          f"rejected={guarded.health.rejected} "
+          f"rollbacks={guarded.health.rollbacks} "
+          f"last_overlap={guarded.health.last_overlap:.3f} | "
+          f"supervisor: refreshes={h.n_refreshes} retries={h.n_retries} "
+          f"escalations={h.n_escalations} degraded={h.n_degraded} "
+          f"recoveries={h.n_recoveries}")
 
 
 def main():
@@ -204,6 +378,22 @@ def main():
                     choices=["stored", "full"],
                     help="refresh via Eq. 12 over stored vectors or exact "
                          "re-encode from the rerank store")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="--stream: persist ServingState + StreamingState "
+                         "here after every cycle (atomic manifest steps)")
+    ap.add_argument("--restore", action="store_true",
+                    help="--stream: resume from the newest restorable "
+                         "snapshot in --snapshot-dir (template model, no "
+                         "refit); corrupted steps fall back to older ones")
+    ap.add_argument("--min-overlap", type=float, default=0.3,
+                    help="guarded-swap canary: reject a candidate whose "
+                         "pinned-battery top-k overlap drops below this "
+                         "(0 disables the canary)")
+    ap.add_argument("--inject-fault", default=None,
+                    choices=list(faults.FAULTS),
+                    help="--stream: drill one fault kind mid-stream and "
+                         "verify fail -> degrade -> recover -> swap "
+                         "(exits non-zero on mishandling)")
     args = ap.parse_args()
 
     if args.stream:
@@ -212,6 +402,9 @@ def main():
                              "single-device index")
         run_stream(args)
         return
+    if args.snapshot_dir or args.restore or args.inject_fault:
+        raise SystemExit("--snapshot-dir/--restore/--inject-fault are "
+                         "lifecycle flags: they need --stream")
 
     ds = vectors.make_dataset("serve", n=args.n, d=args.dim, n_queries=512,
                               ood=True, seed=0)

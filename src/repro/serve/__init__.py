@@ -1,4 +1,6 @@
-"""Serving layer: batched search engine + recsys retrieval + LM decode."""
-from repro.serve import decode, engine, retrieval
+"""Serving layer: batched search engine + fault-tolerant lifecycle
+(guarded swaps / snapshot-restore / refresh supervision) + fault
+injectors + recsys retrieval + LM decode."""
+from repro.serve import decode, engine, faults, lifecycle, retrieval
 
-__all__ = ["decode", "engine", "retrieval"]
+__all__ = ["decode", "engine", "faults", "lifecycle", "retrieval"]

@@ -17,10 +17,11 @@ system.
 """
 from __future__ import annotations
 
+import collections
 import functools
 import time
-from dataclasses import dataclass, field
-from typing import List, Optional
+from dataclasses import dataclass
+from typing import Deque, Optional
 
 import jax
 import jax.numpy as jnp
@@ -63,18 +64,35 @@ def make_search_fn(artifacts, k: int, kappa: int, block: int = 4096,
 
 @dataclass
 class ServeStats:
+    """Serving counters. ``latencies_ms`` / ``swap_ms`` are RING BUFFERS
+    (``deque(maxlen=window)``): a long-running engine sees millions of
+    batches, and an unbounded list would both grow without limit and
+    freeze the percentiles on ancient history -- the window keeps memory
+    flat and the p50/p99 a moving view of the recent ``window`` batches.
+    The scalar counters (``n_queries``/``n_batches``/``total_s``) remain
+    lifetime totals."""
+
     n_queries: int = 0
     n_batches: int = 0
+    n_sanitized: int = 0          # non-finite query rows zeroed out
     total_s: float = 0.0
-    latencies_ms: List[float] = field(default_factory=list)
-    swap_ms: List[float] = field(default_factory=list)
+    window: int = 8192
+    latencies_ms: Optional[Deque[float]] = None
+    swap_ms: Optional[Deque[float]] = None
+
+    def __post_init__(self):
+        if self.latencies_ms is None:
+            self.latencies_ms = collections.deque(maxlen=self.window)
+        if self.swap_ms is None:
+            self.swap_ms = collections.deque(maxlen=self.window)
 
     @property
     def qps(self) -> float:
         return self.n_queries / self.total_s if self.total_s else 0.0
 
     def percentile_ms(self, p: float) -> float:
-        return float(np.percentile(self.latencies_ms, p)) \
+        return float(np.percentile(np.asarray(self.latencies_ms,
+                                              np.float64), p)) \
             if self.latencies_ms else 0.0
 
 
@@ -99,14 +117,16 @@ class ServingEngine:
     """
 
     def __init__(self, state: msearch.ServingState, k: int, kappa: int,
-                 batch_size: int, dim: int, donate: bool = False):
+                 batch_size: int, dim: int, donate: bool = False,
+                 stats_window: int = 8192):
         if donate and jax.default_backend() == "cpu":
             donate = False      # not implemented on CPU; avoid the warning
         self.k = k
         self.kappa = kappa
         self.batch_size = batch_size
         self.dim = dim
-        self.stats = ServeStats()
+        self.donate = donate
+        self.stats = ServeStats(window=stats_window)
         self.state = state
         self.n_swaps = 0
         self._version0 = int(state.version)
@@ -128,14 +148,11 @@ class ServingEngine:
         cache_size = getattr(self._fn, "_cache_size", None)
         return cache_size() if cache_size is not None else None
 
-    def swap(self, state: msearch.ServingState) -> None:
-        """Hot-swap the serving state: zero recompiles, by construction.
-
-        The new state must match the installed one's treedef (same scorer /
-        index classes, same static index config) and leaf shapes/dtypes --
-        exactly the invariants ``streaming.refresh_state`` preserves. A
-        mismatch raises instead of silently recompiling.
-        """
+    def _check_swap_compatible(self, state: msearch.ServingState) -> None:
+        """Raise ``ValueError`` unless ``state`` would reuse the compiled
+        step (same treedef, same leaf shapes/dtypes). Pure check -- never
+        mutates the engine; ``swap`` and the lifecycle layer's guarded
+        swap both run it before touching anything."""
         old_def = jax.tree_util.tree_structure(self.state)
         new_def = jax.tree_util.tree_structure(state)
         if old_def != new_def:
@@ -151,6 +168,21 @@ class ServingEngine:
                 raise ValueError(
                     f"swap would recompile: leaf {i} changed aval "
                     f"{o_aval} -> {n_aval}")
+
+    def swap(self, state: msearch.ServingState) -> None:
+        """Hot-swap the serving state: zero recompiles, by construction.
+
+        The new state must match the installed one's treedef (same scorer /
+        index classes, same static index config) and leaf shapes/dtypes --
+        exactly the invariants ``streaming.refresh_state`` preserves. A
+        mismatch raises BEFORE any engine field changes (``state`` /
+        ``n_swaps`` are untouched on every rejection path) instead of
+        silently recompiling. For semantic validation on top of the
+        structural contract -- non-finite scans, canary batteries,
+        rollback -- wrap the engine in
+        :class:`repro.serve.lifecycle.GuardedEngine`.
+        """
+        self._check_swap_compatible(state)
         t0 = time.perf_counter()
         # host-side generation counter -> device scalar (a device_put, not
         # a compiled add: swaps never compile anything, not even once)
@@ -160,7 +192,33 @@ class ServingEngine:
         self.stats.swap_ms.append((time.perf_counter() - t0) * 1e3)
 
     def submit(self, queries: np.ndarray) -> np.ndarray:
-        """Run all queries through fixed-size batches (pad the tail)."""
+        """Run all queries through fixed-size batches (pad the tail).
+
+        Input hardening: an empty batch returns a ``(0, k)`` int32 array
+        (nothing to concatenate); a wrong-dimensionality / non-numeric
+        batch raises a clear ``ValueError`` instead of surfacing as an
+        XLA shape error from inside the compiled step; rows containing
+        non-finite values are zeroed before batching -- so one poisoned
+        row can never contaminate the rows sharing its padded batch --
+        and reported as all ``-1`` ids (counted in ``stats.n_sanitized``).
+        """
+        queries = np.asarray(queries)
+        if queries.size == 0 and queries.ndim <= 2:
+            return np.zeros((0, self.k), np.int32)
+        if queries.ndim != 2 or queries.shape[1] != self.dim:
+            raise ValueError(
+                f"queries must be a (n, {self.dim}) array; got shape "
+                f"{queries.shape}")
+        if not (np.issubdtype(queries.dtype, np.floating)
+                or np.issubdtype(queries.dtype, np.integer)):
+            raise ValueError(
+                f"queries must be real-valued (float or int), got dtype "
+                f"{queries.dtype}")
+        queries = queries.astype(np.float32, copy=False)
+        bad_rows = ~np.isfinite(queries).all(axis=1)
+        if bad_rows.any():
+            queries = np.where(bad_rows[:, None], np.float32(0), queries)
+            self.stats.n_sanitized += int(bad_rows.sum())
         out = []
         n = queries.shape[0]
         for s in range(0, n, self.batch_size):
@@ -178,4 +236,7 @@ class ServingEngine:
             self.stats.total_s += dt
             self.stats.latencies_ms.append(dt * 1e3)
             out.append(np.asarray(ids)[: self.batch_size - pad])
-        return np.concatenate(out, axis=0)
+        result = np.concatenate(out, axis=0)
+        if bad_rows.any():
+            result[bad_rows] = -1      # sanitized rows: no fabricated hits
+        return result

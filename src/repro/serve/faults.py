@@ -1,0 +1,150 @@
+"""Deterministic fault injectors for the serving lifecycle.
+
+Each injector produces exactly the corruption a streamed serving stack
+meets in production -- non-finite moments from a poisoned query batch, a
+corrupted scorer leaf, an exception mid-refresh, a truncated snapshot, a
+poisoned or mis-shaped query batch -- as a pure function of its inputs
+(plus an explicit seed where randomness is involved), so the tier-1
+recovery tests and the ``serving_faults`` bench rows replay bit-identical
+failures. ``FAULTS`` names the kinds ``launch/serve.py --inject-fault``
+can drill end-to-end.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import search as msearch
+from repro.core import streaming
+from repro.train import checkpoint
+
+__all__ = ["FAULTS", "nan_moments", "corrupt_scorer_leaf",
+           "scramble_scorer_leaf", "failing", "truncate_snapshot",
+           "poison_queries", "wrong_dim_queries"]
+
+# the drill-able kinds (launch/serve.py --inject-fault <kind>)
+FAULTS = ("nan-moments", "corrupt-scorer", "scramble-scorer",
+          "refresh-exception", "truncated-snapshot", "poison-queries",
+          "wrong-dim-queries")
+
+
+def nan_moments(stream: streaming.StreamingState,
+                n: int = 4) -> streaming.StreamingState:
+    """Poison the first ``n`` entries of K_X with NaN -- what a drifted
+    batch with non-finite rows does to the Eq. 11 rank-1 updates. Every
+    later ``refresh`` fits a non-finite model from these moments."""
+    flat = jnp.ravel(stream.k_x).at[:n].set(jnp.nan)
+    return stream._replace(k_x=flat.reshape(stream.k_x.shape))
+
+
+def _scorer_leaves(scorer):
+    leaves, treedef = jax.tree_util.tree_flatten(scorer)
+    return leaves, treedef
+
+
+def _replace_leaf(state: msearch.ServingState, idx: int, leaf):
+    leaves, treedef = _scorer_leaves(state.artifacts.scorer)
+    leaves[idx] = leaf
+    arts = state.artifacts._replace(scorer=treedef.unflatten(leaves))
+    return state._replace(artifacts=arts)
+
+
+def corrupt_scorer_leaf(state: msearch.ServingState, n: int = 8,
+                        value: float = float("nan")
+                        ) -> msearch.ServingState:
+    """Overwrite the first ``n`` entries of the scorer's largest float
+    leaf with ``value`` (NaN by default): the candidate a guarded swap's
+    finite scan must refuse."""
+    leaves, _ = _scorer_leaves(state.artifacts.scorer)
+    floats = [i for i, lf in enumerate(leaves)
+              if hasattr(lf, "dtype") and jnp.issubdtype(lf.dtype,
+                                                         jnp.inexact)]
+    if not floats:
+        raise ValueError("scorer has no float leaves to corrupt")
+    idx = max(floats, key=lambda i: np.size(leaves[i]))
+    lf = jnp.asarray(leaves[idx])
+    bad = jnp.ravel(lf).at[:n].set(value).reshape(lf.shape)
+    return _replace_leaf(state, idx, bad)
+
+
+def scramble_scorer_leaf(state: msearch.ServingState) -> msearch.ServingState:
+    """Roll the rows of the scorer's largest >= 2-d leaf by half the
+    store: every value stays FINITE (the non-finite scan passes) but the
+    code/row <-> id mapping is garbage -- only the canary battery can
+    catch this one."""
+    leaves, _ = _scorer_leaves(state.artifacts.scorer)
+    wide = [i for i, lf in enumerate(leaves)
+            if hasattr(lf, "ndim") and lf.ndim >= 2]
+    if not wide:
+        raise ValueError("scorer has no >=2-d leaves to scramble")
+    idx = max(wide, key=lambda i: np.size(leaves[i]))
+    lf = jnp.asarray(leaves[idx])
+    return _replace_leaf(state, idx, jnp.roll(lf, lf.shape[0] // 2, axis=0))
+
+
+class failing:
+    """Wrap ``fn`` so its first ``n_failures`` calls raise (then it
+    delegates): the exception-mid-refresh injector for the supervisor's
+    retry path. Exposes ``calls`` / ``failures`` counters."""
+
+    def __init__(self, fn, n_failures: int = 1,
+                 exc: type = RuntimeError):
+        self.fn = fn
+        self.n_failures = n_failures
+        self.exc = exc
+        self.calls = 0
+        self.failures = 0
+
+    def __call__(self, *args, **kwargs):
+        self.calls += 1
+        if self.failures < self.n_failures:
+            self.failures += 1
+            raise self.exc(
+                f"injected refresh failure {self.failures}/{self.n_failures}")
+        return self.fn(*args, **kwargs)
+
+
+def truncate_snapshot(snap_dir: str, step: Optional[int] = None,
+                      what: str = "leaf") -> str:
+    """Corrupt a durable snapshot step in place: halve its manifest
+    (``what="manifest"`` -- undecodable json) or its largest leaf file
+    (``what="leaf"`` -- ``np.load`` fails short). Returns the truncated
+    path; ``lifecycle.restore`` must fall back to the previous step."""
+    steps = checkpoint.available_steps(snap_dir)
+    if not steps:
+        raise FileNotFoundError(f"no snapshot steps under {snap_dir}")
+    step = steps[-1] if step is None else step
+    d = os.path.join(snap_dir, f"step_{step:08d}")
+    if what == "manifest":
+        path = os.path.join(d, "manifest.json")
+    elif what == "leaf":
+        npys = [os.path.join(d, f) for f in os.listdir(d)
+                if f.endswith(".npy")]
+        path = max(npys, key=os.path.getsize)
+    else:
+        raise ValueError(f"unknown truncation target {what!r}")
+    with open(path, "rb") as f:
+        data = f.read()
+    with open(path, "wb") as f:
+        f.write(data[: len(data) // 2])
+    return path
+
+
+def poison_queries(queries: np.ndarray, rows: Sequence[int] = (0,),
+                   value: float = float("nan")) -> np.ndarray:
+    """A copy of ``queries`` with ``value`` (NaN/inf) planted in the
+    marked rows -- the poisoned batch ``ServingEngine.submit`` must
+    sanitize without contaminating the rows sharing its padded batch."""
+    q = np.array(queries, np.float32, copy=True)
+    q[list(rows), 0] = value
+    return q
+
+
+def wrong_dim_queries(queries: np.ndarray) -> np.ndarray:
+    """Drop the last feature: the wrong-dimensionality batch that must
+    raise a clear ``ValueError`` instead of an XLA shape error."""
+    return np.asarray(queries)[:, :-1]

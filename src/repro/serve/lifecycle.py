@@ -1,0 +1,510 @@
+"""Fault-tolerant serving lifecycle over the state-passing engine.
+
+PR 4 made ``ServingEngine.swap`` structurally safe (same treedef, same leaf
+avals => zero recompiles) but SEMANTICALLY blind: it installs any
+compatible state, including one full of NaNs from a poisoned moment
+update or a singular Eq. 12 solve. This module adds the three layers a
+streamed index needs to stay up:
+
+* :class:`GuardedEngine` -- guarded swaps. Before a candidate state is
+  installed it is (1) treedef/aval-checked (the engine's own contract, run
+  FIRST so nothing below can trigger a recompile), (2) version-checked
+  (monotonic: a stale candidate derived from an older generation is
+  refused), (3) scanned for non-finite leaves, and (4) canary-checked: a
+  pinned query battery runs through the candidate via the engine's
+  ALREADY-COMPILED step (same treedef => zero recompiles) and the swap is
+  rejected if its top-k overlap against the installed state collapses.
+  Every rejection raises :class:`SwapRejected` BEFORE any engine field is
+  touched; the previously installed state is retained so ``rollback()``
+  restores it -- bit-identical results -- instantly.
+
+* ``snapshot`` / ``restore`` -- persistence of the ``ServingState`` +
+  ``StreamingState`` pair through :mod:`repro.train.checkpoint`'s atomic
+  manifest-driven machinery (host-numpy leaves, one file per leaf,
+  ``.tmp`` + rename). A restarted process rebuilds the pytree STRUCTURE
+  from its launch flags (``template_model`` -- no refit) and restores the
+  leaves into it; truncated or corrupted snapshots are detected (manifest
+  json errors, missing/short ``.npy`` files) and restore falls back to
+  the previous durable step.
+
+* :class:`RefreshSupervisor` -- the streaming refresh loop as a
+  supervised operation: retry with exponential backoff, escalation from
+  ``source="stored"`` (Eq. 12) to ``source="full"`` re-encode when the
+  transition solve is ill-conditioned (or after a failed attempt), and
+  graceful degradation -- on persistent failure the engine KEEPS SERVING
+  the stale-but-valid state and reports it, rather than crashing or
+  installing garbage. ``recover`` rebuilds the moments from the
+  last-known-good store + a retained query window, closing the
+  fail -> degrade -> recover -> swap loop.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import search as msearch
+from repro.core import streaming
+from repro.core.gleanvec import GleanVecModel
+from repro.core.leanvec_sphering import SpheringModel
+from repro.serve.engine import ServingEngine
+from repro.train import checkpoint
+
+__all__ = ["SwapRejected", "GuardStats", "GuardedEngine", "RefreshReport",
+           "RefreshSupervisor", "snapshot", "restore", "restore_into",
+           "nonfinite_leaves", "template_model", "template_stream"]
+
+
+class SwapRejected(RuntimeError):
+    """A guarded swap refused the candidate state. ``reason`` is a stable
+    slug (``treedef`` / ``aval`` / ``stale-version`` / ``non-finite`` /
+    ``canary-overlap``); the engine's installed state is untouched."""
+
+    def __init__(self, reason: str, detail: str = ""):
+        self.reason = reason
+        super().__init__(f"swap rejected ({reason}): {detail}" if detail
+                         else f"swap rejected ({reason})")
+
+
+def nonfinite_leaves(tree) -> List[str]:
+    """Keypaths of float leaves containing any non-finite value.
+
+    Integer / bool leaves can't be non-finite and are skipped; the scan is
+    one ``all(isfinite)`` reduction per float leaf. An empty list is the
+    invariant every SERVED state maintains (healthy stores are finite by
+    construction: dead-slot masking uses finite ``NEG_INF`` sentinels and
+    the quantizer guards empty-cluster scales).
+    """
+    bad = []
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for kp, leaf in flat:
+        if leaf is None or not hasattr(leaf, "dtype"):
+            if isinstance(leaf, float) and not np.isfinite(leaf):
+                bad.append(jax.tree_util.keystr(kp))
+            continue
+        if jnp.issubdtype(leaf.dtype, jnp.inexact):
+            if not bool(jnp.all(jnp.isfinite(leaf))):
+                bad.append(jax.tree_util.keystr(kp))
+    return bad
+
+
+@dataclass
+class GuardStats:
+    """Observable health of a :class:`GuardedEngine`."""
+
+    accepted: int = 0
+    rejected: int = 0
+    rollbacks: int = 0
+    last_overlap: float = 1.0
+    rejections: collections.deque = field(
+        default_factory=lambda: collections.deque(maxlen=256))
+
+    def reject(self, reason: str):
+        self.rejected += 1
+        self.rejections.append(reason)
+
+
+class GuardedEngine:
+    """Validating wrapper around a (non-donating) :class:`ServingEngine`.
+
+    ``canary_queries`` (optional, (m, D) host array) pins the query
+    battery; ``min_overlap`` is the mean top-k overlap vs the installed
+    state below which a candidate is rejected (0 disables the canary even
+    when queries are given). The wrapper never mutates the engine on a
+    rejection -- ``engine.state``, ``n_swaps`` and the compiled executable
+    are exactly as before the call -- and keeps the previously installed
+    state as the rollback target.
+    """
+
+    def __init__(self, engine: ServingEngine,
+                 canary_queries: Optional[np.ndarray] = None,
+                 min_overlap: float = 0.3, check_finite: bool = True,
+                 monotonic: bool = True):
+        if engine.donate:
+            raise ValueError(
+                "GuardedEngine needs donate=False: canary validation runs "
+                "candidate states through the compiled step without "
+                "consuming their buffers")
+        self.engine = engine
+        self.min_overlap = float(min_overlap)
+        self.check_finite = check_finite
+        self.monotonic = monotonic
+        self.health = GuardStats()
+        self._prev: Optional[msearch.ServingState] = None
+        self._canary = None
+        self._canary_rows = 0
+        if canary_queries is not None and min_overlap > 0:
+            q = np.asarray(canary_queries, np.float32)
+            self._canary_rows = min(q.shape[0], engine.batch_size)
+            batch = np.zeros((engine.batch_size, engine.dim), np.float32)
+            batch[: self._canary_rows] = q[: self._canary_rows]
+            self._canary = jnp.asarray(batch)
+            self._canary_ref = self._run_canary(engine.state)
+
+    # -- delegation -------------------------------------------------------
+    @property
+    def state(self) -> msearch.ServingState:
+        return self.engine.state
+
+    @property
+    def version(self) -> int:
+        return self.engine.version
+
+    @property
+    def n_swaps(self) -> int:
+        return self.engine.n_swaps
+
+    @property
+    def n_compiles(self):
+        return self.engine.n_compiles
+
+    def submit(self, queries: np.ndarray) -> np.ndarray:
+        return self.engine.submit(queries)
+
+    # -- validation -------------------------------------------------------
+    def _run_canary(self, state: msearch.ServingState) -> np.ndarray:
+        """Top-k ids of the pinned battery under ``state`` via the
+        engine's compiled step (same treedef => cache hit, no compile)."""
+        ids, _ = self.engine._fn(self._canary, state)
+        return np.asarray(jax.block_until_ready(ids))[: self._canary_rows]
+
+    @staticmethod
+    def _overlap(a: np.ndarray, b: np.ndarray) -> float:
+        """Mean per-query fraction of shared ids between two (m, k)
+        result sets (-1 padding slots never count as shared)."""
+        hits = sum(np.intersect1d(ra[ra >= 0], rb[rb >= 0]).size
+                   for ra, rb in zip(a, b))
+        return hits / float(max(a.shape[0] * a.shape[1], 1))
+
+    def validate(self, state: msearch.ServingState,
+                 monotonic: Optional[bool] = None) -> Optional[np.ndarray]:
+        """Run every guard against ``state``; raises :class:`SwapRejected`
+        (engine untouched) or returns the candidate's canary result for
+        reuse by the caller."""
+        # structural check FIRST: nothing below may run a mismatched
+        # treedef through the compiled step (that would recompile)
+        try:
+            self.engine._check_swap_compatible(state)
+        except ValueError as e:
+            reason = "treedef" if "treedef" in str(e) else "aval"
+            self.health.reject(reason)
+            raise SwapRejected(reason, str(e)) from e
+        if (self.monotonic if monotonic is None else monotonic):
+            v_new = int(np.asarray(jax.device_get(state.version)))
+            v_old = int(np.asarray(jax.device_get(self.engine.state.version)))
+            if v_new < v_old:
+                self.health.reject("stale-version")
+                raise SwapRejected(
+                    "stale-version",
+                    f"candidate version {v_new} < installed {v_old}")
+        if self.check_finite:
+            bad = nonfinite_leaves(state)
+            if bad:
+                self.health.reject("non-finite")
+                raise SwapRejected("non-finite",
+                                   f"non-finite leaves: {bad[:4]}")
+        if self._canary is None:
+            return None
+        ids = self._run_canary(state)
+        overlap = self._overlap(ids, self._canary_ref)
+        self.health.last_overlap = overlap
+        if overlap < self.min_overlap:
+            self.health.reject("canary-overlap")
+            raise SwapRejected(
+                "canary-overlap",
+                f"canary top-k overlap {overlap:.3f} < {self.min_overlap}")
+        return ids
+
+    def _install(self, state: msearch.ServingState,
+                 canary_ids: Optional[np.ndarray]) -> None:
+        prev = self.engine.state
+        self.engine.swap(state)
+        self._prev = prev
+        if self._canary is not None:
+            # the candidate's battery result IS the new reference (the
+            # version leaf the engine rewrote doesn't affect search)
+            self._canary_ref = canary_ids
+        self.health.accepted += 1
+
+    def swap(self, state: msearch.ServingState) -> None:
+        """Guarded swap: validate (raising before any mutation), then
+        install; the displaced state becomes the rollback target."""
+        self._install(state, self.validate(state))
+
+    def rollback(self) -> msearch.ServingState:
+        """Reinstall the last-known-good state (the one displaced by the
+        most recent accepted swap): bit-identical search results, zero
+        recompiles, monotonically advancing version."""
+        if self._prev is None:
+            raise RuntimeError("no retained last-known-good state to "
+                               "roll back to")
+        good, self._prev = self._prev, None
+        self.engine.swap(good)
+        if self._canary is not None:
+            self._canary_ref = self._run_canary(self.engine.state)
+        self.health.rollbacks += 1
+        return self.engine.state
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / restore: ServingState + StreamingState through train.checkpoint.
+# ---------------------------------------------------------------------------
+
+
+def snapshot(snap_dir: str, serving: msearch.ServingState,
+             stream: Optional[streaming.StreamingState] = None,
+             step: Optional[int] = None, meta: Optional[dict] = None) -> str:
+    """Persist the serving + streaming pair atomically under ``snap_dir``.
+
+    ``step`` defaults to (latest durable step) + 1 so repeated snapshots
+    form the fallback chain ``restore`` walks backwards on corruption.
+    """
+    if step is None:
+        last = checkpoint.latest_step(snap_dir)
+        step = 0 if last is None else last + 1
+    meta = dict(meta or {})
+    meta["has_stream"] = stream is not None
+    return checkpoint.save(snap_dir, step,
+                           {"serving": serving, "stream": stream}, meta=meta)
+
+
+def restore(snap_dir: str, serving_template: msearch.ServingState,
+            stream_template: Optional[streaming.StreamingState] = None,
+            step: Optional[int] = None
+            ) -> Tuple[msearch.ServingState,
+                       Optional[streaming.StreamingState], int, dict]:
+    """Load the newest restorable snapshot into the templates' treedefs.
+
+    The templates supply STRUCTURE only (scorer/index classes + static
+    config from the launch flags; ``template_model`` builds one without a
+    refit) -- leaf shapes come from the snapshot (``strict_shapes=False``),
+    so layout-dependent shapes (sorted-mode padding) restore exactly even
+    when the template's throwaway encoding differs. A truncated manifest,
+    a short/missing leaf file, or any other per-step corruption falls
+    back to the previous durable step; raises ``FileNotFoundError`` when
+    no step is restorable.
+
+    Array leaves come back DEVICE-PUT (``jnp.asarray``), not host numpy:
+    jit keys host arrays differently from device arrays even at equal
+    avals, so a numpy-leaf state silently compiles a second executable --
+    exactly the recompile the whole restore path exists to avoid.
+    """
+    steps = checkpoint.available_steps(snap_dir)
+    if step is not None:
+        steps = [s for s in steps if s <= step]
+    if not steps:
+        raise FileNotFoundError(f"no snapshot steps under {snap_dir}")
+    template = {"serving": serving_template, "stream": stream_template}
+    errors = []
+    for s in reversed(steps):
+        try:
+            tree, got, meta = checkpoint.restore(snap_dir, template, step=s,
+                                                 strict_shapes=False)
+            tree = jax.tree.map(
+                lambda l: jnp.asarray(l) if isinstance(l, np.ndarray) else l,
+                tree)
+            return tree["serving"], tree["stream"], got, meta
+        except Exception as e:                   # corrupted step: fall back
+            errors.append(f"step {s}: {type(e).__name__}: {e}")
+    raise FileNotFoundError(
+        f"no restorable snapshot under {snap_dir}; tried {errors}")
+
+
+def restore_into(guarded: GuardedEngine,
+                 serving: msearch.ServingState) -> None:
+    """Install a restored state into a warm engine: validated like any
+    swap (finite scan + canary; monotonicity waived -- a restore may
+    legitimately rewind the generation clock), and the engine's version
+    counter is rebased so the clock CONTINUES from the snapshot's value
+    instead of restarting at warmup's."""
+    canary_ids = guarded.validate(serving, monotonic=False)
+    eng = guarded.engine
+    v = int(np.asarray(jax.device_get(serving.version)))
+    # after _install bumps n_swaps, version == snapshot version
+    eng._version0 = v - (eng.n_swaps + 1)
+    guarded._install(serving, canary_ids)
+
+
+# ---------------------------------------------------------------------------
+# Refresh supervision: retry + backoff, escalation, graceful degradation.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RefreshReport:
+    """What one supervised refresh attempt chain did."""
+
+    outcome: str                 # "ok" | "degraded"
+    source: str                  # refresh source actually used
+    attempts: int = 1
+    escalated: bool = False
+    condition: float = 0.0       # Eq. 12 denominator condition number
+    errors: List[str] = field(default_factory=list)
+    elapsed_s: float = 0.0
+
+
+class RefreshSupervisor:
+    """Supervises ``refresh -> refresh_state -> guarded swap``.
+
+    The escalation ladder per refresh: (1) the requested source -- but
+    ``"stored"`` is promoted to ``"full"`` up front when the Eq. 12
+    transition solve is ill-conditioned (``transition_condition`` above
+    ``cond_threshold``: a near-dead cluster's ``pinv`` would amplify
+    noise unboundedly); (2) on any failure, retry with exponential
+    backoff, escalating ``"stored"`` -> ``"full"``; (3) after
+    ``max_retries`` extra attempts, DEGRADE: the engine keeps serving the
+    last-known-good state, ``degraded`` is set, and the UN-refreshed
+    stream state is handed back so a later ``recover`` can rebuild the
+    moments from the still-valid store.
+    """
+
+    def __init__(self, guarded: GuardedEngine, max_retries: int = 2,
+                 backoff_s: float = 0.05, backoff_mult: float = 2.0,
+                 cond_threshold: float = 1e6, query_window: int = 4096,
+                 sleep=time.sleep):
+        self.guarded = guarded
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.backoff_mult = backoff_mult
+        self.cond_threshold = cond_threshold
+        self._sleep = sleep
+        self.degraded = False
+        self.n_refreshes = 0
+        self.n_degraded = 0
+        self.n_escalations = 0
+        self.n_retries = 0
+        self.n_recoveries = 0
+        self.reports: List[RefreshReport] = []
+        self._recent_q: collections.deque = collections.deque()
+        self._recent_rows = 0
+        self._query_window = query_window
+
+    def note_queries(self, queries: np.ndarray) -> None:
+        """Retain a bounded window of served queries for ``recover``."""
+        q = np.asarray(queries, np.float32)
+        q = q[np.isfinite(q).all(axis=1)]
+        if not q.size:
+            return
+        self._recent_q.append(q)
+        self._recent_rows += q.shape[0]
+        while self._recent_q and \
+                self._recent_rows - self._recent_q[0].shape[0] \
+                >= self._query_window:
+            self._recent_rows -= self._recent_q.popleft().shape[0]
+
+    def refresh_and_swap(self, stream: streaming.StreamingState,
+                         source: str = "stored", pending=None,
+                         refresh_fn=streaming.refresh
+                         ) -> Tuple[streaming.StreamingState, RefreshReport]:
+        """One supervised refresh. Returns ``(stream', report)``:
+        ``stream'`` is the refreshed state on success and the ORIGINAL
+        (so the moments survive for recovery) on degradation. The engine
+        is never left mid-mutation: a failed attempt changes nothing."""
+        self.n_refreshes += 1
+        t0 = time.perf_counter()
+        report = RefreshReport(outcome="degraded", source=source)
+        src, delay = source, self.backoff_s
+        for attempt in range(self.max_retries + 1):
+            report.attempts = attempt + 1
+            try:
+                new_stream = refresh_fn(stream)
+                use = src
+                if use == "stored":
+                    cond = streaming.transition_condition(new_stream)
+                    report.condition = cond
+                    if not cond < self.cond_threshold:   # inf/nan escalate
+                        use = "full"
+                        report.escalated = True
+                        self.n_escalations += 1
+                candidate = streaming.refresh_state(
+                    self.guarded.engine.state, new_stream, source=use,
+                    pending=pending)
+                self.guarded.swap(candidate)
+                report.outcome, report.source = "ok", use
+                report.elapsed_s = time.perf_counter() - t0
+                self.degraded = False
+                self.reports.append(report)
+                return new_stream, report
+            except Exception as e:       # noqa: BLE001 -- supervision point
+                report.errors.append(f"{type(e).__name__}: {e}")
+                if src == "stored":      # ladder: stored -> full -> degrade
+                    src = "full"
+                    report.escalated = True
+                    self.n_escalations += 1
+                if attempt < self.max_retries:
+                    self.n_retries += 1
+                    if delay > 0:
+                        self._sleep(delay)
+                    delay *= self.backoff_mult
+        # persistent failure: keep serving the stale-but-valid state
+        self.degraded = True
+        self.n_degraded += 1
+        report.elapsed_s = time.perf_counter() - t0
+        self.reports.append(report)
+        return stream, report
+
+    def recover(self, stream: streaming.StreamingState,
+                queries: Optional[np.ndarray] = None
+                ) -> streaming.StreamingState:
+        """Rebuild the streaming moments from the LAST-KNOWN-GOOD serving
+        store (live ``x_full`` rows under the currently served model) and
+        the retained query window -- the recovery path when the moments
+        themselves were poisoned. The next ``refresh_and_swap`` clears
+        ``degraded``."""
+        if queries is None:
+            if not self._recent_q:
+                raise ValueError("no retained queries to recover K_Q from; "
+                                 "pass queries= explicitly")
+            queries = np.concatenate(list(self._recent_q), axis=0)
+        fresh = streaming.init_from_artifacts(
+            self.guarded.engine.state.artifacts, jnp.asarray(queries),
+            refresh_every=int(np.asarray(stream.refresh_every)))
+        self.n_recoveries += 1
+        return fresh
+
+
+# ---------------------------------------------------------------------------
+# Restart templates: same treedef as a fit pipeline, without the fit.
+# ---------------------------------------------------------------------------
+
+
+def template_model(mode: str, dim: int, d: int, clusters: int = 8,
+                   seed: int = 0):
+    """A structurally complete DR model with placeholder weights: same
+    classes, same treedef as a fit one, NO training -- the restore path's
+    whole point is that a restarted engine resumes from snapshot leaves
+    instead of refitting. Row counts/shapes of artifacts built from it are
+    throwaways (``restore`` is shape-agnostic over templates)."""
+    if mode == "full":
+        return None
+    rng = np.random.default_rng(seed)
+    eye = jnp.eye(dim, dtype=jnp.float32)
+    if mode.startswith("sphering"):
+        a = jnp.asarray(rng.standard_normal((d, dim)), jnp.float32) * 0.1
+        return SpheringModel(a=a, b=a, p=a, w=eye, w_pinv=eye)
+    centers = rng.standard_normal((clusters, dim)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    ab = jnp.asarray(
+        rng.standard_normal((clusters, d, dim)), jnp.float32) * 0.1
+    return GleanVecModel(centers=jnp.asarray(centers), a=ab, b=ab, w=eye,
+                         w_pinv=eye)
+
+
+def template_stream(model, refresh_every: int = 1024
+                    ) -> streaming.StreamingState:
+    """Zero-moment :class:`StreamingState` template around ``model`` (same
+    treedef/leaf-set as a live one; leaves are restored over it)."""
+    dim = model.w.shape[0]
+    if isinstance(model, GleanVecModel):
+        k_x = jnp.zeros((model.n_clusters, dim, dim), jnp.float32)
+    else:
+        k_x = jnp.zeros((dim, dim), jnp.float32)
+    return streaming.StreamingState(
+        k_q=jnp.zeros((dim, dim), jnp.float32), k_x=k_x, model=model,
+        prev_bw=model.b, updates_since=jnp.zeros((), jnp.int32),
+        refresh_every=refresh_every)

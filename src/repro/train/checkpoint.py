@@ -21,7 +21,8 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "restore_distributed"]
+__all__ = ["save", "restore", "latest_step", "available_steps",
+           "restore_distributed"]
 
 
 def _flatten_with_paths(tree):
@@ -67,13 +68,34 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         return int(f.read().strip())
 
 
+def available_steps(ckpt_dir: str):
+    """Ascending list of durable step numbers (renamed ``step_<N>``
+    directories; ``.tmp`` partial writes are excluded). The fallback
+    chain a corrupted-snapshot restore walks backwards."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                steps.append(int(name[len("step_"):]))
+            except ValueError:
+                continue
+    return sorted(steps)
+
+
 def restore(ckpt_dir: str, target_tree: Any,
-            step: Optional[int] = None):
-    """Load into the structure of ``target_tree`` (shapes must match).
+            step: Optional[int] = None, strict_shapes: bool = True):
+    """Load into the structure of ``target_tree`` (shapes must match
+    unless ``strict_shapes=False`` -- then the template contributes the
+    TREEDEF only and leaf shapes come from the manifest, which is how
+    serving-layout templates with throwaway encodings restore).
 
     Returns (tree, step, meta). Leaves are host numpy; the caller
     device_puts them with the current mesh's shardings (see
-    ``restore_distributed``).
+    ``restore_distributed``). Template leaves that are python scalars
+    (static-ish ints riding a NamedTuple) come back as their original
+    python type, not 0-d arrays.
     """
     step = latest_step(ckpt_dir) if step is None else step
     if step is None:
@@ -83,15 +105,25 @@ def restore(ckpt_dir: str, target_tree: Any,
         manifest = json.load(f)
     by_path = {l["path"]: l for l in manifest["leaves"]}
     paths, leaves, treedef = _flatten_with_paths(target_tree)
+    missing = [p for p in paths if p not in by_path]
+    if missing:
+        raise ValueError(f"checkpoint is missing leaves {missing[:4]} "
+                         f"(of {len(missing)})")
     out = []
     for p, leaf in zip(paths, leaves):
         entry = by_path[p]
         arr = np.load(os.path.join(d, entry["file"]))
-        expect = tuple(np.shape(leaf))
-        if tuple(arr.shape) != expect:
-            raise ValueError(
-                f"checkpoint leaf {p} shape {arr.shape} != target {expect}")
-        out.append(arr)
+        if strict_shapes:
+            expect = tuple(np.shape(leaf))
+            if tuple(arr.shape) != expect:
+                raise ValueError(
+                    f"checkpoint leaf {p} shape {arr.shape} != target "
+                    f"{expect}")
+        if isinstance(leaf, (bool, int, float)) \
+                and not hasattr(leaf, "dtype"):
+            out.append(type(leaf)(arr))
+        else:
+            out.append(arr)
     return treedef.unflatten(out), manifest["step"], manifest["meta"]
 
 

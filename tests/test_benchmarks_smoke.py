@@ -163,3 +163,17 @@ def test_run_smoke_path(tmp_path):
             f"serving_stream/rebuild_swap-{mode}"]["recompiles"] >= 1
         assert by_name[f"serving_stream/recall-{mode}"]["recall10"] > 0.5
         assert by_name[f"serving_stream/steady-{mode}"]["qps"] > 0
+
+    # fault-tolerance section (declared rows: missing any fails the run
+    # before these asserts): rejected swaps leave results bit-identical,
+    # degradation keeps serving the stale-but-valid state at useful
+    # recall, and the corrupted-snapshot fallback restores w/o recompiles
+    for row in ("reject-nonfinite", "reject-canary"):
+        e = by_name[f"serving_stream/faults/{row}"]
+        assert e["swaps_rejected"] >= 1 and e["bitident"] == 1, e
+    rec = by_name["serving_stream/faults/recover-nan-moments"]
+    assert rec["degraded"] >= 1 and rec["outcome"] == "ok"
+    assert rec["recall_degraded"] > 0.5 and rec["recall_recovered"] > 0.5
+    fb = by_name["serving_stream/faults/restore-fallback"]
+    assert fb["fallback"] == 1 and fb["bitident"] == 1
+    assert fb["recompiles"] == 0

