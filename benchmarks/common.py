@@ -46,6 +46,17 @@ def dataset(name: str):
                                 seed=17)
 
 
+def rerank_traffic_bound(m: int, kappa: int, dim: int,
+                         bytes_per: int = 4) -> int:
+    """Lower bound on host->device rerank traffic for the two-level tier:
+    ``m`` queries each promote exactly ``kappa`` full-D candidate rows, so
+    a correct pipeline moves ``m * kappa * dim * bytes_per`` bytes -- a
+    function of the CANDIDATE set, not the ``n * dim * bytes_per`` store
+    size. Benches assert measured traffic stays within a small factor of
+    this bound (padding to the batch size is the only slack)."""
+    return int(m) * int(kappa) * int(dim) * int(bytes_per)
+
+
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall time in microseconds (post-compile)."""
     for _ in range(warmup):

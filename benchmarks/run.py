@@ -3,7 +3,8 @@
 Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit),
 writes them to results/bench.csv, and writes one machine-readable
 ``BENCH_<name>.json`` per bench group (ops/s, HBM bytes moved, recall@10,
-...) next to the CSV so the perf trajectory is diffable across PRs.
+...) next to the CSV -- mirrored to the repo root -- so the perf
+trajectory is diffable across PRs.
 
 ``--smoke`` shrinks the datasets and runs the search-path modules only
 (table1 + kernel micros) so the perf harness itself is exercisable in CI;
@@ -11,6 +12,7 @@ the numbers it prints characterize the harness, not the hardware.
 """
 import argparse
 import os
+import shutil
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -57,9 +59,17 @@ def main(argv=None) -> None:
             f.write("name,us_per_call,derived\n")
             f.write("\n".join(common.ROWS) + "\n")
         print(f"# wrote {len(common.ROWS)} rows to {out}")
+        # every BENCH_<name>.json also lands at the repo ROOT so the perf
+        # trajectory is visible without digging into results/
+        repo_root = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                                 ".."))
         for p in common.write_json_results(os.path.dirname(
                 os.path.abspath(out))):
             print(f"# wrote {p}")
+            dst = os.path.join(repo_root, os.path.basename(p))
+            if os.path.abspath(p) != dst:
+                shutil.copyfile(p, dst)
+                print(f"# wrote {dst}")
     finally:
         if args.smoke:    # restore for in-process callers (tests)
             common.BENCH_N, common.BENCH_QUERIES = saved

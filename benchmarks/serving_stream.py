@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import BENCH_QUERIES, BENCH_N, declare, emit, time_fn
+from benchmarks.common import (BENCH_QUERIES, BENCH_N, declare, emit,
+                               rerank_traffic_bound, time_fn)
 from repro.core import gleanvec as gv, metrics, streaming
 from repro.core import search as msearch
 from repro.data import vectors
@@ -26,6 +27,13 @@ from repro.serve import faults, lifecycle
 from repro.serve.engine import ServingEngine, make_search_fn
 
 MODES = ("gleanvec-int8", "gleanvec-int8-sorted")
+
+# Smoke-enforced ceiling on measured host<->HBM rerank traffic relative to
+# the m*kappa*D*4 lower bound (rerank_traffic_bound). The pipeline gathers
+# exactly kappa rows per PADDED query, so batch padding is the only slack;
+# 2x leaves room for a ragged final chunk without hiding an accidental
+# full-store promotion (which would be n/(m*kappa) ~ 20x+ over the bound).
+HOST_RERANK_MAX_RATIO = 2.0
 
 
 def _compile_count():
@@ -127,6 +135,81 @@ def run(cycles: int = 3, batch: int = 64):
              f"speedup={rebuild_us / max(swap_us, 1e-9):.0f}x")
 
     _run_faults(counter, batch=batch)
+    _run_host_rerank(counter, batch=batch)
+
+
+def _run_host_rerank(counter, batch: int = 32):
+    """``serving_stream/host_rerank/*``: the two-level memory hierarchy.
+    The same engine serves the same traffic twice -- full-D store in HBM
+    vs demoted to the host tier (double-buffered kappa-row prefetch) --
+    and the section asserts the hierarchy's three contracts: exact
+    (value, id) parity, zero recompiles during steady serving, and
+    measured host<->HBM traffic within HOST_RERANK_MAX_RATIO of the
+    m*kappa*D*4 bound. The qps_ratio is reported UNASSERTED: on CPU both
+    "tiers" are the same DRAM, so wall-clock parity is a harness check,
+    not the hardware signal."""
+    declare("serving_stream/host_rerank/steady",
+            "serving_stream/host_rerank/bytes")
+    n = min(BENCH_N, 4000)
+    dim, d, c = 128, 32, 8
+    n0 = int(n * 0.8)
+    ds = vectors.make_dataset("serving-hostrr", n=n, d=dim,
+                              n_queries=max(BENCH_QUERIES, 4 * batch),
+                              ood=True, seed=11)
+    X = jnp.asarray(ds.database)
+    QT = np.asarray(ds.queries_test)
+    rng = np.random.default_rng(0)
+    q_init = np.asarray(X)[rng.integers(0, n0, 512)] \
+        + 0.1 * rng.standard_normal((512, dim)).astype(np.float32)
+    model = gv.fit(jax.random.PRNGKey(0), jnp.asarray(q_init), X[:n0],
+                   c=c, d=d)
+    arts = streaming.build_streaming_artifacts(
+        "gleanvec-int8", X[:n0], model, capacity=n, sort_block=256,
+        slack_blocks=2)
+    arts_host = msearch.demote_rerank_tier(arts)
+
+    engines = {}
+    for tier, a in (("hbm", arts), ("host", arts_host)):
+        eng = ServingEngine(msearch.make_state(a), k=10, kappa=50,
+                            batch_size=batch, dim=dim)
+        eng.submit(QT[:batch])              # warmup: compile both stages
+        eng.stats.latencies_ms.clear()
+        eng.stats.n_queries = eng.stats.n_batches = 0
+        eng.stats.total_s = 0.0
+        eng.stats.host_bytes = eng.stats.host_bytes_lb = 0
+        engines[tier] = eng
+
+    # exact (value, id) parity on identical traffic, both tiers
+    ids_hbm = np.asarray(engines["hbm"].submit(QT[:2 * batch]))
+    ids_host = np.asarray(engines["host"].submit(QT[:2 * batch]))
+    if not np.array_equal(ids_hbm, ids_host):
+        raise AssertionError(
+            "host-tier rerank diverged from the all-HBM engine")
+
+    c0 = counter["n"]
+    t_hbm = time_fn(lambda: engines["hbm"].submit(QT[:4 * batch]))
+    t_host = time_fn(lambda: engines["host"].submit(QT[:4 * batch]))
+    recompiles = counter["n"] - c0
+    if recompiles:
+        raise AssertionError(
+            f"steady host-tier serving recompiled {recompiles}x")
+    s = engines["host"].stats
+    emit("serving_stream/host_rerank/steady", t_host / 4,
+         f"qps={s.qps:.0f};qps_ratio={t_hbm / max(t_host, 1e-9):.2f};"
+         f"p50_ms={s.percentile_ms(50):.2f};parity=1;"
+         f"prefetch_p50_ms={float(np.median(s.prefetch_ms)):.2f}")
+
+    # traffic accounting: measured bytes vs the m*kappa*D*4 bound
+    bound = rerank_traffic_bound(s.n_queries, engines["host"].kappa, dim)
+    ratio = s.host_bytes / max(bound, 1)
+    if ratio > HOST_RERANK_MAX_RATIO:
+        raise AssertionError(
+            f"host<->HBM rerank traffic {s.host_bytes}B exceeds "
+            f"{HOST_RERANK_MAX_RATIO}x the m*kappa*D*4 bound {bound}B")
+    emit("serving_stream/host_rerank/bytes", 0.0,
+         f"host_mb={s.host_bytes / 2**20:.2f};ratio={ratio:.2f};"
+         f"max_ratio={HOST_RERANK_MAX_RATIO};recompiles={recompiles};"
+         f"store_mb={n * dim * 4 / 2**20:.2f}")
 
 
 def _recall(engine, queries, k=10):

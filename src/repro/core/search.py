@@ -12,17 +12,22 @@ model types, so no isinstance dispatch remains anywhere on the search path.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import rerank_tier
 from repro.core import scorer as sc
 from repro.index.topk import NEG_INF
 
 __all__ = ["SearchArtifacts", "ServingState", "build_artifacts",
            "build_artifacts_sphering", "build_artifacts_gleanvec",
-           "make_state", "state_search", "multi_step_search", "rerank"]
+           "make_state", "state_search", "state_candidates",
+           "multi_step_search", "rerank", "rerank_candidates", "host_tier",
+           "demote_rerank_tier", "promote_rerank_tier"]
 
 
 class SearchArtifacts(NamedTuple):
@@ -126,6 +131,67 @@ def state_search(queries: jax.Array, state: ServingState, k: int,
                              kappa)
 
 
+def state_candidates(queries: jax.Array, state: ServingState,
+                     kappa: int) -> jax.Array:
+    """First stage of the two-level pipeline: the main (reduced-space)
+    search only, returning (m, kappa) ORIGINAL-id candidates and never
+    touching ``x_full``. Fully traceable even when the rerank tier lives
+    on host (the store is aux data with zero leaves), so this is the
+    function serving engines compile when ``host_tier(artifacts)`` is
+    set -- the host gather + :func:`rerank_candidates` run outside."""
+    scorer = state.artifacts.scorer
+    qstate = state.index.prepare_queries(scorer, queries)
+    _, candidates = state.index.candidates(qstate, scorer, kappa)
+    return candidates
+
+
+def host_tier(artifacts: SearchArtifacts):
+    """The artifacts' host-resident rerank store, or None when ``x_full``
+    is a regular device array (single-level hierarchy)."""
+    return rerank_tier.host_store(artifacts.x_full)
+
+
+def demote_rerank_tier(artifacts: SearchArtifacts,
+                       shards: int = 0) -> SearchArtifacts:
+    """Demote the (n, D) full-precision store to host memory (sharded when
+    ``shards > 0``), keeping the reduced codes -- the fine-scan working
+    set -- in device memory. See :mod:`repro.core.rerank_tier`."""
+    return artifacts._replace(
+        x_full=rerank_tier.demote(artifacts.x_full, shards=shards))
+
+
+def promote_rerank_tier(artifacts: SearchArtifacts) -> SearchArtifacts:
+    """Undo :func:`demote_rerank_tier` (materializes all n rows in HBM)."""
+    if host_tier(artifacts) is None:
+        return artifacts
+    return artifacts._replace(x_full=rerank_tier.promote(artifacts.x_full))
+
+
+def _rerank_math(q_full: jax.Array, cand_vecs: jax.Array,
+                 candidates: jax.Array, k: int) -> jax.Array:
+    """Tier-agnostic core of the rerank: exact top-k among the gathered
+    candidate rows. -1 candidate slots score NEG_INF, and ``top_k``'s
+    stable tie-break keeps real ids ahead of equal-scoring padding, so a
+    row with fewer than k live candidates pads its tail with -1 (never an
+    arbitrary id)."""
+    scores = jnp.einsum("mkd,md->mk", cand_vecs, q_full)
+    scores = jnp.where(candidates >= 0, scores, NEG_INF)
+    top = jax.lax.top_k(scores, k)[1]                    # (m, k)
+    return jnp.take_along_axis(candidates, top, axis=1)
+
+
+# The small second-stage program of the two-level pipeline: reranks the
+# kappa prefetched rows after they land on device. Compiles once per
+# (m, kappa, D, k) shape family and is shared by every engine/retrieval
+# surface (module-level cache).
+rerank_candidates = jax.jit(_rerank_math, static_argnames=("k",))
+
+
+def _rotate_queries(queries: jax.Array, artifacts: SearchArtifacts):
+    return queries if artifacts.rerank_a is None \
+        else queries @ artifacts.rerank_a.T
+
+
 def rerank(queries: jax.Array, artifacts: SearchArtifacts,
            candidates: jax.Array, k: int):
     """Postprocessing (Alg. 1 line 3): exact top-k among candidates.
@@ -133,15 +199,36 @@ def rerank(queries: jax.Array, artifacts: SearchArtifacts,
     ``candidates``: (m, kappa) ids; -1 entries (padded / unfilled slots
     from graph or sharded searches) never win. When x_full stores the
     rotated x' (Section 3.1), queries are rotated by ``rerank_a`` (Eq. 10).
+
+    Two placements of the full-precision store:
+
+    * device array (default): the gather happens in HBM and the whole
+      rerank is traceable -- it inlines into the one compiled
+      ``state_search``.
+    * host tier (:func:`demote_rerank_tier`): only the kappa candidate
+      rows per query cross host->device (``store.take`` then
+      ``device_put``), and the top-k runs in the small compiled
+      :func:`rerank_candidates` program. This path is host-driven and
+      CANNOT run under a trace -- jit ``state_candidates`` instead and
+      rerank outside (what :class:`repro.serve.engine.ServingEngine`'s
+      pipelined submit does).
     """
-    q_full = queries if artifacts.rerank_a is None \
-        else queries @ artifacts.rerank_a.T
-    safe = jnp.where(candidates >= 0, candidates, 0)
-    cand_vecs = artifacts.x_full[safe]                   # (m, kappa, D)
-    scores = jnp.einsum("mkd,md->mk", cand_vecs, q_full)
-    scores = jnp.where(candidates >= 0, scores, NEG_INF)
-    top = jax.lax.top_k(scores, k)[1]                    # (m, k)
-    return jnp.take_along_axis(candidates, top, axis=1)
+    store = host_tier(artifacts)
+    if store is None:
+        safe = jnp.where(candidates >= 0, candidates, 0)
+        cand_vecs = artifacts.x_full[safe]               # (m, kappa, D)
+        return _rerank_math(_rotate_queries(queries, artifacts), cand_vecs,
+                            candidates, k)
+    if isinstance(candidates, jax.core.Tracer):
+        raise TypeError(
+            "rerank over a host-tier x_full cannot run inside jit: the "
+            "host gather is not traceable. Compile state_candidates and "
+            "rerank the gathered rows outside the trace (see "
+            "repro.serve.engine.ServingEngine).")
+    cand_ids = np.asarray(candidates)
+    cand_vecs = jax.device_put(store.take(cand_ids))     # kappa rows only
+    return rerank_candidates(_rotate_queries(queries, artifacts), cand_vecs,
+                             jnp.asarray(cand_ids), k)
 
 
 def multi_step_search(queries: jax.Array, artifacts: SearchArtifacts,

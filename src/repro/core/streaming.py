@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.core import gleanvec as gv
 from repro.core import linalg
+from repro.core import rerank_tier
 from repro.core import scorer as sc
 from repro.core.gleanvec import GleanVecModel
 from repro.core.leanvec_sphering import SpheringModel, fit_from_moments
@@ -245,7 +246,8 @@ _SORTED_MODES = ("gleanvec-sorted", "gleanvec-int8-sorted")
 def build_streaming_artifacts(mode: str, database: jax.Array, model=None,
                               capacity: Optional[int] = None,
                               sort_block: int = 4096,
-                              slack_blocks: int = 1) -> SearchArtifacts:
+                              slack_blocks: int = 1,
+                              host_rerank: bool = False) -> SearchArtifacts:
     """Fixed-capacity artifacts for any serving mode (see ``scorer.MODES``).
 
     Row-aligned modes pre-allocate ``capacity`` rows (the spare slots are
@@ -256,6 +258,13 @@ def build_streaming_artifacts(mode: str, database: jax.Array, model=None,
     ``insert_rows`` / ``remove_rows`` / ``refresh_artifacts`` preserves
     leaf shapes and the treedef, so the serving engine swaps the result in
     without recompiling.
+
+    ``host_rerank`` demotes the capacity-sized full-precision store to the
+    host tier (:mod:`repro.core.rerank_tier`): the reduced serving
+    representation keeps its device placement, while inserts/removes/
+    refreshes update the host store through the same ``.at[ids].set`` /
+    indexing surface -- a host-tier streamed store swaps with zero
+    recompiles exactly like a device one.
     """
     X = jnp.asarray(database, jnp.float32)
     n0, _ = X.shape
@@ -278,7 +287,8 @@ def build_streaming_artifacts(mode: str, database: jax.Array, model=None,
         scorer = sc.build_scorer(mode, x_cap, model, block=sort_block)
         live = jnp.arange(capacity) < n0
         scorer = scorer._replace(live=live)
-    return SearchArtifacts(scorer=scorer, x_full=x_cap, model=model)
+    x_full = rerank_tier.demote(x_cap) if host_rerank else x_cap
+    return SearchArtifacts(scorer=scorer, x_full=x_full, model=model)
 
 
 def live_mask(artifacts: SearchArtifacts) -> np.ndarray:

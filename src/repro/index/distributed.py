@@ -50,7 +50,8 @@ from repro.utils.jax_compat import shard_map
 
 __all__ = ["sharded_search", "make_sharded_search",
            "sharded_search_scorer", "make_sharded_search_scorer",
-           "stack_shards", "ShardedIndex", "build_sharded_index"]
+           "stack_shards", "ShardedIndex", "build_sharded_index",
+           "build_sharded_artifacts"]
 
 
 def _local_merge(queries, scorer, mesh: Mesh, axes, k: int, kappa: int,
@@ -361,3 +362,33 @@ def build_sharded_index(kind: str, mode: str, database, model=None, *,
     return (ShardedIndex(sub_index=stack_shards(subs),
                          row_starts=row_starts, mesh=mesh, axes=axes),
             stack_shards(scorers))
+
+
+def build_sharded_artifacts(kind: str, mode: str, database, model=None, *,
+                            spill_host: bool = False, **kwargs):
+    """Sharded placement with the full serving surface: builds the sharded
+    index + stacked scorer (:func:`build_sharded_index`, same kwargs) and
+    wraps them in :class:`~repro.core.search.SearchArtifacts` ready for
+    ``make_state`` / ``ServingEngine``.
+
+    ``spill_host=True`` is the two-level memory hierarchy applied PER
+    SHARD: each shard's (per, D) full-precision rerank tier demotes to its
+    own host buffer (:class:`~repro.core.rerank_tier.ShardedHostStore`,
+    same contiguous row partition as the index), so device memory holds
+    only the reduced codes and n scales past HBM -- the rerank gather
+    routes each query's kappa global candidate ids to their owning
+    shard's host buffer. Returns ``(index, artifacts)``.
+    """
+    # lazy: repro.core.search imports repro.index.topk, which triggers this
+    # package's __init__ -- a module-level import here would be circular
+    from repro.core import rerank_tier
+    from repro.core.search import SearchArtifacts
+
+    index, stacked = build_sharded_index(kind, mode, database, model,
+                                         **kwargs)
+    x_full = jnp.asarray(database, jnp.float32)
+    if spill_host:
+        x_full = rerank_tier.demote(np.asarray(x_full),
+                                    shards=index.n_shards)
+    return index, SearchArtifacts(scorer=stacked, x_full=x_full,
+                                  model=model)

@@ -57,8 +57,9 @@ from repro.index.protocol import (_offset_ids, register_index_pytree,
 from repro.index.topk import NEG_INF
 
 __all__ = ["GraphIndex", "build", "build_device", "with_fused_scan",
-           "beam_search_scorer", "beam_search", "beam_search_gleanvec",
-           "beam_search_traced", "gathered_beam_step"]
+           "with_capacity", "insert_ids", "beam_search_scorer",
+           "beam_search", "beam_search_gleanvec", "beam_search_traced",
+           "gathered_beam_step"]
 
 # build(method="auto") switches from numpy NN-descent to the on-device
 # CAGRA-style self-join at this many rows (where the O(n * iters) numpy
@@ -126,8 +127,9 @@ class GraphIndex:
         FUSED variant's ``nbr_rows`` binds edges to the scorer's slot
         assignment, so it is re-derived against the (possibly churned)
         layout here. The plain variant passes through unchanged.
-        (Incremental edge insertion for grown databases is a ROADMAP
-        follow-up; until then serve streams via flat or IVF traversals.)"""
+        (Edge INSERTION for grown databases is :func:`insert_ids`:
+        pre-allocate slots with :func:`with_capacity`, then connect each
+        new row via beam-search-for-neighbors + reverse-edge fill.)"""
         if self.fused and getattr(scorer, "inv_perm", None) is not None:
             return with_fused_scan(self, scorer, tn=self.scan_tn)
         return self
@@ -157,6 +159,135 @@ def with_fused_scan(index: GraphIndex, scorer, tn: int = 8) -> GraphIndex:
     rows = np.where((nbrs >= 0) & (rows >= 0), rows, -1)
     return _dc_replace(index, nbr_rows=jnp.asarray(rows.astype(np.int32)),
                        fused=True, scan_tn=tn)
+
+
+# ---------------------------------------------------------------------------
+# Streamed growth: pre-allocated edge slots + incremental edge insertion.
+# ---------------------------------------------------------------------------
+
+
+def with_capacity(index: GraphIndex, capacity: int) -> GraphIndex:
+    """Pad the edge table to ``capacity`` rows (edgeless, all -1) so a
+    streamed graph can GROW: :func:`insert_ids` fills a padded row's edges
+    in place, preserving every leaf shape and the treedef -- the
+    zero-recompile ``ServingEngine.swap`` contract, mirroring
+    ``ivf.with_list_slack``. Size ``capacity`` to the streaming store's
+    row capacity so external ids index the table directly."""
+    n, r = index.neighbors.shape
+    if capacity < n:
+        raise ValueError(f"capacity {capacity} < current rows {n}")
+    if capacity == n:
+        return index
+    pad = jnp.full((capacity - n, r), -1, index.neighbors.dtype)
+    nbr_rows = index.nbr_rows
+    if nbr_rows is not None:
+        nbr_rows = jnp.concatenate(
+            [nbr_rows, jnp.full((capacity - n, r), -1, nbr_rows.dtype)])
+    return _dc_replace(index,
+                       neighbors=jnp.concatenate([index.neighbors, pad]),
+                       nbr_rows=nbr_rows)
+
+
+def insert_ids(index: GraphIndex, rows, ids, scorer, x_full,
+               kappa: Optional[int] = None) -> GraphIndex:
+    """Connect newly inserted external ``ids`` (full-D ``rows``) into the
+    graph (host-side; shape-preserving -- the slots must exist, see
+    :func:`with_capacity`).
+
+    The Vamana-style incremental insert, adapted to the two-level layout:
+
+    1. OUT-edges: beam-search the current graph for each new vector's
+       ``kappa`` nearest candidates (through the serving ``scorer``, so
+       the traversal runs in the reduced space like every query), widen
+       with the batch-mates (unreachable until this call links them), then
+       re-rank candidates by FULL-D L2 distance against the rerank store
+       ``x_full`` -- which may be a host tier; only the candidate rows are
+       gathered -- and keep the R closest as the new row's edge list.
+    2. REVERSE-edge fill: for each new vertex v and out-neighbor t, v is
+       added to t's list into a free slot, or replaces t's farthest
+       current edge when v is closer (full-D distances again). If every
+       target row wins, v still gets >= 1 in-edge by forcing the last slot
+       of its nearest target -- a vertex with no in-edges would be
+       unreachable forever.
+
+    A fused index re-derives ``nbr_rows`` against the scorer's layout
+    (same re-translation ``refreshed`` runs). Entries are untouched.
+    """
+    ids = np.asarray(ids, np.int64).reshape(-1)
+    if ids.size == 0:
+        return index
+    nbrs = np.asarray(index.neighbors).copy()
+    cap, r = nbrs.shape
+    rows_np = np.asarray(rows, np.float32).reshape(ids.size, -1)
+    if np.any(ids >= cap):
+        raise ValueError("insert id beyond edge-table capacity; grow with "
+                         "with_capacity first")
+    kappa = kappa or max(2 * r, 16)
+
+    def _fetch(ext_ids: np.ndarray) -> np.ndarray:
+        # external-id row gather that works for device arrays AND host
+        # tiers (HostStore.__getitem__ gathers only the requested rows)
+        return np.asarray(x_full[np.asarray(ext_ids)], np.float32)
+
+    # 1) candidate pool: reduced-space beam search + batch-mates
+    _, cand = beam_search_scorer(jnp.asarray(rows_np), scorer, index,
+                                 k=kappa, beam=max(index.beam, kappa),
+                                 max_hops=index.max_hops,
+                                 expand=index.expand)
+    cand = np.asarray(cand, np.int64)                       # (b, kappa)
+    mates = np.broadcast_to(ids, (ids.size, ids.size))
+    cand = np.concatenate([cand, mates], axis=1)
+    cand[cand == ids[:, None]] = -1                         # no self loops
+    # full-D L2 re-rank of each row's candidate pool
+    cvecs = _fetch(np.where(cand >= 0, cand, 0))            # (b, K, D)
+    d2 = np.sum((cvecs - rows_np[:, None, :]) ** 2, axis=2)
+    d2[cand < 0] = np.inf
+    # mask duplicate candidates (keep first) before taking the closest R
+    srt = np.sort(cand, axis=1)
+    for b in range(ids.size):
+        _, first = np.unique(cand[b], return_index=True)
+        dup = np.ones(cand.shape[1], bool)
+        dup[first] = False
+        d2[b, dup] = np.inf
+    sel = np.argsort(d2, axis=1, kind="stable")[:, :r]
+    out_edges = np.take_along_axis(cand, sel, axis=1)
+    out_edges[np.take_along_axis(d2, sel, axis=1) == np.inf] = -1
+    nbrs[ids] = out_edges
+
+    # 2) reverse-edge fill with full-D distances + in-edge guarantee
+    for b, v in enumerate(ids):
+        placed = False
+        targets = out_edges[b][out_edges[b] >= 0]
+        t_vecs = _fetch(targets) if targets.size else None
+        for j, t in enumerate(targets):
+            row = nbrs[t]
+            if v in row:
+                placed = True
+                continue
+            free = np.nonzero(row < 0)[0]
+            if free.size:
+                nbrs[t, free[0]] = v
+                placed = True
+                continue
+            d_edges = np.sum(
+                (_fetch(row) - t_vecs[j][None, :]) ** 2, axis=1)
+            far = int(np.argmax(d_edges))
+            d_v = float(np.sum((rows_np[b] - t_vecs[j]) ** 2))
+            if d_v < d_edges[far]:
+                nbrs[t, far] = v
+                placed = True
+        if not placed and targets.size:
+            nbrs[targets[0], r - 1] = v     # nearest target cedes a slot
+
+    # dedupe only the touched rows (insert slots + reverse-fill targets)
+    touched = np.unique(np.concatenate(
+        [ids, out_edges[out_edges >= 0].ravel()]))
+    nbrs[touched] = _dedupe_rows(nbrs[touched])
+    new = _dc_replace(index,
+                      neighbors=jnp.asarray(nbrs.astype(np.int32)))
+    if index.fused and getattr(scorer, "inv_perm", None) is not None:
+        new = with_fused_scan(new, scorer, tn=index.scan_tn)
+    return new
 
 
 # ---------------------------------------------------------------------------
@@ -651,6 +782,12 @@ def _beam_qstate(qstate, scorer, graph: GraphIndex, k: int, beam: int,
                                              max_hops, expand=expand,
                                              trace_tags=trace_tags,
                                              fused_step=fused_step)
+    if k > beam:        # kappa > beam (e.g. kappa > n): pad with -1 slots
+        fill = k - beam
+        scores = jnp.concatenate(
+            [scores, jnp.full((m, fill), NEG_INF, scores.dtype)], axis=1)
+        ids = jnp.concatenate(
+            [ids, jnp.full((m, fill), -1, ids.dtype)], axis=1)
     top, sel = jax.lax.top_k(scores, k)
     return top, jnp.take_along_axis(ids, sel, axis=1), hops, tag_hist
 

@@ -215,9 +215,22 @@ def run_stream(args):
     model = _stream_model(args, q_init, X, n0, template=restoring)
     artifacts = streaming.build_streaming_artifacts(
         args.mode, X[:n0], model, capacity=args.n, sort_block=256,
-        slack_blocks=2)
+        slack_blocks=2, host_rerank=args.host_rerank)
     index = None
-    if args.index == "ivf":
+    if args.index == "graph":
+        index = replace(graph.build(np.asarray(X[:n0]), r=args.graph_degree,
+                                    n_iters=4, seed=0,
+                                    method=args.graph_build),
+                        beam=args.beam, max_hops=args.max_hops,
+                        expand=args.expand)
+        # pre-allocate edge rows for every future insert (shape-preserving
+        # growth, like IVF's list slack)
+        index = graph.with_capacity(index, args.n)
+        if args.fused_graph:
+            if not args.mode.endswith("-sorted"):
+                raise SystemExit("--fused-graph needs a sorted scorer mode")
+            index = graph.with_fused_scan(index, artifacts.scorer)
+    elif args.index == "ivf":
         if args.aligned:
             if not args.mode.endswith("-sorted"):
                 raise SystemExit("--aligned needs a sorted scorer mode")
@@ -287,8 +300,16 @@ def run_stream(args):
             stream = streaming.insert(stream, rows)
             state2 = guarded.state._replace(artifacts=arts2)
             if index is not None:
-                state2 = state2._replace(
-                    index=ivf.insert_ids(state2.index, rows, new_ids))
+                if args.index == "graph":
+                    # connect the new rows: beam-search-for-neighbors +
+                    # reverse-edge fill (full-D distances via the rerank
+                    # tier, host or device)
+                    state2 = state2._replace(index=graph.insert_ids(
+                        state2.index, rows, np.asarray(new_ids),
+                        arts2.scorer, arts2.x_full))
+                else:
+                    state2 = state2._replace(
+                        index=ivf.insert_ids(state2.index, rows, new_ids))
             guarded.swap(state2)
         stream, rep = supervisor.refresh_and_swap(
             stream, source=args.refresh_source, refresh_fn=refresh_fn)
@@ -369,6 +390,12 @@ def main():
     ap.add_argument("--shards", type=int, default=0,
                     help="N per-shard sub-indexes merged via ShardedIndex "
                          "(0 = single index)")
+    ap.add_argument("--host-rerank", action="store_true",
+                    help="two-level memory hierarchy: demote the (n, D) "
+                         "full-precision rerank tier to host memory (only "
+                         "the kappa candidate rows per query cross "
+                         "host->device); with --shards, each shard's tier "
+                         "spills to its own host buffer")
     ap.add_argument("--stream", action="store_true",
                     help="drive the Section 3.2 observe -> insert -> "
                          "refresh -> swap lifecycle under live traffic")
@@ -397,8 +424,8 @@ def main():
     args = ap.parse_args()
 
     if args.stream:
-        if args.mode == "full" or args.shards or args.index == "graph":
-            raise SystemExit("--stream needs a DR mode and a flat or IVF "
+        if args.mode == "full" or args.shards:
+            raise SystemExit("--stream needs a DR mode and a "
                              "single-device index")
         run_stream(args)
         return
@@ -431,9 +458,15 @@ def main():
                           "method": args.graph_build})
         artifacts = msearch.SearchArtifacts(scorer=stacked, x_full=X,
                                             model=model)
+        if args.host_rerank:
+            # spill-to-host: per-shard rerank tiers demote to host buffers
+            artifacts = msearch.demote_rerank_tier(artifacts,
+                                                   shards=args.shards)
     else:
         artifacts = msearch.build_artifacts(args.mode, X, model)
         index = build_index(args, X, artifacts.scorer, model)
+        if args.host_rerank:
+            artifacts = msearch.demote_rerank_tier(artifacts)
     kappa = 10 if args.mode == "full" else args.kappa
 
     engine = ServingEngine(msearch.make_state(artifacts, index=index),

@@ -44,6 +44,17 @@ def _engine_step(queries, state: msearch.ServingState, *, k: int,
     return ids, state
 
 
+def _candidates_step(queries, state: msearch.ServingState, *, kappa: int):
+    """First stage of the two-level serving pipeline (host rerank tier):
+    the compiled reduced-space search only -- ``x_full`` is host-resident
+    aux data and never enters the trace. The host gather of the kappa
+    candidate rows, the prefetch ``device_put``, and the small compiled
+    ``rerank_candidates`` program run outside, overlapped with the next
+    batch's fine scan by ``ServingEngine.submit``."""
+    cand = msearch.state_candidates(queries, state, kappa)
+    return cand, state
+
+
 def make_search_fn(artifacts, k: int, kappa: int, block: int = 4096,
                    index=None):
     """One-shot convenience: bind ``artifacts`` (+ optional Index-protocol
@@ -76,19 +87,36 @@ class ServeStats:
     n_batches: int = 0
     n_sanitized: int = 0          # non-finite query rows zeroed out
     total_s: float = 0.0
+    # Host-tier traffic accounting (two-level rerank hierarchy only):
+    # ``host_bytes`` is the measured host->device rerank-row traffic,
+    # ``host_bytes_lb`` the m*kappa*D*4 lower bound per batch -- the bench
+    # layer smoke-enforces measured <= 2x bound, pinning the tier's whole
+    # point (per-query traffic scales with kappa, not n).
+    host_bytes: int = 0
+    host_bytes_lb: int = 0
     window: int = 8192
     latencies_ms: Optional[Deque[float]] = None
     swap_ms: Optional[Deque[float]] = None
+    prefetch_ms: Optional[Deque[float]] = None    # host gather + H2D + rerank
 
     def __post_init__(self):
         if self.latencies_ms is None:
             self.latencies_ms = collections.deque(maxlen=self.window)
         if self.swap_ms is None:
             self.swap_ms = collections.deque(maxlen=self.window)
+        if self.prefetch_ms is None:
+            self.prefetch_ms = collections.deque(maxlen=self.window)
 
     @property
     def qps(self) -> float:
         return self.n_queries / self.total_s if self.total_s else 0.0
+
+    @property
+    def host_bytes_ratio(self) -> float:
+        """Measured host->device rerank traffic over the kappa-row lower
+        bound (1.0 = every transferred byte is a candidate row)."""
+        return self.host_bytes / self.host_bytes_lb \
+            if self.host_bytes_lb else 0.0
 
     def percentile_ms(self, p: float) -> float:
         return float(np.percentile(np.asarray(self.latencies_ms,
@@ -130,12 +158,40 @@ class ServingEngine:
         self.state = state
         self.n_swaps = 0
         self._version0 = int(state.version)
-        self._fn = jax.jit(functools.partial(_engine_step, k=k, kappa=kappa),
-                           donate_argnums=(1,) if donate else ())
-        # warmup/compile with a dummy batch
+        # Two serving shapes, picked by where the rerank tier lives:
+        # device x_full -> ONE compiled step (search + rerank inline);
+        # host x_full  -> compiled candidates step + host gather + the
+        # shared compiled rerank_candidates, pipelined across batches.
+        self._host = msearch.host_tier(state.artifacts)
         dummy = jnp.zeros((batch_size, dim), jnp.float32)
-        ids, self.state = self._fn(dummy, self.state)
+        if self._host is None:
+            self._cand_fn = None
+            self._fn = jax.jit(
+                functools.partial(_engine_step, k=k, kappa=kappa),
+                donate_argnums=(1,) if donate else ())
+            # warmup/compile with a dummy batch
+            ids, self.state = self._fn(dummy, self.state)
+        else:
+            self._fn = None
+            self._cand_fn = jax.jit(
+                functools.partial(_candidates_step, kappa=kappa),
+                donate_argnums=(1,) if donate else ())
+            # warmup compiles BOTH stages for this shape family
+            cand, new_state = self._cand_fn(dummy, self.state)
+            self.state = self._reattach(new_state)
+            ids = msearch.rerank(dummy, self.state.artifacts,
+                                 np.asarray(cand), k)
         jax.block_until_ready(ids)
+
+    def _reattach(self, state: msearch.ServingState) -> msearch.ServingState:
+        """Re-bind the LIVE host store to a state that round-tripped the
+        compiled step: unflattening a jitted output reattaches the
+        trace-time aux object, which after a content-refreshing swap would
+        resurrect stale rows (aux equality is by shape/dtype only)."""
+        if self._host is None:
+            return state
+        return state._replace(
+            artifacts=state.artifacts._replace(x_full=self._host))
 
     @property
     def version(self) -> int:
@@ -144,9 +200,26 @@ class ServingEngine:
     @property
     def n_compiles(self) -> Optional[int]:
         """Executables compiled for the serving step (1 after warmup; still
-        1 after any number of well-formed swaps)."""
-        cache_size = getattr(self._fn, "_cache_size", None)
+        1 after any number of well-formed swaps). On the host-rerank path
+        this counts the candidates stage -- the rerank stage is the
+        module-level shared ``rerank_candidates`` cache."""
+        fn = self._fn if self._fn is not None else self._cand_fn
+        cache_size = getattr(fn, "_cache_size", None)
         return cache_size() if cache_size is not None else None
+
+    def search_with(self, queries, state: msearch.ServingState):
+        """One full search against an arbitrary (treedef-compatible) state
+        WITHOUT installing it or touching engine stats -- the lifecycle
+        layer's canary hook. Runs whichever pipeline shape the engine
+        serves, so a canary over a host-tier state exercises the candidate
+        state's own host store."""
+        queries = jnp.asarray(queries, jnp.float32)
+        if self._host is None:
+            ids, _ = self._fn(queries, state)
+            return ids
+        cand, _ = self._cand_fn(queries, state)
+        return msearch.rerank(queries, state.artifacts, np.asarray(cand),
+                              self.k)
 
     def _check_swap_compatible(self, state: msearch.ServingState) -> None:
         """Raise ``ValueError`` unless ``state`` would reuse the compiled
@@ -189,6 +262,10 @@ class ServingEngine:
         self.n_swaps += 1
         self.state = state._replace(
             version=jnp.asarray(self._version0 + self.n_swaps, jnp.int32))
+        if self._host is not None:
+            # adopt the incoming store (contents may differ; treedef-equal
+            # by construction) so _reattach serves the refreshed rows
+            self._host = msearch.host_tier(self.state.artifacts)
         self.stats.swap_ms.append((time.perf_counter() - t0) * 1e3)
 
     def submit(self, queries: np.ndarray) -> np.ndarray:
@@ -221,6 +298,8 @@ class ServingEngine:
             self.stats.n_sanitized += int(bad_rows.sum())
         out = []
         n = queries.shape[0]
+        if self._host is not None:
+            return self._submit_pipelined(queries, bad_rows)
         for s in range(0, n, self.batch_size):
             chunk = queries[s:s + self.batch_size]
             pad = self.batch_size - chunk.shape[0]
@@ -240,3 +319,65 @@ class ServingEngine:
         if bad_rows.any():
             result[bad_rows] = -1      # sanitized rows: no fabricated hits
         return result
+
+    def _submit_pipelined(self, queries: np.ndarray,
+                          bad_rows: np.ndarray) -> np.ndarray:
+        """Double-buffered two-level submit (host rerank tier).
+
+        For each batch the compiled candidates step is DISPATCHED (jax's
+        async dispatch returns immediately); while the device runs batch
+        i+1's fine scan, the host drains batch i: block on its candidate
+        ids, gather the kappa full-D rows from the host store, push them
+        with a non-blocking ``device_put`` and fold the shared compiled
+        ``rerank_candidates`` program over them. The host->device traffic
+        is exactly the candidate rows -- batch*kappa*D*4 bytes, counted in
+        ``stats.host_bytes`` against the matching lower bound -- never the
+        (n, D) store.
+        """
+        out = []
+        pending = None
+        n = queries.shape[0]
+        t_submit = time.perf_counter()
+        for s in range(0, n, self.batch_size):
+            chunk = queries[s:s + self.batch_size]
+            pad = self.batch_size - chunk.shape[0]
+            if pad:
+                chunk = np.pad(chunk, ((0, pad), (0, 0)))
+            t0 = time.perf_counter()
+            q = jnp.asarray(chunk, jnp.float32)
+            cand, new_state = self._cand_fn(q, self.state)   # async dispatch
+            self.state = self._reattach(new_state)
+            q_full = msearch._rotate_queries(q, self.state.artifacts)
+            if pending is not None:
+                out.append(self._finish(pending))   # overlaps batch s's scan
+            pending = (cand, q_full, self.batch_size - pad,
+                       min(self.batch_size, n - s), t0)
+        out.append(self._finish(pending))
+        # overlapping batches: QPS comes from the submit WALL time (per-
+        # batch dispatch->finish windows overlap and would double-count)
+        self.stats.total_s += time.perf_counter() - t_submit
+        result = np.concatenate(out, axis=0)
+        if bad_rows.any():
+            result[bad_rows] = -1      # sanitized rows: no fabricated hits
+        return result
+
+    def _finish(self, pending) -> np.ndarray:
+        """Drain one in-flight batch: host gather of its kappa candidate
+        rows, prefetch to device, compiled rerank."""
+        cand_dev, q_full, keep, n_live, t0 = pending
+        cand = np.asarray(cand_dev)            # blocks on the fine scan
+        tp = time.perf_counter()
+        rows = self._host.take(cand)           # (batch, kappa, D) host gather
+        rows_dev = jax.device_put(rows)        # non-blocking H2D prefetch
+        ids = msearch.rerank_candidates(q_full, rows_dev,
+                                        jnp.asarray(cand), self.k)
+        ids = jax.block_until_ready(ids)
+        now = time.perf_counter()
+        self.stats.prefetch_ms.append((now - tp) * 1e3)
+        self.stats.host_bytes += rows.nbytes
+        self.stats.host_bytes_lb += (cand.shape[0] * self.kappa
+                                     * rows.shape[-1] * rows.itemsize)
+        self.stats.n_batches += 1
+        self.stats.n_queries += n_live
+        self.stats.latencies_ms.append((now - t0) * 1e3)
+        return np.asarray(ids)[:keep]

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import rerank_tier
 from repro.core import search as msearch
 from repro.core import streaming
 from repro.core.gleanvec import GleanVecModel
@@ -169,8 +170,12 @@ class GuardedEngine:
     # -- validation -------------------------------------------------------
     def _run_canary(self, state: msearch.ServingState) -> np.ndarray:
         """Top-k ids of the pinned battery under ``state`` via the
-        engine's compiled step (same treedef => cache hit, no compile)."""
-        ids, _ = self.engine._fn(self._canary, state)
+        engine's compiled pipeline (same treedef => cache hit, no
+        compile). ``search_with`` dispatches on the engine's tier shape,
+        so a host-rerank candidate is canaried through its OWN host store
+        -- the one guard that sees host-resident rows at all (the finite
+        scan skips them by design: they are leafless aux data)."""
+        ids = self.engine.search_with(self._canary, state)
         return np.asarray(jax.block_until_ready(ids))[: self._canary_rows]
 
     @staticmethod
@@ -269,8 +274,17 @@ def snapshot(snap_dir: str, serving: msearch.ServingState,
         step = 0 if last is None else last + 1
     meta = dict(meta or {})
     meta["has_stream"] = stream is not None
-    return checkpoint.save(snap_dir, step,
-                           {"serving": serving, "stream": stream}, meta=meta)
+    # A host-tier rerank store is leafless aux data (never flattened, never
+    # device-resident), so its rows ride the snapshot as an EXPLICIT dict
+    # of host-numpy leaves -- written straight from host memory, no HBM
+    # round-trip. None for device-tier states (their x_full is a regular
+    # serving leaf), contributing no manifest paths -- old snapshots and
+    # device-tier templates stay mutually compatible.
+    host_full = rerank_tier.host_arrays(serving.artifacts.x_full)
+    return checkpoint.save(
+        snap_dir, step,
+        {"serving": serving, "stream": stream, "host_full": host_full},
+        meta=meta)
 
 
 def restore(snap_dir: str, serving_template: msearch.ServingState,
@@ -299,16 +313,29 @@ def restore(snap_dir: str, serving_template: msearch.ServingState,
         steps = [s for s in steps if s <= step]
     if not steps:
         raise FileNotFoundError(f"no snapshot steps under {snap_dir}")
-    template = {"serving": serving_template, "stream": stream_template}
+    # The template's own (throwaway-row) host store supplies the host_full
+    # dict SHAPE -- shard count from the launch flags -- and the snapshot
+    # supplies the rows, which never touch device memory on the way back.
+    host_template = rerank_tier.host_arrays(
+        serving_template.artifacts.x_full)
+    template = {"serving": serving_template, "stream": stream_template,
+                "host_full": host_template}
     errors = []
     for s in reversed(steps):
         try:
             tree, got, meta = checkpoint.restore(snap_dir, template, step=s,
                                                  strict_shapes=False)
+            host_full = tree.pop("host_full")    # host numpy stays host
             tree = jax.tree.map(
                 lambda l: jnp.asarray(l) if isinstance(l, np.ndarray) else l,
                 tree)
-            return tree["serving"], tree["stream"], got, meta
+            serving = tree["serving"]
+            if host_full is not None:
+                # unflatten reattached the TEMPLATE's aux store; rebind the
+                # snapshot rows (leafless, so the treedef is unchanged)
+                serving = serving._replace(artifacts=serving.artifacts._replace(
+                    x_full=rerank_tier.from_host_arrays(host_full)))
+            return serving, tree["stream"], got, meta
         except Exception as e:                   # corrupted step: fall back
             errors.append(f"step {s}: {type(e).__name__}: {e}")
     raise FileNotFoundError(

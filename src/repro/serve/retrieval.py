@@ -35,6 +35,7 @@ import functools
 from typing import Any, Dict, NamedTuple, Optional
 
 import jax
+import numpy as np
 
 from repro.core import search as msearch
 from repro.core.scorer import build_scorer
@@ -103,8 +104,20 @@ def retrieve(index: RetrievalIndex, user_vecs: jax.Array, k: int,
     kappa = kappa or max(k, 2 * k)
     state = msearch.make_state(index.artifacts, index=index.index,
                                block=block)
-    key = (k, kappa, jax.tree_util.tree_structure(state))
     cache = index.fn_cache if index.fn_cache is not None else {}
+    if msearch.host_tier(index.artifacts) is not None:
+        # host rerank tier: only the candidates stage is compiled (x_full
+        # is leafless aux data); the kappa-row gather + shared compiled
+        # rerank run eagerly outside the trace
+        key = ("candidates", kappa, jax.tree_util.tree_structure(state))
+        fn = cache.get(key)
+        if fn is None:
+            fn = cache.setdefault(key, jax.jit(functools.partial(
+                msearch.state_candidates, kappa=kappa)))
+        cand = fn(user_vecs, state)
+        return msearch.rerank(user_vecs, index.artifacts, np.asarray(cand),
+                              k)
+    key = (k, kappa, jax.tree_util.tree_structure(state))
     fn = cache.get(key)
     if fn is None:
         fn = cache.setdefault(key, jax.jit(functools.partial(
