@@ -1,0 +1,25 @@
+"""Static analysis of the search stack's own contracts.
+
+Three rule layers over one registry (:mod:`repro.analysis.registry`):
+
+* :mod:`repro.analysis.hlo_rules` -- declarative checks over compiled
+  programs' post-opt HLO + cost analysis (forbidden dense score-matrix
+  buffers, gather-free fused paths, host-transfer-free serving steps,
+  donation coverage, while-trip budgets);
+* :mod:`repro.analysis.protocol_rules` -- mechanical verification of the
+  Scorer/Index/host-tier pytree contracts (treedef stability across
+  streaming round-trips, leafless-aux host stores, -1 id padding,
+  static-config-in-treedef);
+* :mod:`repro.analysis.source_rules` -- repo-specific AST lint
+  (isinstance dispatch on hot paths, host syncs in jitted bodies,
+  ``jax.debug`` leftovers, raw version-sensitive jax APIs).
+
+``assert_rules(compiled, rules)`` is the single entry point tests use;
+``python -m repro.analysis.run audit`` sweeps the full hot-path matrix
+and writes ``ANALYSIS.json``. See ``docs/static_analysis.md``.
+"""
+from repro.analysis.registry import (Rule, RuleResult, assert_rules,
+                                     failures, results_to_json, run_rules)
+
+__all__ = ["Rule", "RuleResult", "assert_rules", "failures",
+           "results_to_json", "run_rules"]

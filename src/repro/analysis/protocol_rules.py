@@ -1,0 +1,348 @@
+"""Protocol-layer rules: mechanical verification of the Scorer / Index /
+host-tier pytree contracts the serving stack depends on.
+
+The zero-recompile swap story (PR 4 onward) is a structural claim:
+``state_search`` specializes on the ServingState TREEDEF + leaf avals
+only, so every streaming mutation -- ``insert_rows`` / ``remove_rows`` /
+``refresh_artifacts`` / ``index.refreshed`` -- must return SAME-treedef,
+same-aval pytrees; the host rerank tier must flatten to ZERO leaves; id
+translation must keep ``-1`` padding inert; index configuration must be
+static treedef metadata, never a traced leaf. These rules check each of
+those claims directly on a small :class:`ProtocolContext` fixture, for
+every registered scorer mode and index kind.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.registry import Rule, RuleResult
+
+__all__ = ["ProtocolContext", "ScorerSurface", "IdTranslationContract",
+           "TreedefStableStreaming", "TreedefStableIndexRefresh",
+           "LeaflessAuxHostTier", "StaticConfigInTreedef",
+           "SCORER_METHODS"]
+
+# The full Scorer protocol surface (core/scorer.py): representation,
+# scanning, sharding, id translation, and the streaming row ops.
+SCORER_METHODS = ("prepare_queries", "pad_rows", "score_block",
+                  "score_ids", "shard_specs", "translate_ids",
+                  "globalize_ids", "insert_rows", "remove_rows",
+                  "refresh", "encode_centers")
+
+
+def tree_signature(tree):
+    """(treedef, leaf avals): exactly what jit specializes a pytree
+    argument on -- the equality the zero-recompile contract needs."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return treedef, tuple((l.shape, l.dtype) for l in leaves)
+
+
+class ProtocolContext:
+    """Small shared fixture: one OOD dataset, both DR models, and cached
+    per-mode scorers / streaming artifacts. Built once per audit/test
+    session (model fits dominate; everything else is cheap)."""
+
+    def __init__(self, n: int = 512, D: int = 32, d: int = 8, c: int = 4,
+                 m: int = 16, sort_block: int = 64, seed: int = 0):
+        from repro.core import gleanvec as gv, leanvec_sphering as lvs
+        from repro.data import vectors
+
+        self.n, self.D, self.d, self.c, self.m = n, D, d, c, m
+        self.sort_block = sort_block
+        # learning queries >= D so K_Q has full rank (the lvs.fit warning)
+        self.ds = vectors.make_dataset("analysis-protocol", n=n, d=D,
+                                       n_queries=max(m, 2 * D), ood=True,
+                                       seed=seed)
+        self.X = jnp.asarray(self.ds.database)
+        self.Q = jnp.asarray(self.ds.queries_test[:m])
+        self.lin = lvs.fit(jnp.asarray(self.ds.queries_learn), self.X, d)
+        self.gvm = gv.fit(jax.random.PRNGKey(seed),
+                          jnp.asarray(self.ds.queries_learn), self.X,
+                          c=c, d=d)
+        self._scorers = {}
+        self._streaming = {}
+
+    def model_for(self, mode: str):
+        if mode == "full":
+            return None
+        return self.lin if mode.startswith("sphering") else self.gvm
+
+    def scorer(self, mode: str):
+        if mode not in self._scorers:
+            from repro.core import scorer as sc
+            self._scorers[mode] = sc.build_scorer(
+                mode, self.X, self.model_for(mode), block=self.sort_block)
+        return self._scorers[mode]
+
+    def streaming(self, mode: str, extra_rows: int = 32):
+        if mode not in self._streaming:
+            from repro.core import streaming
+            self._streaming[mode] = streaming.build_streaming_artifacts(
+                mode, self.X, self.model_for(mode),
+                capacity=self.n + extra_rows, sort_block=self.sort_block,
+                slack_blocks=1)
+        return self._streaming[mode]
+
+
+class _ProtocolRule(Rule):
+    family = "protocol"
+
+    def __init__(self, mode: Optional[str] = None):
+        self.mode = mode
+
+    def _result(self, base: RuleResult) -> RuleResult:
+        if self.mode:
+            return base._replace(target=self.mode)
+        return base
+
+
+class ScorerSurface(_ProtocolRule):
+    """Every scorer exposes the full protocol surface -- a missing method
+    surfaces as an AttributeError deep inside a traversal otherwise."""
+
+    name = "ScorerSurface"
+    contract = ("every registered scorer implements the full protocol: "
+                + ", ".join(SCORER_METHODS) + ", n_rows")
+
+    def check(self, ctx: ProtocolContext) -> RuleResult:
+        s = ctx.scorer(self.mode)
+        missing = [m for m in SCORER_METHODS
+                   if not callable(getattr(s, m, None))]
+        if not isinstance(getattr(s, "n_rows", None), (int, np.integer)):
+            missing.append("n_rows")
+        if missing:
+            return self._result(self._fail(
+                f"{type(s).__name__} missing: {missing}"))
+        return self._result(self._pass(type(s).__name__))
+
+
+class IdTranslationContract(_ProtocolRule):
+    """``translate_ids`` maps internal slots to external ids with ``-1``
+    (padding / dead slot) FIXED, and ``globalize_ids`` lifts external ids
+    to global ones keeping ``-1`` fixed -- the convention every merge,
+    probe schedule, and rerank gather relies on."""
+
+    name = "IdTranslationContract"
+    contract = ("translate_ids / globalize_ids keep -1 padding inert and "
+                "map live ids into their declared ranges")
+
+    def check(self, ctx: ProtocolContext) -> RuleResult:
+        s = ctx.scorer(self.mode)
+        perm = np.asarray(s.perm) if hasattr(s, "perm") else None
+        # external-id capacity: sorted layouts translate slots into the
+        # ORIGINAL id space (perm values), others are the identity
+        ext_n = int(perm.max()) + 1 if perm is not None else s.n_rows
+        live_slot = int(np.argmax(perm >= 0)) if perm is not None else 0
+        probe = jnp.asarray([[live_slot, -1]], jnp.int32)
+        t = np.asarray(s.translate_ids(probe))[0]
+        problems = []
+        if t[1] != -1:
+            problems.append(f"translate_ids(-1) -> {t[1]} (want -1)")
+        if not 0 <= t[0] < ext_n:
+            problems.append(
+                f"translate_ids(live slot {live_slot}) -> {t[0]} "
+                f"outside [0, {ext_n})")
+        if perm is not None and np.any(perm < 0):
+            # layouts with padding: a dead slot must translate to -1
+            dead = int(np.argmax(perm < 0))
+            td = int(np.asarray(
+                s.translate_ids(jnp.asarray([[dead]], jnp.int32)))[0, 0])
+            if td != -1:
+                problems.append(
+                    f"translate_ids(pad slot {dead}) -> {td} (want -1)")
+        g = np.asarray(s.globalize_ids(
+            jnp.asarray([[t[0], -1]], jnp.int32), jnp.int32(1)))[0]
+        if g[1] != -1:
+            problems.append(f"globalize_ids(-1) -> {g[1]} (want -1)")
+        if g[0] < 0:
+            problems.append(f"globalize_ids mapped a live id negative: "
+                            f"{g[0]}")
+        if problems:
+            return self._result(self._fail("; ".join(problems)))
+        return self._result(self._pass(
+            f"slot {live_slot} -> {t[0]}, globalize(shard=1) -> {g[0]}, "
+            "-1 inert"))
+
+
+class TreedefStableStreaming(_ProtocolRule):
+    """The zero-recompile contract, scorer side: a full streaming round
+    trip (insert rows -> remove them -> model refresh) returns artifacts
+    with the SAME treedef and leaf avals as the originals."""
+
+    name = "TreedefStableStreaming"
+    contract = ("insert_rows / remove_rows / refresh_artifacts preserve "
+                "the artifacts treedef and every leaf's shape+dtype")
+
+    def check(self, ctx: ProtocolContext) -> RuleResult:
+        from repro.core import streaming
+
+        art = ctx.streaming(self.mode)
+        sig0 = tree_signature(art)
+        rows = ctx.X[:4] + 0.01
+        art2, ids = streaming.insert_rows(art, rows)
+        art3 = streaming.remove_rows(art2, ids)
+        if art.model is not None:
+            st = streaming.init_from_artifacts(art3, ctx.Q)
+            art3 = streaming.refresh_artifacts(art3, streaming.refresh(st),
+                                               source="full")
+        sig1 = tree_signature(art3)
+        if sig0[0] != sig1[0]:
+            return self._result(self._fail(
+                f"treedef changed: {sig0[0]} -> {sig1[0]}"))
+        if sig0[1] != sig1[1]:
+            diff = [(a, b) for a, b in zip(sig0[1], sig1[1]) if a != b]
+            return self._result(self._fail(f"leaf avals changed: {diff}"))
+        return self._result(self._pass(
+            f"{len(sig0[1])} leaves stable through insert/remove/refresh"))
+
+
+class TreedefStableIndexRefresh(_ProtocolRule):
+    """The zero-recompile contract, index side: ``index.refreshed(scorer,
+    model)`` returns a same-treedef, same-aval index for every kind."""
+
+    name = "TreedefStableIndexRefresh"
+    contract = ("index.refreshed(scorer, model) is treedef- and "
+                "aval-preserving for flat / ivf / graph / sharded")
+
+    def __init__(self, kind: str, mode: str = "gleanvec-sorted"):
+        super().__init__(mode=f"{kind}/{mode}")
+        self.kind = kind
+        self.scorer_mode = mode
+
+    def _build(self, ctx: ProtocolContext):
+        from repro.index import FlatIndex, distributed, graph, ivf
+
+        s = ctx.scorer(self.scorer_mode)
+        model = ctx.model_for(self.scorer_mode)
+        if self.kind == "flat":
+            return FlatIndex(block=ctx.sort_block), s, model
+        if self.kind == "ivf":
+            if self.scorer_mode.endswith("sorted"):
+                idx = ivf.build_aligned(model, ctx.X, nprobe=2)
+            else:
+                idx = ivf.with_reduced_centers(
+                    ivf.build(jax.random.PRNGKey(1), ctx.X, n_lists=8),
+                    s, model)
+            return idx, s, model
+        if self.kind == "graph":
+            idx = graph.build(np.asarray(ctx.X), r=8, seed=0)
+            if self.scorer_mode.endswith("sorted"):
+                idx = graph.with_fused_scan(idx, s)
+            return idx, s, model
+        if self.kind == "sharded":
+            idx, stacked = distributed.build_sharded_index(
+                "flat", self.scorer_mode, ctx.X, model, n_shards=2,
+                sort_block=ctx.sort_block)
+            return idx, stacked, model
+        raise ValueError(f"unknown index kind {self.kind!r}")
+
+    def check(self, ctx: ProtocolContext) -> RuleResult:
+        idx, s, model = self._build(ctx)
+        sig0 = tree_signature(idx)
+        sig1 = tree_signature(idx.refreshed(s, model))
+        if sig0[0] != sig1[0]:
+            return self._result(self._fail(
+                f"treedef changed: {sig0[0]} -> {sig1[0]}"))
+        if sig0[1] != sig1[1]:
+            diff = [(a, b) for a, b in zip(sig0[1], sig1[1]) if a != b]
+            return self._result(self._fail(f"leaf avals changed: {diff}"))
+        return self._result(self._pass(
+            f"{type(idx).__name__}: {len(sig0[1])} leaves stable"))
+
+
+class LeaflessAuxHostTier(Rule):
+    """HostStore / ShardedHostStore flatten to ZERO leaves (the store is
+    treedef aux data), aux equality is by (type, shape, dtype) aval --
+    so a content refresh keeps the treedef while a shape change breaks
+    it loudly -- and demote/promote round-trips the rows exactly."""
+
+    name = "LeaflessAuxHostTier"
+    family = "protocol"
+    contract = ("the host rerank tier is a leafless pytree whose aux "
+                "equality is the store AVAL, not its contents")
+
+    def check(self, ctx: ProtocolContext) -> RuleResult:
+        from repro.core import rerank_tier
+
+        x = np.asarray(ctx.X)
+        problems = []
+        for shards in (0, 2):
+            store = rerank_tier.demote(jnp.asarray(x), shards=shards)
+            leaves, treedef = jax.tree_util.tree_flatten(store)
+            if leaves:
+                problems.append(
+                    f"{type(store).__name__} has {len(leaves)} leaves")
+            refreshed = rerank_tier.demote(jnp.asarray(x + 1.0),
+                                           shards=shards)
+            if jax.tree_util.tree_structure(refreshed) != treedef:
+                problems.append(f"{type(store).__name__}: content "
+                                "refresh changed the treedef")
+            smaller = rerank_tier.demote(jnp.asarray(x[:-2]),
+                                         shards=shards)
+            if jax.tree_util.tree_structure(smaller) == treedef:
+                problems.append(f"{type(store).__name__}: shape change "
+                                "did NOT change the treedef")
+            back = np.asarray(rerank_tier.promote(store))
+            if not np.array_equal(back, x):
+                problems.append(
+                    f"{type(store).__name__}: promote != original rows")
+        if problems:
+            return self._fail("; ".join(problems))
+        return self._pass("HostStore & ShardedHostStore leafless, "
+                          "aval-keyed, round-trip exact")
+
+
+class StaticConfigInTreedef(Rule):
+    """Index configuration is STATIC treedef metadata: two indices that
+    differ only in a config field have different treedefs (jit re-
+    specializes instead of mis-serving), and no leaf is a bare python
+    scalar (which would silently become a traced constant)."""
+
+    name = "StaticConfigInTreedef"
+    family = "protocol"
+    contract = ("index config (block / nprobe / beam...) lives in the "
+                "treedef; array data are the only leaves")
+
+    def __init__(self, kind, field: str):
+        self.kind = kind        # "flat"/"ivf"/"graph" or builder(ctx)
+        self.field = field
+
+    def check(self, ctx: ProtocolContext) -> RuleResult:
+        from repro.index import FlatIndex, graph, ivf
+        from repro.index.protocol import replace
+
+        if callable(self.kind):
+            idx = self.kind(ctx)
+        elif self.kind == "flat":
+            idx = FlatIndex(block=ctx.sort_block)
+        elif self.kind == "ivf":
+            idx = ivf.build(jax.random.PRNGKey(1), ctx.X, n_lists=8)
+        elif self.kind == "graph":
+            idx = graph.build(np.asarray(ctx.X), r=8, n_entries=4, seed=0)
+        else:
+            raise ValueError(f"unknown index kind {self.kind!r}")
+        base = jax.tree_util.tree_structure(idx)
+        bumped = replace(idx, **{
+            self.field: getattr(idx, self.field) + 1})
+        problems = []
+        if jax.tree_util.tree_structure(bumped) == base:
+            problems.append(
+                f"{type(idx).__name__}.{self.field} change kept the "
+                "treedef (config leaked into leaves?)")
+        scalar_leaves = [type(l).__name__
+                         for l in jax.tree_util.tree_leaves(idx)
+                         if not hasattr(l, "shape")]
+        if scalar_leaves:
+            problems.append(f"python-scalar leaves: {scalar_leaves}")
+        kind = getattr(self.kind, "__name__", self.kind)
+        if problems:
+            return RuleResult(self.name, f"{kind}.{self.field}",
+                              False, "; ".join(problems),
+                              family=self.family)
+        return RuleResult(self.name, f"{kind}.{self.field}", True,
+                          f"{type(idx).__name__}.{self.field} is treedef "
+                          "metadata", family=self.family)

@@ -1,0 +1,108 @@
+"""Rule registry: the ONE definition of every contract the stack audits.
+
+A :class:`Rule` states one invariant (a forbidden HLO buffer shape, a
+pytree treedef that must survive a refresh, a banned source construct)
+and checks it against a *subject* -- an :class:`~repro.analysis.hlo_rules.
+HLOProgram`, a :class:`~repro.analysis.protocol_rules.ProtocolContext`,
+or a :class:`~repro.analysis.source_rules.SourceTree`. Tests and the
+``analysis/run.py audit`` driver share the same rule instances, so a
+contract is written exactly once and enforced everywhere.
+
+``assert_rules(compiled, rules)`` is the test-facing entry point that
+replaced the per-test HLO string assertions (test_ivf_scan /
+test_graph_scan / test_index_protocol); ``run_rules`` is the driver-facing
+one that collects :class:`RuleResult` rows for ``ANALYSIS.json``.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, NamedTuple
+
+__all__ = ["Rule", "RuleResult", "run_rules", "failures", "assert_rules",
+           "results_to_json"]
+
+
+class RuleResult(NamedTuple):
+    """One rule evaluated against one subject. ``evidence`` carries the
+    matched shapes / missing aliases / offending source lines -- enough
+    to act on a failure without re-running the audit."""
+
+    rule: str
+    target: str
+    passed: bool
+    evidence: str = ""
+    skipped: bool = False
+    family: str = ""
+
+
+class Rule:
+    """Base: subclasses set ``name``/``family``/``contract`` and implement
+    ``check(subject) -> RuleResult`` via the ``_pass``/``_fail``/``_skip``
+    helpers. ``contract`` is the human sentence the docs table renders."""
+
+    name: str = "Rule"
+    family: str = ""
+    contract: str = ""
+
+    def check(self, subject) -> RuleResult:
+        raise NotImplementedError
+
+    def _pass(self, evidence: str = "") -> RuleResult:
+        return RuleResult(self.name, "", True, evidence, False, self.family)
+
+    def _fail(self, evidence: str) -> RuleResult:
+        return RuleResult(self.name, "", False, evidence, False, self.family)
+
+    def _skip(self, evidence: str) -> RuleResult:
+        return RuleResult(self.name, "", True, evidence, True, self.family)
+
+
+def run_rules(subject, rules: Iterable[Rule],
+              target: str = "") -> List[RuleResult]:
+    """Evaluate every rule against one subject; stamp ``target`` (the
+    audit-matrix cell, e.g. ``ivf/gleanvec-sorted``) onto each result."""
+    out = []
+    for rule in rules:
+        res = rule.check(subject)
+        if target and not res.target:
+            res = res._replace(target=target)
+        out.append(res)
+    return out
+
+
+def failures(results: Iterable[RuleResult]) -> List[RuleResult]:
+    return [r for r in results if not r.passed and not r.skipped]
+
+
+def assert_rules(subject, rules: Iterable[Rule],
+                 target: str = "") -> List[RuleResult]:
+    """Run ``rules`` against ``subject`` and raise ``AssertionError``
+    listing every violation. ``subject`` may be a jitted ``Compiled``
+    object (or raw HLO text) -- it is wrapped in an ``HLOProgram``
+    automatically -- or any rule-family subject passed through as-is."""
+    from repro.analysis import hlo_rules
+
+    if isinstance(subject, str) or hasattr(subject, "as_text"):
+        subject = hlo_rules.HLOProgram.of(subject, label=target)
+    results = run_rules(subject, rules, target=target)
+    bad = failures(results)
+    if bad:
+        lines = [f"  {r.rule}[{r.target or '-'}]: {r.evidence}"
+                 for r in bad]
+        raise AssertionError("contract violation(s):\n" + "\n".join(lines))
+    return results
+
+
+def results_to_json(results: Iterable[RuleResult], **extra) -> dict:
+    """The ``ANALYSIS.json`` payload (mirrors ``BENCH_<name>.json``:
+    one top-level tag + a flat ``results`` list of dict rows)."""
+    rows = [r._asdict() for r in results]
+    n_fail = len(failures(results))
+    n_skip = sum(1 for r in results if r.skipped)
+    return {
+        "analysis": "audit",
+        "passed": n_fail == 0,
+        "counts": {"passed": len(rows) - n_fail - n_skip,
+                   "failed": n_fail, "skipped": n_skip},
+        **extra,
+        "results": rows,
+    }

@@ -1,0 +1,293 @@
+"""The contract audit driver: ``python -m repro.analysis.run audit``.
+
+Composes the three rule layers over the full hot-path matrix --
+7 scorer modes x {flat, IVF-aligned, fused graph, sharded, host-rerank}
+-- plus the protocol round-trips and the source lint, writes the
+machine-readable ``ANALYSIS.json`` (mirroring the ``BENCH_*.json``
+convention), and exits nonzero on any violation.
+
+Per matrix cell the driver compiles the REAL serving entry point
+(``state_search`` / ``state_candidates`` / ``ShardedIndex.search_local``)
+over a small statistical twin of the paper's shapes and runs the HLO
+rules against the post-opt module: the forbidden dense score-matrix
+shapes are computed from the actual mounted scorer (sorted layouts pad
+``n_rows``), the donation check compiles the engine step with
+``donate_argnums=(1,)`` the way ``ServingEngine`` does on accelerators,
+and trip budgets scale with the cell's own block / hop ceilings.
+
+``python -m repro.analysis.run lint`` runs the AST layer alone (fast,
+no jax compilation) -- the CI job runs it first for quick feedback.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import numpy as np
+
+from repro.analysis import hlo_rules, protocol_rules, source_rules
+from repro.analysis.registry import (failures, results_to_json, run_rules)
+
+SRC_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Audit-matrix shapes: a scaled twin of Table 1. n is deliberately NOT a
+# multiple-free power match of any scan block so a legitimate (m, block)
+# tile can never collide with the forbidden (m, n) matrix.
+N, D, D_LOW, C, M, K, KAPPA = 1024, 32, 8, 4, 8, 5, 20
+SORT_BLOCK, FLAT_BLOCK = 64, 256
+NPROBE, N_LISTS = 2, 8
+# KAPPA=20 deliberately differs from EXPAND*GRAPH_R=16 and
+# BEAM+EXPAND*GRAPH_R=24: the legitimate (M, KAPPA) candidate buffers
+# must never collide with the fused graph hop's forbidden shapes.
+BEAM, MAX_HOPS, EXPAND, GRAPH_R = 8, 16, 2, 8
+GRAPH_ENTRIES = 4   # <= BEAM (the beam must hold all entry points)
+
+TOPOLOGIES = ("flat", "ivf", "graph", "sharded", "host-rerank")
+
+
+class MatrixContext(protocol_rules.ProtocolContext):
+    """Protocol fixture + the compiled-program cache for the HLO cells."""
+
+    def __init__(self):
+        super().__init__(n=N, D=D, d=D_LOW, c=C, m=M,
+                         sort_block=SORT_BLOCK, seed=0)
+        self._graph = None
+
+    def graph_index(self):
+        if self._graph is None:
+            from repro.index import graph
+            self._graph = graph.build(np.asarray(self.X), r=GRAPH_R,
+                                      n_entries=GRAPH_ENTRIES, seed=0)
+        return self._graph
+
+    def artifacts(self, mode):
+        from repro.core import search as msearch
+        return msearch.SearchArtifacts(scorer=self.scorer(mode),
+                                       x_full=self.X,
+                                       model=self.model_for(mode))
+
+
+def _compile_state_search(state, queries):
+    import jax
+    from repro.core import search as msearch
+    fn = jax.jit(msearch.state_search, static_argnames=("k", "kappa"))
+    return fn.lower(queries, state, k=K, kappa=KAPPA).compile()
+
+
+def _cell_rules(scorer, dense_dims, trip_budget, extra=()):
+    rules = [hlo_rules.NoDenseScoreMatrix(*dense_dims),
+             hlo_rules.NoHostTransferInStep(),
+             hlo_rules.NoGatherOnFusedPath(),
+             hlo_rules.WhileTripBudget(trip_budget)]
+    rules.extend(extra)
+    return rules
+
+
+def _audit_cell(ctx, mode, topo):
+    """Compile one (mode, topology) cell and return its rule results."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import search as msearch
+    from repro.index import ivf, graph
+    from repro.index.protocol import replace
+
+    target = f"{topo}/{mode}"
+    scorer = ctx.scorer(mode)
+    n_rows = scorer.n_rows
+    fused = mode.endswith("sorted")
+    art = ctx.artifacts(mode)
+
+    if topo == "flat":
+        state = msearch.make_state(art, block=FLAT_BLOCK)
+        compiled = _compile_state_search(state, ctx.Q)
+        block = getattr(scorer, "layout_block", FLAT_BLOCK)
+        rules = _cell_rules(scorer, (M, n_rows),
+                            trip_budget=n_rows // block + 16)
+        # donation: the engine step the accelerator path compiles
+        from repro.serve import engine as serve_engine
+        step = functools.partial(serve_engine._engine_step, k=K,
+                                 kappa=KAPPA)
+        donated = jax.jit(step, donate_argnums=(1,)).lower(
+            ctx.Q, state).compile()
+        n_leaves = len(jax.tree_util.tree_leaves(state))
+        res = run_rules(hlo_rules.HLOProgram.of(compiled, label=target),
+                        rules, target=target)
+        res += run_rules(
+            hlo_rules.HLOProgram.of(donated, label=target),
+            [hlo_rules.DonationCoverage(range(1, 1 + n_leaves))],
+            target=target)
+        return res
+
+    if topo == "ivf":
+        if fused:
+            idx = ivf.build_aligned(ctx.gvm, ctx.X, nprobe=NPROBE)
+        else:
+            idx = ivf.with_reduced_centers(
+                ivf.build(jax.random.PRNGKey(1), ctx.X,
+                          n_lists=N_LISTS),
+                scorer, ctx.model_for(mode))
+            idx = replace(idx, nprobe=NPROBE)
+        state = msearch.make_state(art, index=idx)
+        compiled = _compile_state_search(state, ctx.Q)
+        dense = (M, n_rows)
+        rules = _cell_rules(scorer, dense, trip_budget=512)
+        if fused:
+            # the PR-5 contract: the fused fine step never materializes
+            # the (m, nprobe*max_len) gathered score matrix
+            p = idx.nprobe * idx.lists.shape[1]
+            rules.append(hlo_rules.NoDenseScoreMatrix(M, p))
+        return run_rules(hlo_rules.HLOProgram.of(compiled, label=target),
+                         rules, target=target)
+
+    if topo == "graph":
+        idx = replace(ctx.graph_index(), beam=BEAM, max_hops=MAX_HOPS,
+                      expand=EXPAND)
+        if fused:
+            idx = graph.with_fused_scan(idx, scorer)
+        state = msearch.make_state(art, index=idx)
+        compiled = _compile_state_search(state, ctx.Q)
+        rules = _cell_rules(scorer, (M, n_rows), trip_budget=512)
+        if fused:
+            # the PR-6 contract at traversal scope: no (m, expand*R)
+            # score matrix over the gathered neighbor rows. The
+            # (m, beam+expand*R) shape is NOT forbidden here -- the beam
+            # loop's merge of already-reduced candidate VALUES into the
+            # beam is that wide by construction (O(m*beam) bytes); its
+            # absence is a KERNEL-scope contract, asserted where
+            # test_graph_scan compiles graph_scan_beam_step alone.
+            rules.append(hlo_rules.NoDenseScoreMatrix(M, EXPAND * GRAPH_R))
+        return run_rules(hlo_rules.HLOProgram.of(compiled, label=target),
+                         rules, target=target)
+
+    if topo == "sharded":
+        from repro.index import distributed
+        idx, stacked = distributed.build_sharded_index(
+            "flat", mode, ctx.X, ctx.model_for(mode), n_shards=2,
+            sort_block=SORT_BLOCK)
+
+        def local(q, index, sc_):
+            return index.search_local(q, sc_, K, KAPPA)
+
+        compiled = jax.jit(local).lower(ctx.Q, idx, stacked).compile()
+        per = distributed._take_shard(stacked, 0).n_rows
+        rules = _cell_rules(scorer, (M, n_rows), trip_budget=512,
+                            extra=[hlo_rules.NoDenseScoreMatrix(M, per)])
+        return run_rules(hlo_rules.HLOProgram.of(compiled, label=target),
+                         rules, target=target)
+
+    if topo == "host-rerank":
+        demoted = msearch.demote_rerank_tier(art)
+        state = msearch.make_state(demoted, block=FLAT_BLOCK)
+        fn = jax.jit(msearch.state_candidates, static_argnames=("kappa",))
+        compiled = fn.lower(ctx.Q, state, kappa=KAPPA).compile()
+        block = getattr(scorer, "layout_block", FLAT_BLOCK)
+        rules = _cell_rules(scorer, (M, n_rows),
+                            trip_budget=n_rows // block + 16)
+        if mode != "full":
+            # the PR-8 contract: the demoted (n, D) store never enters
+            # the candidates trace ("full" legitimately scores in R^D)
+            rules.append(hlo_rules.NoDenseScoreMatrix(
+                N, D, dtypes=("f32",)))
+        return run_rules(hlo_rules.HLOProgram.of(compiled, label=target),
+                         rules, target=target)
+
+    raise ValueError(f"unknown topology {topo!r}")
+
+
+def source_rule_set():
+    return [source_rules.NoJaxDebug(),
+            source_rules.NoIsinstanceDispatch(),
+            source_rules.NoHostSyncInJit(),
+            source_rules.NoRawCompatAPIs()]
+
+
+def protocol_rule_set(modes):
+    rules = []
+    for mode in modes:
+        rules += [protocol_rules.ScorerSurface(mode),
+                  protocol_rules.IdTranslationContract(mode),
+                  protocol_rules.TreedefStableStreaming(mode)]
+    rules += [protocol_rules.TreedefStableIndexRefresh("flat"),
+              protocol_rules.TreedefStableIndexRefresh("ivf"),
+              protocol_rules.TreedefStableIndexRefresh(
+                  "ivf", mode="gleanvec"),
+              protocol_rules.TreedefStableIndexRefresh("graph"),
+              protocol_rules.TreedefStableIndexRefresh("sharded"),
+              protocol_rules.LeaflessAuxHostTier(),
+              protocol_rules.StaticConfigInTreedef("flat", "block"),
+              protocol_rules.StaticConfigInTreedef("ivf", "nprobe"),
+              protocol_rules.StaticConfigInTreedef("graph", "beam")]
+    return rules
+
+
+def run_lint():
+    tree = source_rules.SourceTree(SRC_ROOT)
+    return run_rules(tree, source_rule_set(), target="src/repro")
+
+
+def run_audit(out: str = "ANALYSIS.json", skip_hlo: bool = False):
+    import jax
+    from repro.core.scorer import MODES
+
+    results = list(run_lint())
+    print(f"[audit] source lint: {len(results)} rules", flush=True)
+
+    ctx = MatrixContext()
+    results += run_rules(ctx, protocol_rule_set(MODES))
+    print(f"[audit] protocol rules done ({len(results)} total)",
+          flush=True)
+
+    if not skip_hlo:
+        for mode in MODES:
+            for topo in TOPOLOGIES:
+                cell = _audit_cell(ctx, mode, topo)
+                bad = failures(cell)
+                mark = "FAIL" if bad else "ok"
+                print(f"[audit] {topo}/{mode}: {mark}", flush=True)
+                results += cell
+
+    payload = results_to_json(
+        results, jax_version=jax.__version__,
+        backend=jax.default_backend(),
+        matrix={"modes": list(MODES),
+                "topologies": [] if skip_hlo else list(TOPOLOGIES)})
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    bad = failures(results)
+    counts = payload["counts"]
+    print(f"[audit] {counts['passed']} passed, {counts['failed']} failed,"
+          f" {counts['skipped']} skipped -> {out}", flush=True)
+    for r in bad:
+        print(f"[audit] FAIL {r.rule}[{r.target}]: {r.evidence}",
+              flush=True)
+    return 1 if bad else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.analysis.run",
+                                 description=__doc__.split("\n")[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    ap_audit = sub.add_parser("audit", help="full three-layer audit")
+    ap_audit.add_argument("--out", default="ANALYSIS.json")
+    ap_audit.add_argument("--skip-hlo", action="store_true",
+                          help="protocol + source layers only (no "
+                               "compilation; quick local check)")
+    sub.add_parser("lint", help="AST source lint only (no jax)")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "lint":
+        results = run_lint()
+        bad = failures(results)
+        for r in results:
+            mark = "FAIL" if (not r.passed and not r.skipped) else "ok"
+            print(f"[lint] {mark} {r.rule}: {r.evidence}")
+        return 1 if bad else 0
+    return run_audit(out=args.out, skip_hlo=args.skip_hlo)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

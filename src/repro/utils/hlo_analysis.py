@@ -17,16 +17,24 @@ collective traffic at all. We therefore parse ``compiled.as_text()``:
   * dot FLOPs = 2 * prod(result_shape) * contracting_size.
 
 All byte sizes are per-device (the HLO is the post-SPMD module).
+
+Dialect note: jax <= 0.4 / older XLA prints every name with a ``%`` sigil
+and full computation signatures (``ENTRY %main.9 (p.1: f32[8]) -> f32[8]
+{``); newer XLA (jax >= 0.6) drops the sigil and may print bare headers
+(``ENTRY main.9 {``) and bare operand names (``add(p.1, c.2)``). Every
+regex here treats the sigil and the signature as optional, and operand
+extraction falls back to last-token parsing when no sigil is present --
+``tests/fixtures/hlo/`` pins one fixture per dialect.
 """
 from __future__ import annotations
 
 import re
 from collections import defaultdict
-from typing import Dict, Optional, Tuple
+from typing import Dict, FrozenSet, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["analyze_hlo", "normalize_cost", "HLOStats"]
+__all__ = ["analyze_hlo", "buffer_shapes", "normalize_cost", "HLOStats"]
 
 
 def normalize_cost(cost) -> dict:
@@ -50,13 +58,17 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+# computation header: '%name (sig) -> ... {' (0.4) or bare 'name {' (0.6+)
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*[({]")
 _WHILE_RE = re.compile(
     r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
 _DOT_DNUMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
-_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\w+)\[([\d,]*)\]")
+# '%name = (' tuple results keep the FIRST element shape for the def table
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*\(?\s*(\w+)\[([\d,]*)\]")
 _SIG_RE = re.compile(r"%?([\w.\-]+):\s*(\w+)\[([\d,]*)\]")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
+_NAME_TAIL_RE = re.compile(r"([\w.\-]+)\s*$")
 
 MAX_SANE_TRIPS = 1_000_000
 
@@ -85,7 +97,67 @@ def _operand_names(s: str):
             if depth == 0:
                 break
         cur += ch
-    return re.findall(r"%([\w.\-]+)", cur)
+    if "%" in cur:
+        return re.findall(r"%([\w.\-]+)", cur)
+    # sigil-less dialect: operands are 'f32[8]{0} name' or bare 'name';
+    # split at depth-0 commas and keep each piece's trailing identifier
+    names, depth, piece, pieces = [], 0, "", []
+    for ch in cur:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            pieces.append(piece)
+            piece = ""
+        else:
+            piece += ch
+    pieces.append(piece)
+    for p in pieces:
+        m = _NAME_TAIL_RE.search(p.strip())
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+def _result_shapes(line: str):
+    """(dtype, dims) pairs of the buffer(s) an instruction DEFINES --
+    tuple results contribute every element; operand shapes are excluded."""
+    rhs = line.split("=", 1)[1].lstrip()
+    if rhs.startswith("("):
+        depth, seg = 0, ""
+        for ch in rhs:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            seg += ch
+        return [(m.group(1), m.group(2)) for m in _SHAPE_RE.finditer(seg)]
+    m = _SHAPE_RE.match(rhs)
+    return [(m.group(1), m.group(2))] if m else []
+
+
+def buffer_shapes(hlo_text: str) -> FrozenSet[str]:
+    """Every buffer shape the module DEFINES, as normalized
+    ``dtype[d0,d1]`` strings: instruction results (tuple elements
+    included) plus computation parameters from either dialect's
+    signatures. The NoDenseScoreMatrix-style rules check forbidden shapes
+    against this set -- operand mentions alone never add a shape, so a
+    shape is present iff some buffer of that shape actually exists."""
+    shapes = set()
+    for ln in hlo_text.splitlines():
+        if not ln.strip() or ln.startswith("HloModule"):
+            continue
+        if _DEF_RE.match(ln):
+            for dt, dims in _result_shapes(ln):
+                shapes.add(f"{dt}[{dims}]")
+        elif ln[0] not in " \t" and "(" in ln:
+            # computation header: parameters are buffers too
+            for ms in _SIG_RE.finditer(ln.split("->")[0]):
+                shapes.add(f"{ms.group(2)}[{ms.group(3)}]")
+    return frozenset(shapes)
 
 
 def analyze_hlo(hlo_text: str,
@@ -98,7 +170,7 @@ def analyze_hlo(hlo_text: str,
     comp_of_line: Dict[int, str] = {}
     current = None
     for i, ln in enumerate(lines):
-        if not ln.strip():
+        if not ln.strip() or ln.startswith("HloModule"):
             continue
         if ln and not ln[0].isspace():
             m = _COMP_START_RE.match(ln)

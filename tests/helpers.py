@@ -1,0 +1,26 @@
+"""Shared test helpers.
+
+``assert_same_topk`` is the parity tests' common assertion (fused vs
+gathered, sharded vs local, aligned vs reference): same (value, id) SETS
+per query. It lived as a private copy in test_ivf_scan / test_graph_scan;
+one definition here keeps the tie-handling semantics identical everywhere.
+
+HLO shape assertions go through ``repro.analysis.assert_rules`` with
+``NoDenseScoreMatrix`` / ``BufferPresent`` -- the registry owns those
+contracts; tests just pick which rule applies to which compiled program.
+"""
+import numpy as np
+
+
+def assert_same_topk(res_a, res_b, label="", rtol=1e-5, atol=1e-5):
+    """Same (value, id) sets per query (top-k order may differ on exact
+    ties; ids are unique so sorting by id aligns both)."""
+    va, ia = (np.asarray(x) for x in res_a)
+    vb, ib = (np.asarray(x) for x in res_b)
+    oa, ob = np.argsort(ia, axis=1), np.argsort(ib, axis=1)
+    np.testing.assert_array_equal(np.take_along_axis(ia, oa, 1),
+                                  np.take_along_axis(ib, ob, 1),
+                                  err_msg=label)
+    np.testing.assert_allclose(np.take_along_axis(va, oa, 1),
+                               np.take_along_axis(vb, ob, 1),
+                               rtol=rtol, atol=atol, err_msg=label)

@@ -1,0 +1,350 @@
+"""Analyzer self-tests: every rule passes on a conforming fixture and
+FAILS on its seeded-violation counterexample -- a deliberately
+dense-scoring toy must fail NoDenseScoreMatrix, a non-donated step must
+fail DonationCoverage, a trip-heavy loop must fail WhileTripBudget, and
+seeded protocol / source violations must trip their rules. This is the
+meta-coverage the audit needs to be trustworthy: a rule that cannot fail
+enforces nothing."""
+import functools
+import textwrap
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import assert_rules, registry
+from repro.analysis.hlo_rules import (BufferPresent, DonationCoverage,
+                                      HLOProgram, NoDenseScoreMatrix,
+                                      NoGatherOnFusedPath,
+                                      NoHostTransferInStep,
+                                      WhileTripBudget, donated_params)
+from repro.analysis.protocol_rules import (IdTranslationContract,
+                                           LeaflessAuxHostTier,
+                                           ProtocolContext, ScorerSurface,
+                                           StaticConfigInTreedef,
+                                           TreedefStableIndexRefresh,
+                                           TreedefStableStreaming)
+from repro.analysis.source_rules import (NoHostSyncInJit,
+                                         NoIsinstanceDispatch, NoJaxDebug,
+                                         NoRawCompatAPIs, SourceTree)
+
+pytestmark = pytest.mark.tier1
+
+
+# ---------------------------------------------------------------------------
+# HLO rules
+# ---------------------------------------------------------------------------
+
+M, N_DENSE = 4, 333        # odd n: no legitimate buffer collides
+
+
+@pytest.fixture(scope="module")
+def dense_toy():
+    """The seeded violation: dense (m, n) scoring then top-k."""
+
+    def dense_search(q, x):
+        return jax.lax.top_k(q @ x.T, 3)
+
+    return HLOProgram.of(jax.jit(dense_search).lower(
+        jnp.ones((M, 8)), jnp.ones((N_DENSE, 8))).compile())
+
+
+def test_no_dense_score_matrix_fails_on_dense_toy(dense_toy):
+    res = NoDenseScoreMatrix(M, N_DENSE).check(dense_toy)
+    assert not res.passed and "f32[4,333]" in res.evidence
+    with pytest.raises(AssertionError, match="NoDenseScoreMatrix"):
+        assert_rules(dense_toy, [NoDenseScoreMatrix(M, N_DENSE)],
+                     target="toy")
+
+
+def test_no_dense_score_matrix_passes_on_absent_shape(dense_toy):
+    assert_rules(dense_toy, [NoDenseScoreMatrix(M, N_DENSE + 1)])
+
+
+def test_buffer_present_is_the_positive_twin(dense_toy):
+    assert BufferPresent(M, N_DENSE).check(dense_toy).passed
+    assert not BufferPresent(M, N_DENSE + 1).check(dense_toy).passed
+
+
+def _donatable_step(q, state):
+    a, b = state
+    return q @ a, (a + 1.0, b * 2.0)
+
+
+def test_donation_coverage_passes_on_donated_step():
+    q = jnp.ones((4, 8))
+    state = (jnp.ones((8, 8)), jnp.ones((8,)))
+    donated = jax.jit(_donatable_step, donate_argnums=(1,)).lower(
+        q, state).compile()
+    assert donated_params(donated.as_text()) >= {1, 2}
+    assert_rules(donated, [DonationCoverage([1, 2])])
+
+
+def test_donation_coverage_fails_on_non_donated_step():
+    q = jnp.ones((4, 8))
+    state = (jnp.ones((8, 8)), jnp.ones((8,)))
+    plain = jax.jit(_donatable_step).lower(q, state).compile()
+    res = DonationCoverage([1, 2]).check(HLOProgram.of(plain))
+    assert not res.passed and "not aliased" in res.evidence
+
+
+def test_while_trip_budget_on_compiled_scan():
+    def f(x):
+        return jax.lax.fori_loop(0, 9, lambda i, c: c * 1.5 + i, x)
+
+    prog = HLOProgram.of(jax.jit(f).lower(jnp.ones((16,))).compile())
+    assert WhileTripBudget(16).check(prog).passed
+    res = WhileTripBudget(4).check(prog)
+    assert not res.passed and "over budget" in res.evidence
+
+
+GATHERY_HLO = """\
+HloModule toy, entry_computation_layout={(f32[64,8]{1,0}, s32[12]{0})->f32[12,8]{1,0}}
+
+ENTRY %main.4 (p0.1: f32[64,8], p1.2: s32[12]) -> f32[12,8] {
+  %p0.1 = f32[64,8]{1,0} parameter(0)
+  %p1.2 = s32[12]{0} parameter(1)
+  ROOT %g.3 = f32[12,8]{1,0} gather(f32[64,8]{1,0} %p0.1, s32[12]{0} %p1.2), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,8}
+}
+"""
+
+
+def test_no_gather_fails_on_raw_text_with_gather():
+    res = NoGatherOnFusedPath().check(HLOProgram(GATHERY_HLO))
+    assert not res.passed and "gather" in res.evidence
+    # small gathers under an explicit byte budget are tolerated
+    assert NoGatherOnFusedPath(max_bytes=1 << 20).check(
+        HLOProgram(GATHERY_HLO)).passed
+
+
+def test_no_gather_self_skips_on_cpu_compiled(dense_toy):
+    if jax.default_backend() != "cpu":
+        pytest.skip("backend-skip behavior is the CPU-side contract")
+    res = NoGatherOnFusedPath().check(dense_toy)
+    assert res.skipped and res.passed
+
+
+HOSTY_HLO = """\
+HloModule toy, entry_computation_layout={(f32[8]{0})->f32[8]{0}}
+
+ENTRY %main.5 (p0.1: f32[8]) -> f32[8] {
+  %p0.1 = f32[8]{0} parameter(0)
+  %tok.2 = token[] after-all()
+  %out.3 = token[] outfeed(f32[8]{0} %p0.1, token[] %tok.2)
+  ROOT %r.4 = f32[8]{0} copy(f32[8]{0} %p0.1)
+}
+"""
+
+
+def test_no_host_transfer_fails_on_outfeed(dense_toy):
+    res = NoHostTransferInStep().check(HLOProgram(HOSTY_HLO))
+    assert not res.passed and "outfeed" in res.evidence
+    assert NoHostTransferInStep().check(dense_toy).passed
+
+
+# ---------------------------------------------------------------------------
+# Protocol rules (shared small context; the module fixture keeps the two
+# model fits to one per test session)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return ProtocolContext(n=256, D=16, d=4, c=2, m=8, sort_block=32,
+                           seed=0)
+
+
+@pytest.mark.parametrize("mode", ["full", "gleanvec", "gleanvec-sorted",
+                                  "gleanvec-int8-sorted"])
+def test_protocol_rules_pass_on_real_scorers(ctx, mode):
+    assert_rules(ctx, [ScorerSurface(mode), IdTranslationContract(mode),
+                       TreedefStableStreaming(mode)])
+
+
+def test_protocol_rules_pass_on_indices_and_host_tier(ctx):
+    assert_rules(ctx, [TreedefStableIndexRefresh("flat"),
+                       LeaflessAuxHostTier(),
+                       StaticConfigInTreedef("flat", "block")])
+
+
+class _StubCtx:
+    """Duck-typed ProtocolContext carrying one (broken) scorer."""
+
+    def __init__(self, scorer):
+        self._scorer = scorer
+
+    def scorer(self, mode):
+        return self._scorer
+
+
+class _BadIdScorer:
+    n_rows = 8
+
+    def translate_ids(self, ids):
+        return jnp.abs(ids)          # -1 NOT kept inert
+
+    def globalize_ids(self, ids, shard_idx):
+        return jnp.abs(ids)
+
+
+def test_id_translation_fails_on_seeded_violation():
+    res = IdTranslationContract("stub").check(_StubCtx(_BadIdScorer()))
+    assert not res.passed and "-1" in res.evidence
+
+
+def test_scorer_surface_fails_on_missing_methods():
+    res = ScorerSurface("stub").check(_StubCtx(_BadIdScorer()))
+    assert not res.passed and "score_block" in res.evidence
+
+
+def test_treedef_streaming_fails_on_seeded_aval_change(ctx, monkeypatch):
+    from repro.core import streaming
+
+    def chopping_insert(art, rows, ids=None):
+        return art._replace(x_full=art.x_full[:-1]), jnp.array([0])
+
+    monkeypatch.setattr(streaming, "insert_rows", chopping_insert)
+    res = TreedefStableStreaming("full").check(ctx)
+    assert not res.passed and "aval" in res.evidence
+
+
+def test_treedef_index_refresh_fails_on_seeded_retype(ctx, monkeypatch):
+    from repro.index.protocol import FlatIndex, replace
+
+    monkeypatch.setattr(
+        FlatIndex, "refreshed",
+        lambda self, scorer, model: replace(self, block=self.block * 2))
+    res = TreedefStableIndexRefresh("flat").check(ctx)
+    assert not res.passed and "treedef changed" in res.evidence
+
+
+def test_static_config_fails_on_config_leaked_into_leaves(ctx):
+    from repro.index.protocol import register_index_pytree
+
+    @dataclass(frozen=True, eq=False)
+    class LeakyIndex:
+        block: int = 64
+
+    # deliberately WRONG registration: config as a data leaf
+    register_index_pytree(LeakyIndex, data_fields=("block",),
+                          static_fields=())
+    res = StaticConfigInTreedef(lambda _ctx: LeakyIndex(), "block") \
+        .check(ctx)
+    assert not res.passed and "treedef" in res.evidence
+
+
+def test_leafless_host_tier_fails_on_leafy_store(ctx, monkeypatch):
+    from repro.core import rerank_tier
+
+    monkeypatch.setattr(rerank_tier, "demote",
+                        lambda x, shards=0: (jnp.asarray(x),))
+    monkeypatch.setattr(rerank_tier, "promote", lambda s: s[0])
+    res = LeaflessAuxHostTier().check(ctx)
+    assert not res.passed and "leaves" in res.evidence
+
+
+# ---------------------------------------------------------------------------
+# Source rules (violations seeded into a temp tree)
+# ---------------------------------------------------------------------------
+
+
+def _tree(tmp_path, rel, body):
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(body))
+    return SourceTree(str(tmp_path))
+
+
+def test_no_jax_debug_fails_and_respects_waiver(tmp_path):
+    tree = _tree(tmp_path, "core/x.py", """\
+        import jax
+        def f(x):
+            jax.debug.print("x={}", x)
+            return x
+    """)
+    res = NoJaxDebug().check(tree)
+    assert not res.passed and "core/x.py:3" in res.evidence
+    tree = _tree(tmp_path, "core/x.py", """\
+        import jax
+        def f(x):
+            jax.debug.print("x={}", x)  # analysis: allow-jax-debug
+            return x
+    """)
+    assert NoJaxDebug().check(tree).passed
+
+
+def test_no_isinstance_dispatch_fails_on_hot_path_only(tmp_path):
+    body = """\
+        def pick(s):
+            if isinstance(s, LinearScorer):
+                return 1
+            return 0
+    """
+    assert not NoIsinstanceDispatch().check(
+        _tree(tmp_path / "hot", "core/search.py", body)).passed
+    # the same construct OUTSIDE a hot path is not this rule's business
+    assert NoIsinstanceDispatch().check(
+        _tree(tmp_path / "cold", "launch/tool.py", body)).passed
+
+
+def test_no_host_sync_in_jit_fails_on_item_and_np(tmp_path):
+    tree = _tree(tmp_path, "core/y.py", """\
+        import functools
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            return np.asarray(x) + 1
+
+        @functools.partial(jax.jit, static_argnames=())
+        def g(x):
+            s = x.sum()
+            return s.item()
+
+        def not_jitted(x):
+            return np.asarray(x)        # fine: host-side helper
+    """)
+    res = NoHostSyncInJit().check(tree)
+    assert not res.passed
+    assert "np.asarray" in res.evidence and ".item" in res.evidence
+    assert "not_jitted" not in res.evidence
+
+
+def test_no_raw_compat_apis_fails_outside_shim(tmp_path):
+    body = """\
+        import jax
+        def make(axes):
+            return jax.make_mesh((2,), axes)
+    """
+    assert not NoRawCompatAPIs().check(
+        _tree(tmp_path / "raw", "serve/z.py", body)).passed
+    # the shim module itself is the one sanctioned caller
+    assert NoRawCompatAPIs().check(
+        _tree(tmp_path / "shim", "utils/jax_compat.py", body)).passed
+
+
+def test_repo_tree_is_lint_clean():
+    """Satellite: the shipped tree starts green under its own lint."""
+    from repro.analysis.run import SRC_ROOT, source_rule_set
+
+    assert_rules(SourceTree(SRC_ROOT), source_rule_set(), target="src")
+
+
+# ---------------------------------------------------------------------------
+# registry plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_results_to_json_mirrors_bench_convention(dense_toy):
+    results = registry.run_rules(
+        dense_toy, [NoDenseScoreMatrix(M, N_DENSE),
+                    NoDenseScoreMatrix(M, N_DENSE + 1)], target="toy")
+    payload = registry.results_to_json(results, backend="cpu")
+    assert payload["analysis"] == "audit" and not payload["passed"]
+    assert payload["counts"] == {"passed": 1, "failed": 1, "skipped": 0}
+    assert {r["target"] for r in payload["results"]} == {"toy"}
+    assert all({"rule", "passed", "evidence", "family"} <= set(r)
+               for r in payload["results"])

@@ -1,10 +1,18 @@
 """Roofline HLO parser: trip counts, collective bytes, dot FLOPs on a real
-compiled module with known structure."""
+compiled module with known structure, plus dialect-pinning fixtures that
+hold the parser to BOTH HLO text styles (jax 0.4 prints ``%`` sigils,
+full computation signatures, and typed operands; jax 0.6+/newer XLA
+drops all three)."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.utils import hlo_analysis, roofline
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures", "hlo")
 
 
 def test_scan_trip_correction():
@@ -53,3 +61,44 @@ def test_dus_counted_at_slice_size():
     stats = hlo_analysis.analyze_hlo(compiled.as_text())
     # 100 slice writes of 64KB each ~ 6.5MB + carry adds; NOT 100 x 6.5MB
     assert stats["write_bytes"] < 5e7
+
+
+@pytest.mark.parametrize("dialect", ["dialect_jax04.hlo",
+                                     "dialect_jax06.hlo"])
+def test_parser_pins_both_hlo_dialects(dialect):
+    """The SAME logical program rendered in both text dialects parses to
+    the SAME pinned numbers: a 7-trip while around a (32,64)@(64,2048)
+    dot, one all-reduce of the (32,2048) result, and two donated params.
+
+    Pins:
+      dot_flops        = 7 trips x 2*32*2048*64  = 58,720,256
+      collective_bytes = 32*2048*4               = 262,144
+      donated          = {1, 2} (input_output_alias header entries)
+    """
+    with open(os.path.join(FIXTURES, dialect)) as f:
+        text = f.read()
+
+    stats = hlo_analysis.analyze_hlo(text)
+    assert stats["while_trips"] == {"while_body.20": 7}
+    assert stats["dot_flops"] == 7 * 2 * 32 * 2048 * 64
+    assert stats["collective_bytes"] == 32 * 2048 * 4
+    assert stats["n_collectives"] == 1
+
+    shapes = hlo_analysis.buffer_shapes(text)
+    assert {"f32[32,2048]", "f32[32,64]", "f32[64,2048]"} <= shapes
+
+    from repro.analysis.hlo_rules import donated_params
+    assert donated_params(text) == {1, 2}
+
+
+def test_both_dialect_fixtures_parse_identically():
+    """Dialect must be cosmetics only: every stat equal across the two."""
+    texts = {}
+    for name in ("dialect_jax04.hlo", "dialect_jax06.hlo"):
+        with open(os.path.join(FIXTURES, name)) as f:
+            texts[name] = f.read()
+    a = hlo_analysis.analyze_hlo(texts["dialect_jax04.hlo"])
+    b = hlo_analysis.analyze_hlo(texts["dialect_jax06.hlo"])
+    assert a == b
+    assert hlo_analysis.buffer_shapes(texts["dialect_jax04.hlo"]) == \
+        hlo_analysis.buffer_shapes(texts["dialect_jax06.hlo"])

@@ -192,6 +192,46 @@ def test_sharded_local_reference_recall(setup):
     assert float(metrics.recall_at_k(jnp.asarray(ids), gt)) > 0.7
 
 
+def test_protocol_contracts_via_registry(setup):
+    """The scorer/index contracts are defined ONCE, in
+    ``repro.analysis``: run the registry's rules against THIS module's
+    fixtures instead of re-asserting the method surface, the -1 id
+    convention, and the static-config treedef discipline inline."""
+    from repro.analysis import assert_rules
+    from repro.analysis import protocol_rules as prules
+
+    ds, X, lin, gvm, _ = setup
+
+    class Ctx:
+        """Adapter: this module's fixture as the rules' context."""
+
+        sort_block = 64
+
+        def __init__(self):
+            self.X = X
+            self.Q = jnp.asarray(ds.queries_test[:8])
+            self._cache = {}
+
+        def model_for(self, mode):
+            return _model_for(mode, lin, gvm)
+
+        def scorer(self, mode):
+            if mode not in self._cache:
+                self._cache[mode] = sc.build_scorer(
+                    mode, X, self.model_for(mode), block=self.sort_block)
+            return self._cache[mode]
+
+    ctx = Ctx()
+    rules = []
+    for mode in ALL_MODES:
+        rules += [prules.ScorerSurface(mode),
+                  prules.IdTranslationContract(mode)]
+    rules += [prules.TreedefStableIndexRefresh("flat"),
+              prules.StaticConfigInTreedef("flat", "block"),
+              prules.StaticConfigInTreedef("ivf", "nprobe")]
+    assert_rules(ctx, rules)
+
+
 # ---------------------------------------------------------------------------
 # Multi-device parity (subprocess: the main process must keep 1 device).
 # ---------------------------------------------------------------------------

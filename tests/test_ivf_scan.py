@@ -32,7 +32,11 @@ from repro.index.protocol import replace
 from repro.index.topk import NEG_INF
 from repro.kernels.ivf_scan import fine_step_bytes
 from repro.serve.engine import ServingEngine
+from repro.analysis import assert_rules
+from repro.analysis.hlo_rules import BufferPresent, NoDenseScoreMatrix
 from repro.utils import hlo_analysis
+
+from helpers import assert_same_topk as _assert_same_topk
 
 pytestmark = pytest.mark.tier1
 
@@ -45,20 +49,6 @@ def _sorted_scorer(mode, model, X, block=64, slack_blocks=0):
                                          slack_blocks=slack_blocks)
     return sc.sorted_gleanvec_quantized_scorer(model, X, block=block,
                                                slack_blocks=slack_blocks)
-
-
-def _assert_same_topk(res_a, res_b, label=""):
-    """Same (value, id) sets per query (top-k order may differ on exact
-    ties; ids are unique so sorting by id aligns both)."""
-    va, ia = (np.asarray(x) for x in res_a)
-    vb, ib = (np.asarray(x) for x in res_b)
-    oa, ob = np.argsort(ia, axis=1), np.argsort(ib, axis=1)
-    np.testing.assert_array_equal(np.take_along_axis(ia, oa, 1),
-                                  np.take_along_axis(ib, ob, 1),
-                                  err_msg=label)
-    np.testing.assert_allclose(np.take_along_axis(va, oa, 1),
-                               np.take_along_axis(vb, ob, 1),
-                               rtol=1e-5, atol=1e-5, err_msg=label)
 
 
 @pytest.fixture(scope="module")
@@ -216,15 +206,16 @@ def test_fused_fine_step_moves_4x_fewer_bytes():
                                   code_bytes=1, k=kappa)
     assert fused_bytes * 4 <= gathered_bytes, (fused_bytes, gathered_bytes)
 
-    # no (m, nprobe*L) candidate/score matrix in the fused program: the
-    # gathered path's defining buffer shape must be absent from its HLO
-    fused_hlo = ivf._probe_and_scan.lower(
-        iva.prepare_queries(s, QT), s, iva, kappa).compile().as_text()
+    # no (m, nprobe*L) candidate/score matrix in the fused program, in
+    # any dtype of interest -- and the gathered path really materializes
+    # it (the registry rules own both contracts; see docs/static_analysis)
     p = iva.nprobe * iva.max_len
-    assert f"f32[{m},{p}]" in ivf._probe_and_score.lower(
-        qs, s, ivg, kappa).compile().as_text()
-    assert f"f32[{m},{p}]" not in fused_hlo
-    assert f"s32[{m},{p}]" not in fused_hlo
+    assert_rules(ivf._probe_and_score.lower(qs, s, ivg, kappa).compile(),
+                 [BufferPresent(m, p, dtypes=("f32",))],
+                 target="ivf/gathered")
+    assert_rules(ivf._probe_and_scan.lower(
+        iva.prepare_queries(s, QT), s, iva, kappa).compile(),
+                 [NoDenseScoreMatrix(m, p)], target="ivf/fused")
 
 
 def test_insert_ids_vectorized_matches_sequential(setup):

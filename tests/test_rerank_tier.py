@@ -171,18 +171,27 @@ def test_sharded_host_store_routes_global_ids(setup):
 
 
 def test_host_store_is_leafless_aux(setup):
-    """The pytree contract behind zero-recompile swaps: a HostStore
-    contributes NO leaves, equal (shape, dtype) stores are treedef-equal
-    across content changes, and jitting over one never materializes it."""
+    """The pytree contract behind zero-recompile swaps, enforced by the
+    registry's ONE definition (``LeaflessAuxHostTier``): HostStore and
+    ShardedHostStore contribute NO leaves, aux equality is the store's
+    (shape, dtype) aval -- content-stable, shape-guarded -- and
+    demote/promote round-trips the rows exactly. Plus the ``.at[].set``
+    path this module owns: an updated store stays treedef-equal too."""
+    from repro.analysis import assert_rules
+    from repro.analysis.protocol_rules import LeaflessAuxHostTier
+
     _, X, _, _ = setup
+
+    class Ctx:
+        pass
+
+    ctx = Ctx()
+    ctx.X = X[:64]
+    assert_rules(ctx, [LeaflessAuxHostTier()], target="host-tier")
     a = rerank_tier.demote(np.asarray(X[:64]))
     b = a.at[np.array([0])].set(np.ones((1, X.shape[1]), np.float32))
-    leaves, treedef = jax.tree_util.tree_flatten(a)
-    assert leaves == []
-    assert treedef == jax.tree_util.tree_flatten(b)[1]   # refresh-stable
-    assert jax.tree_util.tree_flatten(
-        rerank_tier.demote(np.zeros((65, X.shape[1]), np.float32)))[1] \
-        != treedef                                       # shape guards
+    assert jax.tree_util.tree_flatten(a)[1] == \
+        jax.tree_util.tree_flatten(b)[1]                 # update-stable
 
 
 def test_rerank_refuses_host_gather_inside_jit(setup):
