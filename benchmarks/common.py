@@ -15,11 +15,17 @@ import numpy as np
 from repro.data import vectors
 
 # Scaled statistical twins of Table 1 (full-size shapes live in the dry-run).
-BENCH_N = int(os.environ.get("BENCH_N", 8000))
+# FULL_* are the committed-baseline workload sizes: every BENCH_*.json
+# records the workload it was measured at, and the run.py root-mirror
+# refuses to overwrite a committed full-size baseline with rows from a
+# smaller (e.g. --smoke) workload.
+FULL_BENCH_N = 8000
+FULL_BENCH_QUERIES = 1024
+BENCH_N = int(os.environ.get("BENCH_N", FULL_BENCH_N))
 # LeanVec-Sphering requires m >~ D learning queries: K_Q = QQ^T must have
 # full rank or W's pseudo-inverse collapses the query projection (measured:
 # m=128 at D=512 flips the Fig-5 ordering). The paper uses 10k.
-BENCH_QUERIES = int(os.environ.get("BENCH_QUERIES", 1024))
+BENCH_QUERIES = int(os.environ.get("BENCH_QUERIES", FULL_BENCH_QUERIES))
 
 ROWS: List[str] = []
 RESULTS: List[Dict] = []
@@ -114,7 +120,24 @@ def write_json_results(out_dir: str) -> List[str]:
     for group, entries in sorted(groups.items()):
         path = os.path.join(out_dir, f"BENCH_{group}.json")
         with open(path, "w") as f:
-            json.dump({"bench": group, "results": entries}, f, indent=2)
+            json.dump({"bench": group,
+                       "workload": {"bench_n": BENCH_N,
+                                    "bench_queries": BENCH_QUERIES},
+                       "results": entries}, f, indent=2)
             f.write("\n")
         paths.append(path)
     return paths
+
+
+def workload_of(path: str) -> Dict[str, int]:
+    """The workload a BENCH_*.json was measured at. Files predating the
+    workload field are the committed FULL-SIZE baselines -- that default
+    is what makes the run.py mirror guard refuse to clobber them with
+    smaller-workload rows."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {"bench_n": FULL_BENCH_N, "bench_queries": FULL_BENCH_QUERIES}
+    return payload.get("workload", {"bench_n": FULL_BENCH_N,
+                                    "bench_queries": FULL_BENCH_QUERIES})

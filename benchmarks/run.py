@@ -60,16 +60,31 @@ def main(argv=None) -> None:
             f.write("\n".join(common.ROWS) + "\n")
         print(f"# wrote {len(common.ROWS)} rows to {out}")
         # every BENCH_<name>.json also lands at the repo ROOT so the perf
-        # trajectory is visible without digging into results/
+        # trajectory is visible without digging into results/ -- but the
+        # root copies are the COMMITTED full-size baselines, so the mirror
+        # is guarded: a --smoke run never mirrors, and a run at any other
+        # workload than the baseline's recorded one is refused (the rows
+        # stay in results/, the baseline stays intact)
         repo_root = os.path.abspath(os.path.join(os.path.dirname(__file__),
                                                  ".."))
         for p in common.write_json_results(os.path.dirname(
                 os.path.abspath(out))):
             print(f"# wrote {p}")
             dst = os.path.join(repo_root, os.path.basename(p))
-            if os.path.abspath(p) != dst:
-                shutil.copyfile(p, dst)
-                print(f"# wrote {dst}")
+            if os.path.abspath(p) == dst:
+                continue
+            if args.smoke:
+                print(f"# smoke workload: NOT mirrored to {dst}")
+                continue
+            have = common.workload_of(dst) if os.path.exists(dst) else None
+            ran = {"bench_n": common.BENCH_N,
+                   "bench_queries": common.BENCH_QUERIES}
+            if have is not None and have != ran:
+                print(f"# REFUSED to overwrite {dst}: baseline workload "
+                      f"{have} != this run's {ran} (rows kept in {p})")
+                continue
+            shutil.copyfile(p, dst)
+            print(f"# wrote {dst}")
     finally:
         if args.smoke:    # restore for in-process callers (tests)
             common.BENCH_N, common.BENCH_QUERIES = saved

@@ -24,7 +24,7 @@ from repro.analysis.registry import Rule, RuleResult
 __all__ = ["ProtocolContext", "ScorerSurface", "IdTranslationContract",
            "TreedefStableStreaming", "TreedefStableIndexRefresh",
            "LeaflessAuxHostTier", "StaticConfigInTreedef",
-           "SCORER_METHODS"]
+           "BoundedCompileCache", "SCORER_METHODS"]
 
 # The full Scorer protocol surface (core/scorer.py): representation,
 # scanning, sharding, id translation, and the streaming row ops.
@@ -294,6 +294,60 @@ class LeaflessAuxHostTier(Rule):
             return self._fail("; ".join(problems))
         return self._pass("HostStore & ShardedHostStore leafless, "
                           "aval-keyed, round-trip exact")
+
+
+class BoundedCompileCache(Rule):
+    """The async frontend's bucket-shape contract: every batch the
+    coalescer dispatches has a shape from the SMALL, STATIC declared
+    bucket set, so the serving-step executable cache is bounded by
+    ``len(buckets) <= MAX_BUCKETS`` for the life of the process. A
+    dispatch outside the set -- or any cache growth past warmup -- is an
+    unbounded-compile leak (each stray shape re-jits the full search),
+    caught here by the audit instead of as a prod latency incident."""
+
+    name = "BoundedCompileCache"
+    family = "protocol"
+    contract = ("every dispatched batch shape is a declared bucket and "
+                "the compiled-step cache never grows past len(buckets)")
+
+    def check(self, ctx: ProtocolContext) -> RuleResult:
+        from repro.core import search as msearch
+        from repro.serve import frontend as fe_mod
+        from repro.serve.engine import ServingEngine
+
+        arts = ctx.streaming("gleanvec-int8")
+        eng = ServingEngine(msearch.make_state(arts), k=5, kappa=10,
+                            batch_size=ctx.m, dim=ctx.D)
+        fe = fe_mod.ServingFrontend(eng, capacity=4 * ctx.m, start=False)
+        problems = []
+        if len(fe.buckets) > fe_mod.MAX_BUCKETS:
+            problems.append(f"{len(fe.buckets)} buckets exceed "
+                            f"MAX_BUCKETS={fe_mod.MAX_BUCKETS}")
+        warm = eng.n_compiles
+        if warm is None:
+            return self._skip("engine exposes no compile-cache size on "
+                              "this jax version")
+        if warm > len(fe.buckets):
+            problems.append(f"warmup compiled {warm} executables for "
+                            f"{len(fe.buckets)} buckets")
+        Q = np.tile(np.asarray(ctx.Q), (2, 1))
+        for size in (1, 3, ctx.m - 1, ctx.m):
+            for q in Q[:size]:
+                fe.enqueue(q)
+            fe.drain_once()
+        stray = fe.dispatched_shapes - set(fe.buckets)
+        if stray:
+            problems.append(f"dispatched shapes outside the declared "
+                            f"buckets {fe.buckets}: {sorted(stray)}")
+        grown = eng.n_compiles - warm
+        if grown:
+            problems.append(f"compile cache grew {warm} -> "
+                            f"{eng.n_compiles} after warmup")
+        if problems:
+            return self._fail("; ".join(problems))
+        return self._pass(
+            f"{len(fe.dispatched_shapes)} dispatched shapes within "
+            f"buckets={fe.buckets}, cache fixed at {warm} executables")
 
 
 class StaticConfigInTreedef(Rule):

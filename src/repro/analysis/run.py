@@ -217,6 +217,7 @@ def protocol_rule_set(modes):
               protocol_rules.TreedefStableIndexRefresh("graph"),
               protocol_rules.TreedefStableIndexRefresh("sharded"),
               protocol_rules.LeaflessAuxHostTier(),
+              protocol_rules.BoundedCompileCache(),
               protocol_rules.StaticConfigInTreedef("flat", "block"),
               protocol_rules.StaticConfigInTreedef("ivf", "nprobe"),
               protocol_rules.StaticConfigInTreedef("graph", "beam")]

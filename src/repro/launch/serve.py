@@ -37,11 +37,37 @@ killed process from the newest restorable snapshot -- template model, NO
 refit -- and continues the refresh cadence; ``--inject-fault <kind>``
 drills one full fail -> degrade -> recover -> swap cycle end-to-end
 (exits non-zero if the stack mishandles it).
+
+``--frontend`` runs the ASYNC serving topology (`serve/frontend.py`) --
+the ``--stream`` loop's observe/refresh/swap lifecycle moved off-thread,
+with concurrent clients admitted through a bounded coalescing queue::
+
+    clients ----> enqueue(query, deadline) ---------+   Rejected(queue-full
+       |              |                             |   / deadline) -> client
+       |       [bounded admission queue]            |
+       |              | drain: shed expired -------+   Rejected(shed)
+       |        [pad to static bucket shape]
+       |              v
+       |      dispatcher: search_with(state)  <- atomic state read
+       |              |        ^
+       |   slice per-request   | GuardedEngine.swap (validated)
+       v              v        |
+    futures <- ids  RefreshWorker thread: observe -> refresh (supervised:
+                    retry/backoff -> escalate -> degrade -> recover)
+
+Serving never blocks on a refresh; a stuck/crashed worker leaves the
+stale-but-valid state answering (staleness grows, the alertable signal).
+``--frontend --inject-fault {stuck-worker, slow-refresh, poison-burst,
+queue-overflow}`` drills exactly those overload/concurrency faults,
+asserting the frontend keeps answering within SLO or sheds predictably
+(exits non-zero otherwise).
 """
 from __future__ import annotations
 
 import argparse
 import tempfile
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -54,7 +80,7 @@ from repro.core.scorer import MODES
 from repro.data import vectors
 from repro.index import distributed, graph, ivf
 from repro.index.protocol import replace
-from repro.serve import faults, lifecycle
+from repro.serve import faults, frontend, lifecycle
 from repro.serve.engine import ServingEngine
 from repro.train import checkpoint
 
@@ -355,6 +381,217 @@ def run_stream(args):
           f"recoveries={h.n_recoveries}")
 
 
+def _frontend_traffic(fe, queries, n_clients=4, deadline_ms=None,
+                      timeout_s=60.0):
+    """Fire ``queries`` at the frontend from ``n_clients`` concurrent
+    client threads. Returns ``(results {row -> (k,) ids}, rejected
+    {row -> reason})`` -- every offered request is accounted for, served
+    or loudly refused."""
+    results, rejected = {}, {}
+    lock = threading.Lock()
+
+    def client(rows):
+        for i in rows:
+            try:
+                ids = fe.enqueue(queries[i],
+                                 deadline_ms=deadline_ms).result(timeout_s)
+                with lock:
+                    results[i] = ids
+            except frontend.Rejected as e:
+                with lock:
+                    rejected[i] = e.reason
+
+    threads = [threading.Thread(target=client,
+                                args=(range(c, len(queries), n_clients),))
+               for c in range(n_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return results, rejected
+
+
+def _await(cond, timeout_s=30.0, poll_s=0.01):
+    t0 = time.monotonic()
+    while not cond():
+        if time.monotonic() - t0 > timeout_s:
+            return False
+        time.sleep(poll_s)
+    return True
+
+
+def _frontend_drill(args, fe, guarded, worker, release, refresh_fn, QT):
+    """One ``--frontend --inject-fault`` overload/concurrency drill; any
+    mishandling exits 1 through ``_drill_fail``."""
+    kind = args.inject_fault
+    eng = guarded.engine
+    print(f"  -- injecting fault: {kind}")
+    if kind == "poison-burst":
+        burst = faults.burst_overflow(args.dim, args.batch * 4, seed=1,
+                                      poison_frac=0.25)
+        bad = ~np.isfinite(burst).all(axis=1)
+        res, rej = _frontend_traffic(fe, burst)
+        if rej:
+            _drill_fail(f"in-capacity burst was rejected: {rej}")
+        got = np.stack([res[i] for i in range(len(burst))])
+        if not (got[bad] == -1).all():
+            _drill_fail("poisoned rows returned fabricated ids")
+        ref = eng.submit(burst)      # same sanitize gate, unbatched path
+        if not np.array_equal(got, ref):
+            _drill_fail("burst results diverge from direct submit")
+        print(f"  drill PASS: {int(bad.sum())}/{len(burst)} poisoned rows "
+              "-> -1, clean rows bit-identical to submit")
+    elif kind == "queue-overflow":
+        cap = 8
+        fe_q = frontend.ServingFrontend(guarded, capacity=cap, start=False,
+                                        warmup=False)
+        burst = faults.burst_overflow(args.dim, cap + args.batch, seed=2)
+        admitted, n_rej = [], 0
+        for q in burst:              # no dispatcher: the queue must fill
+            try:
+                admitted.append(fe_q.enqueue(q))
+            except frontend.Rejected as e:
+                if e.reason != "queue-full":
+                    _drill_fail(f"overflow rejected as {e.reason!r}")
+                n_rej += 1
+        if n_rej != len(burst) - cap:
+            _drill_fail(f"admitted {len(admitted)}/{len(burst)} past "
+                        f"capacity {cap}")
+        if eng.stats.n_rejected < n_rej:
+            _drill_fail("rejections not counted in ServeStats")
+        while fe_q.queue_depth:
+            fe_q.drain_once()
+        if any((f.result(5)).shape != (eng.k,) for f in admitted):
+            _drill_fail("admitted requests did not resolve after overflow")
+        print(f"  drill PASS: {n_rej} overflow requests rejected loudly, "
+              f"all {cap} admitted requests served")
+    elif kind == "slow-refresh":
+        n0 = worker.n_cycles
+        worker.observe(QT[:args.batch])
+        worker.request_refresh()
+        # serving must proceed WHILE the slowed refresh runs
+        res, rej = _frontend_traffic(fe, QT[:args.batch * 2])
+        if len(res) + len(rej) != args.batch * 2:
+            _drill_fail("requests lost during slow refresh")
+        if not _await(lambda: worker.n_cycles > n0):
+            _drill_fail("slowed refresh never completed")
+        if refresh_fn.calls < 1:
+            _drill_fail("slow_refresh injector never ran")
+        print(f"  drill PASS: served {len(res)} requests during a "
+              f"{refresh_fn.delay_s * 1e3:.0f}ms-delayed refresh "
+              f"(staleness peaked, then swap landed)")
+    elif kind == "stuck-worker":
+        v0 = guarded.version
+        worker.observe(QT[:args.batch])
+        worker.request_refresh()
+        if not _await(lambda: refresh_fn.calls >= 1):
+            _drill_fail("stuck refresh never entered")
+        time.sleep(0.05)
+        if not worker.stuck(0.02):
+            _drill_fail("watchdog did not flag the stuck worker")
+        # the frontend must keep answering on the stale-but-valid state
+        res, rej = _frontend_traffic(fe, QT[:args.batch * 2])
+        if len(res) != args.batch * 2 or rej:
+            _drill_fail("requests failed while the worker was stuck")
+        if guarded.version != v0:
+            _drill_fail("version moved while the refresh was stuck")
+        release.set()
+        if not _await(lambda: guarded.version > v0):
+            _drill_fail("released worker never swapped")
+        print(f"  drill PASS: {len(res)} requests served on the stale "
+              f"state while stuck; release -> swap (version {v0} -> "
+              f"{guarded.version})")
+    else:
+        raise SystemExit(f"unknown frontend fault kind {kind!r}")
+
+
+def run_frontend(args):
+    """Async serving topology: bounded-queue coalescing frontend over a
+    guarded engine, refresh lifecycle on a supervised background worker,
+    mixed ID/OOD traffic from concurrent clients (see module docstring
+    diagram)."""
+    ds = vectors.make_dataset("serve-frontend", n=args.n, d=args.dim,
+                              n_queries=max(512, args.batch * 8), ood=True,
+                              seed=0)
+    X = jnp.asarray(ds.database)
+    QT = np.asarray(ds.queries_test)              # OOD (drifted) traffic
+    rng = np.random.default_rng(0)
+    q_id = np.asarray(X)[rng.integers(0, args.n, 1024)] \
+        + 0.1 * rng.standard_normal((1024, args.dim)).astype(np.float32)
+    model = _stream_model(args, q_id, X, args.n, template=False)
+    artifacts = streaming.build_streaming_artifacts(
+        args.mode, X, model, capacity=args.n, sort_block=256,
+        slack_blocks=2, host_rerank=args.host_rerank)
+    engine = ServingEngine(msearch.make_state(artifacts), k=10,
+                           kappa=args.kappa, batch_size=args.batch,
+                           dim=args.dim)
+    guarded = lifecycle.GuardedEngine(engine, canary_queries=QT[:args.batch],
+                                      min_overlap=args.min_overlap)
+    supervisor = lifecycle.RefreshSupervisor(guarded)
+    stream = streaming.init_from_artifacts(artifacts, q_id,
+                                           refresh_every=args.batch)
+    release, refresh_fn = None, streaming.refresh
+    if args.inject_fault == "slow-refresh":
+        refresh_fn = faults.slow_refresh(delay_s=0.25)
+    elif args.inject_fault == "stuck-worker":
+        release = threading.Event()
+        refresh_fn = faults.stuck_worker(release, timeout_s=60.0)
+    worker = frontend.RefreshWorker(supervisor, stream,
+                                    source=args.refresh_source,
+                                    refresh_fn=refresh_fn).start()
+    fe = frontend.ServingFrontend(guarded, capacity=args.queue_capacity,
+                                  default_deadline_ms=args.deadline_ms)
+    compiles0 = engine.n_compiles
+    print(f"frontend mode={args.mode} n={args.n} D={args.dim} d={args.d} "
+          f"buckets={fe.buckets} capacity={args.queue_capacity} "
+          f"deadline={args.deadline_ms}ms slo={args.slo_ms}ms "
+          f"compiles(warm)={compiles0}")
+
+    # warm wave: mixed ID/OOD traffic with a background refresh mid-wave
+    mixed = np.empty((args.batch * 4, args.dim), np.float32)
+    mixed[0::2] = q_id[: args.batch * 2]
+    mixed[1::2] = QT[: args.batch * 2]
+    worker.observe(mixed[: args.batch])
+    if args.inject_fault not in ("stuck-worker", "slow-refresh"):
+        worker.request_refresh()
+    res, rej = _frontend_traffic(fe, mixed,
+                                 deadline_ms=args.deadline_ms)
+    if len(res) + len(rej) != len(mixed):
+        raise SystemExit("TRAFFIC INVARIANT VIOLATED: requests lost "
+                         f"({len(res)} served + {len(rej)} refused "
+                         f"!= {len(mixed)} offered)")
+    if args.inject_fault not in ("stuck-worker", "slow-refresh"):
+        if not _await(lambda: worker.n_cycles >= 1):
+            raise SystemExit("background refresh never completed")
+
+    if args.inject_fault:
+        _frontend_drill(args, fe, guarded, worker, release, refresh_fn, QT)
+
+    # end-state invariants: ALWAYS a valid serving state, zero recompiles
+    bad = lifecycle.nonfinite_leaves(guarded.state)
+    if bad:
+        raise SystemExit(f"SERVE INVARIANT VIOLATED: non-finite leaves "
+                         f"in served state: {bad[:4]}")
+    final = guarded.submit(QT[: args.batch])
+    if final.shape != (args.batch, engine.k):
+        raise SystemExit("engine not serving after the run")
+    if engine.n_compiles != compiles0:
+        raise SystemExit(f"RECOMPILED while serving: {compiles0} -> "
+                         f"{engine.n_compiles} executables")
+    fe.close()
+    stopped = worker.stop(timeout=1.0)
+    s = engine.stats
+    print(f"QPS={s.qps:.0f} request_p50={s.request_percentile_ms(50):.1f}ms "
+          f"request_p99={s.request_percentile_ms(99):.1f}ms "
+          f"(slo={args.slo_ms}ms) shed_rate={s.shed_rate:.3f} "
+          f"rejected={s.n_rejected} shed={s.n_shed} "
+          f"deadline_miss={s.n_deadline_miss} sanitized={s.n_sanitized}")
+    print(f"worker: cycles={worker.n_cycles} degraded={worker.degraded} "
+          f"staleness={worker.staleness_s:.2f}s stopped={stopped} | "
+          f"swaps={engine.n_swaps} compiles={engine.n_compiles} "
+          f"(zero recompiles after warmup: True)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="gleanvec", choices=list(MODES))
@@ -399,6 +636,20 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="drive the Section 3.2 observe -> insert -> "
                          "refresh -> swap lifecycle under live traffic")
+    ap.add_argument("--frontend", action="store_true",
+                    help="async serving topology: bounded-queue coalescing "
+                         "frontend + supervised background refresh worker "
+                         "(serve/frontend.py; see module docstring diagram)")
+    ap.add_argument("--queue-capacity", type=int, default=256,
+                    help="--frontend: admission-queue bound; a full queue "
+                         "REJECTS new requests (backpressure, not a drop)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="--frontend: per-request latency budget; "
+                         "unmeetable budgets are rejected at enqueue, "
+                         "expired ones shed at dispatch (default: none)")
+    ap.add_argument("--slo-ms", type=float, default=250.0,
+                    help="--frontend: declared SLO the request p50/p99 "
+                         "summary is reported against")
     ap.add_argument("--cycles", type=int, default=3,
                     help="streaming refresh cycles (--stream)")
     ap.add_argument("--refresh-source", default="stored",
@@ -417,12 +668,32 @@ def main():
                          "pinned-battery top-k overlap drops below this "
                          "(0 disables the canary)")
     ap.add_argument("--inject-fault", default=None,
-                    choices=list(faults.FAULTS),
-                    help="--stream: drill one fault kind mid-stream and "
-                         "verify fail -> degrade -> recover -> swap "
-                         "(exits non-zero on mishandling)")
+                    choices=list(faults.FAULTS) + list(faults.FRONTEND_FAULTS),
+                    help="drill one fault kind and verify the stack "
+                         "handles it (exits non-zero on mishandling). "
+                         "Lifecycle kinds need --stream; concurrency kinds "
+                         "(stuck-worker / slow-refresh / poison-burst / "
+                         "queue-overflow) need --frontend")
     args = ap.parse_args()
 
+    if args.inject_fault in faults.FRONTEND_FAULTS and not args.frontend:
+        raise SystemExit(f"--inject-fault {args.inject_fault} is a "
+                         "concurrency drill: it needs --frontend")
+    if args.inject_fault in faults.FAULTS and not args.stream:
+        raise SystemExit(f"--inject-fault {args.inject_fault} is a "
+                         "lifecycle drill: it needs --stream")
+    if args.frontend:
+        if args.stream:
+            raise SystemExit("--frontend IS the async stream topology; "
+                             "drop --stream")
+        if args.mode == "full" or args.shards:
+            raise SystemExit("--frontend needs a DR mode and a "
+                             "single-device index")
+        if args.index != "flat":
+            raise SystemExit("--frontend serves the flat streaming store "
+                             "(index slack/insert rides --stream)")
+        run_frontend(args)
+        return
     if args.stream:
         if args.mode == "full" or args.shards:
             raise SystemExit("--stream needs a DR mode and a "

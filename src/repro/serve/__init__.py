@@ -1,6 +1,8 @@
-"""Serving layer: batched search engine + fault-tolerant lifecycle
-(guarded swaps / snapshot-restore / refresh supervision) + fault
-injectors + recsys retrieval + LM decode."""
-from repro.serve import decode, engine, faults, lifecycle, retrieval
+"""Serving layer: batched search engine + async coalescing frontend +
+fault-tolerant lifecycle (guarded swaps / snapshot-restore / refresh
+supervision) + fault injectors + recsys retrieval + LM decode."""
+from repro.serve import (decode, engine, faults, frontend, lifecycle,
+                         retrieval)
 
-__all__ = ["decode", "engine", "faults", "lifecycle", "retrieval"]
+__all__ = ["decode", "engine", "faults", "frontend", "lifecycle",
+           "retrieval"]

@@ -29,7 +29,38 @@ import numpy as np
 
 from repro.core import search as msearch
 
-__all__ = ["ServeStats", "ServingEngine", "make_search_fn"]
+__all__ = ["ServeStats", "ServingEngine", "make_search_fn",
+           "sanitize_queries"]
+
+
+def sanitize_queries(queries: np.ndarray, dim: int
+                     ) -> "tuple[np.ndarray, np.ndarray]":
+    """The ONE input-hardening gate every serving surface shares
+    (``ServingEngine.submit`` and the coalescing frontend's ``enqueue``).
+
+    Validates shape/dtype -- a wrong-dimensionality or non-numeric batch
+    raises a clear ``ValueError`` instead of surfacing as an XLA shape
+    error from inside the compiled step -- and zeroes rows containing
+    non-finite values so one poisoned row can never contaminate the rows
+    sharing its padded batch. Returns ``(clean (n, dim) float32,
+    bad_rows (n,) bool)``; callers report the flagged rows as all ``-1``
+    ids and count them in ``ServeStats.n_sanitized``.
+    """
+    queries = np.asarray(queries)
+    if queries.ndim != 2 or queries.shape[1] != dim:
+        raise ValueError(
+            f"queries must be a (n, {dim}) array; got shape "
+            f"{queries.shape}")
+    if not (np.issubdtype(queries.dtype, np.floating)
+            or np.issubdtype(queries.dtype, np.integer)):
+        raise ValueError(
+            f"queries must be real-valued (float or int), got dtype "
+            f"{queries.dtype}")
+    queries = queries.astype(np.float32, copy=False)
+    bad_rows = ~np.isfinite(queries).all(axis=1)
+    if bad_rows.any():
+        queries = np.where(bad_rows[:, None], np.float32(0), queries)
+    return queries, bad_rows
 
 
 def _engine_step(queries, state: msearch.ServingState, *, k: int,
@@ -87,6 +118,18 @@ class ServeStats:
     n_batches: int = 0
     n_sanitized: int = 0          # non-finite query rows zeroed out
     total_s: float = 0.0
+    # Overload accounting (async frontend, :mod:`repro.serve.frontend`):
+    # ``n_rejected`` counts requests refused AT ENQUEUE (bounded queue at
+    # capacity, or a deadline the admission estimate says cannot be met);
+    # ``n_shed`` counts requests the dispatcher dropped from the queue
+    # because their deadline expired while waiting; ``n_deadline_miss``
+    # counts requests that were served but completed past their deadline
+    # (the SLO-miss tail the shed policy exists to bound). Rejection and
+    # shedding are LOUD (a backpressure error to the client), never a
+    # silent drop.
+    n_rejected: int = 0
+    n_shed: int = 0
+    n_deadline_miss: int = 0
     # Host-tier traffic accounting (two-level rerank hierarchy only):
     # ``host_bytes`` is the measured host->device rerank-row traffic,
     # ``host_bytes_lb`` the m*kappa*D*4 lower bound per batch -- the bench
@@ -98,6 +141,7 @@ class ServeStats:
     latencies_ms: Optional[Deque[float]] = None
     swap_ms: Optional[Deque[float]] = None
     prefetch_ms: Optional[Deque[float]] = None    # host gather + H2D + rerank
+    request_ms: Optional[Deque[float]] = None     # frontend enqueue->resolve
 
     def __post_init__(self):
         if self.latencies_ms is None:
@@ -106,6 +150,8 @@ class ServeStats:
             self.swap_ms = collections.deque(maxlen=self.window)
         if self.prefetch_ms is None:
             self.prefetch_ms = collections.deque(maxlen=self.window)
+        if self.request_ms is None:
+            self.request_ms = collections.deque(maxlen=self.window)
 
     @property
     def qps(self) -> float:
@@ -122,6 +168,21 @@ class ServeStats:
         return float(np.percentile(np.asarray(self.latencies_ms,
                                               np.float64), p)) \
             if self.latencies_ms else 0.0
+
+    def request_percentile_ms(self, p: float) -> float:
+        """Percentile over per-REQUEST latency (enqueue -> resolved), the
+        number an SLO is stated against -- queue wait included, unlike the
+        per-batch compute window ``percentile_ms`` reads."""
+        return float(np.percentile(np.asarray(self.request_ms,
+                                              np.float64), p)) \
+            if self.request_ms else 0.0
+
+    @property
+    def shed_rate(self) -> float:
+        """Fraction of offered requests rejected or shed (0.0 when
+        nothing was offered): the overload pressure-relief observable."""
+        offered = self.n_queries + self.n_rejected + self.n_shed
+        return (self.n_rejected + self.n_shed) / offered if offered else 0.0
 
 
 class ServingEngine:
@@ -282,19 +343,8 @@ class ServingEngine:
         queries = np.asarray(queries)
         if queries.size == 0 and queries.ndim <= 2:
             return np.zeros((0, self.k), np.int32)
-        if queries.ndim != 2 or queries.shape[1] != self.dim:
-            raise ValueError(
-                f"queries must be a (n, {self.dim}) array; got shape "
-                f"{queries.shape}")
-        if not (np.issubdtype(queries.dtype, np.floating)
-                or np.issubdtype(queries.dtype, np.integer)):
-            raise ValueError(
-                f"queries must be real-valued (float or int), got dtype "
-                f"{queries.dtype}")
-        queries = queries.astype(np.float32, copy=False)
-        bad_rows = ~np.isfinite(queries).all(axis=1)
+        queries, bad_rows = sanitize_queries(queries, self.dim)
         if bad_rows.any():
-            queries = np.where(bad_rows[:, None], np.float32(0), queries)
             self.stats.n_sanitized += int(bad_rows.sum())
         out = []
         n = queries.shape[0]

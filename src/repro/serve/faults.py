@@ -7,11 +7,16 @@ poisoned or mis-shaped query batch -- as a pure function of its inputs
 (plus an explicit seed where randomness is involved), so the tier-1
 recovery tests and the ``serving_faults`` bench rows replay bit-identical
 failures. ``FAULTS`` names the kinds ``launch/serve.py --inject-fault``
-can drill end-to-end.
+can drill end-to-end; ``FRONTEND_FAULTS`` names the concurrency drills
+the async frontend (``--frontend --inject-fault``) runs on top of them --
+a stuck refresh worker, a slow (latency-spike) refresh, a poisoned query
+burst, and admission-queue overflow.
 """
 from __future__ import annotations
 
 import os
+import threading
+import time
 from typing import Optional, Sequence
 
 import jax
@@ -22,14 +27,20 @@ from repro.core import search as msearch
 from repro.core import streaming
 from repro.train import checkpoint
 
-__all__ = ["FAULTS", "nan_moments", "corrupt_scorer_leaf",
-           "scramble_scorer_leaf", "failing", "truncate_snapshot",
-           "poison_queries", "wrong_dim_queries"]
+__all__ = ["FAULTS", "FRONTEND_FAULTS", "nan_moments",
+           "corrupt_scorer_leaf", "scramble_scorer_leaf", "failing",
+           "truncate_snapshot", "poison_queries", "wrong_dim_queries",
+           "slow_refresh", "stuck_worker", "burst_overflow"]
 
 # the drill-able kinds (launch/serve.py --inject-fault <kind>)
 FAULTS = ("nan-moments", "corrupt-scorer", "scramble-scorer",
           "refresh-exception", "truncated-snapshot", "poison-queries",
           "wrong-dim-queries")
+
+# concurrency drills for the async frontend
+# (launch/serve.py --frontend --inject-fault <kind>)
+FRONTEND_FAULTS = ("stuck-worker", "slow-refresh", "poison-burst",
+                   "queue-overflow")
 
 
 def nan_moments(stream: streaming.StreamingState,
@@ -148,3 +159,67 @@ def wrong_dim_queries(queries: np.ndarray) -> np.ndarray:
     """Drop the last feature: the wrong-dimensionality batch that must
     raise a clear ``ValueError`` instead of an XLA shape error."""
     return np.asarray(queries)[:, :-1]
+
+
+class slow_refresh:
+    """Wrap a refresh fn so every call first sleeps ``delay_s`` -- the
+    latency-spike refresh (an overloaded solver, a slow remote read). A
+    frontend with a background :class:`~repro.serve.frontend.
+    RefreshWorker` must keep serving the current state throughout, with
+    only ``staleness_s`` growing. ``sleep`` is injectable so tests can
+    observe the delay without paying wall time; ``calls`` counts
+    invocations."""
+
+    def __init__(self, fn=streaming.refresh, delay_s: float = 0.2,
+                 sleep=time.sleep):
+        self.fn = fn
+        self.delay_s = delay_s
+        self.sleep = sleep
+        self.calls = 0
+
+    def __call__(self, *args, **kwargs):
+        self.calls += 1
+        self.sleep(self.delay_s)
+        return self.fn(*args, **kwargs)
+
+
+class stuck_worker:
+    """Wrap a refresh fn so every call BLOCKS until ``release`` is set
+    (hung I/O, a deadlocked solve), then delegates -- the stuck-refresh-
+    worker drill. The worker thread strands inside the call; the serving
+    path must be unaffected (stale-but-valid state keeps answering) and
+    ``RefreshWorker.stuck(timeout_s)`` must flip true. A ``timeout_s``
+    backstop raises instead of pinning a test forever; ``calls`` /
+    ``releases`` count entries and successful exits."""
+
+    def __init__(self, release: threading.Event, fn=streaming.refresh,
+                 timeout_s: float = 30.0):
+        self.release = release
+        self.fn = fn
+        self.timeout_s = timeout_s
+        self.calls = 0
+        self.releases = 0
+
+    def __call__(self, *args, **kwargs):
+        self.calls += 1
+        if not self.release.wait(self.timeout_s):
+            raise TimeoutError(
+                f"stuck_worker held past its {self.timeout_s}s backstop")
+        self.releases += 1
+        return self.fn(*args, **kwargs)
+
+
+def burst_overflow(dim: int, n: int, seed: int = 0,
+                   poison_frac: float = 0.0) -> np.ndarray:
+    """A deterministic (n, dim) query burst sized to overflow a bounded
+    admission queue (pick ``n`` > capacity + one bucket). With
+    ``poison_frac`` > 0, that fraction of rows (seeded choice) carries a
+    NaN -- the poisoned-burst drill: sanitized rows resolve as all-(-1)
+    ids while their bucket-mates' results stay exact."""
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((n, dim)).astype(np.float32)
+    if poison_frac > 0:
+        n_bad = max(1, int(round(poison_frac * n)))
+        rows = rng.choice(n, size=n_bad, replace=False)
+        q[rows, 0] = np.nan
+    return q

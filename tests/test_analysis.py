@@ -20,7 +20,8 @@ from repro.analysis.hlo_rules import (BufferPresent, DonationCoverage,
                                       NoGatherOnFusedPath,
                                       NoHostTransferInStep,
                                       WhileTripBudget, donated_params)
-from repro.analysis.protocol_rules import (IdTranslationContract,
+from repro.analysis.protocol_rules import (BoundedCompileCache,
+                                           IdTranslationContract,
                                            LeaflessAuxHostTier,
                                            ProtocolContext, ScorerSurface,
                                            StaticConfigInTreedef,
@@ -166,7 +167,8 @@ def test_protocol_rules_pass_on_real_scorers(ctx, mode):
 def test_protocol_rules_pass_on_indices_and_host_tier(ctx):
     assert_rules(ctx, [TreedefStableIndexRefresh("flat"),
                        LeaflessAuxHostTier(),
-                       StaticConfigInTreedef("flat", "block")])
+                       StaticConfigInTreedef("flat", "block"),
+                       BoundedCompileCache()])
 
 
 class _StubCtx:
@@ -233,6 +235,18 @@ def test_static_config_fails_on_config_leaked_into_leaves(ctx):
     res = StaticConfigInTreedef(lambda _ctx: LeakyIndex(), "block") \
         .check(ctx)
     assert not res.passed and "treedef" in res.evidence
+
+
+def test_bounded_compile_cache_fails_on_stray_dispatch(ctx, monkeypatch):
+    from repro.serve.frontend import ServingFrontend
+
+    # seeded violation: dispatch the RAW request count instead of the
+    # smallest covering bucket -- odd-size batches stray off the static
+    # shape set (and each stray shape grows the compile cache)
+    monkeypatch.setattr(ServingFrontend, "_pick_bucket",
+                        lambda self, n: n)
+    res = BoundedCompileCache().check(ctx)
+    assert not res.passed and "buckets" in res.evidence
 
 
 def test_leafless_host_tier_fails_on_leafy_store(ctx, monkeypatch):

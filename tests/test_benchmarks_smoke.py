@@ -81,11 +81,20 @@ def test_run_smoke_path(tmp_path):
     """The CLI harness --smoke path runs end-to-end, writes the CSV and the
     machine-readable BENCH_<name>.json files, and covers the sorted,
     fused-int8, sharded-index and reduced-probe modes."""
+    import glob
     import json
 
     from benchmarks import run as bench_run
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    baselines = {p: open(p, "rb").read()
+                 for p in glob.glob(os.path.join(repo_root, "BENCH_*.json"))}
     out = tmp_path / "bench.csv"
     bench_run.main(["--smoke", "--out", str(out)])
+    # mirror guard: a smoke run must leave every committed repo-root
+    # full-size baseline byte-identical
+    for p, before in baselines.items():
+        assert open(p, "rb").read() == before, \
+            f"--smoke overwrote the committed baseline {p}"
     rows = out.read_text().strip().splitlines()
     assert rows[0] == "name,us_per_call,derived"
     assert any(r.startswith("table1_search/flat/gleanvec-") and "-int8" in r
@@ -177,3 +186,48 @@ def test_run_smoke_path(tmp_path):
     fb = by_name["serving_stream/faults/restore-fallback"]
     assert fb["fallback"] == 1 and fb["bitident"] == 1
     assert fb["recompiles"] == 0
+
+    # overload-safe async frontend (declared rows): bursty and diurnal
+    # arrivals meet the declared SLO, sustained overload sheds instead of
+    # blowing the served p99, and the background-refresh staleness row
+    # lands its swap with the serving-step cache frozen
+    for row in ("bursty", "diurnal"):
+        e = by_name[f"serving_stream/frontend/{row}"]
+        assert e["slo_ok"] == 1 and e["qps"] > 0, e
+    ov = by_name["serving_stream/frontend/overload"]
+    assert ov["shed_rate"] > 0 and ov["p99_ms"] <= ov["slo_ms"], ov
+    st = by_name["serving_stream/frontend/staleness"]
+    assert st["swaps"] >= 1 and st["serving_recompiles"] == 0
+    assert st["cycles"] >= 1 and st["stale_peak_ms"] >= 0
+
+
+def test_workload_field_guards_the_root_mirror(tmp_path):
+    """``workload_of`` drives the run.py mirror guard: legacy or
+    unreadable baselines default to the FULL workload (guard stays
+    closed), and a freshly written file records the workload it actually
+    ran at."""
+    import json
+
+    import benchmarks.common as common
+    full = {"bench_n": common.FULL_BENCH_N,
+            "bench_queries": common.FULL_BENCH_QUERIES}
+    legacy = tmp_path / "BENCH_legacy.json"
+    legacy.write_text(json.dumps({"bench": "legacy", "results": []}))
+    assert common.workload_of(str(legacy)) == full
+    junk = tmp_path / "BENCH_junk.json"
+    junk.write_text("{not json")
+    assert common.workload_of(str(junk)) == full
+    assert common.workload_of(str(tmp_path / "missing.json")) == full
+
+    saved = (list(common.RESULTS), list(common.ROWS), list(common.DECLARED))
+    try:
+        common.RESULTS.clear()
+        common.DECLARED.clear()
+        common.emit("probe/workload", 1.0, "ok=1")
+        paths = common.write_json_results(str(tmp_path))
+        ran = {"bench_n": common.BENCH_N,
+               "bench_queries": common.BENCH_QUERIES}
+        assert ran != full          # module fixture shrank the workload
+        assert common.workload_of(paths[0]) == ran
+    finally:
+        common.RESULTS[:], common.ROWS[:], common.DECLARED[:] = saved

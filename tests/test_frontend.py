@@ -1,0 +1,391 @@
+"""Async serving frontend (serve/frontend.py + the frontend injectors in
+serve/faults.py).
+
+Four guarantee layers:
+
+* COALESCING PARITY -- a request admitted through the bounded queue and
+  padded into a static bucket resolves BIT-IDENTICAL to the same query
+  sent through ``ServingEngine.submit`` alone, for every scorer mode, ID
+  and OOD traffic; poisoned rows resolve to all ``-1`` without touching
+  their bucket-mates.
+* BOUNDED COMPILES -- the bucket-shape set is static and warmed up
+  front: dispatching every bucket size, interleaved with guarded swaps,
+  compiles NOTHING (compile_counter-asserted); every dispatched shape is
+  a declared bucket.
+* ADMISSION / SHEDDING -- a full queue and an unmeetable deadline reject
+  at enqueue, an expired deadline sheds at dispatch, a late batch counts
+  a deadline miss -- all LOUD (``Rejected`` with a stable reason slug)
+  and all counted in ``ServeStats``.
+* SUPERVISED BACKGROUND REFRESH -- the worker hands refreshed states to
+  ``GuardedEngine.swap`` off-thread with zero serving-step cache growth;
+  a persistently failing refresh degrades then auto-recovers; a stuck
+  refresh strands only the worker (watchdog flags it, serving continues
+  on the stale-but-valid state, release -> swap lands).
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gleanvec as gv, leanvec_sphering as lvs, streaming
+from repro.core import search as msearch
+from repro.core.scorer import MODES
+from repro.data import vectors
+from repro.serve import faults, lifecycle
+from repro.serve.engine import ServingEngine
+from repro.serve.frontend import (MAX_BUCKETS, Rejected, RefreshWorker,
+                                  ServingFrontend, bucket_shapes)
+
+pytestmark = pytest.mark.tier1
+
+D, N, N0, CAP = 32, 512, 384, 512
+BATCH, K, KAPPA = 16, 10, 30
+
+
+@pytest.fixture(scope="module")
+def env():
+    ds = vectors.make_dataset("frontend", n=N, d=D, n_queries=256,
+                              ood=True, seed=9)
+    X = jnp.asarray(ds.database)
+    rng = np.random.default_rng(0)
+    q_init = np.asarray(X)[rng.integers(0, N0, 256)] \
+        + 0.1 * rng.standard_normal((256, D)).astype(np.float32)
+    model = gv.fit(jax.random.PRNGKey(0), jnp.asarray(q_init), X[:N0],
+                   c=4, d=8)
+    arts = streaming.build_streaming_artifacts(
+        "gleanvec-int8", X[:N0], model, capacity=CAP, sort_block=64,
+        slack_blocks=2)
+    return ds, X, q_init, model, arts
+
+
+@pytest.fixture(scope="module")
+def engine(env):
+    _, _, _, _, arts = env
+    return ServingEngine(msearch.make_state(arts), k=K, kappa=KAPPA,
+                         batch_size=BATCH, dim=D)
+
+
+def drain_all(fe):
+    while fe.queue_depth:
+        fe.drain_once()
+
+
+class ScriptedClock:
+    """Returns the scripted instants in order, then repeats the last --
+    drives admission/shed/miss paths without wall time or threads."""
+
+    def __init__(self, *vals):
+        self.vals = list(vals)
+
+    def __call__(self):
+        return self.vals.pop(0) if len(self.vals) > 1 else self.vals[0]
+
+
+# ---------------------------------------------------------------------------
+# Bucket shapes: the static contract surface.
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_shapes_powers_of_two_and_max():
+    assert bucket_shapes(16) == (1, 2, 4, 8, 16)
+    assert bucket_shapes(1) == (1,)
+    # a non-power max batch is always its own (largest) bucket
+    assert bucket_shapes(24) == (1, 2, 4, 8, 16, 24)
+    with pytest.raises(ValueError, match=">= 1"):
+        bucket_shapes(0)
+    with pytest.raises(ValueError, match="MAX_BUCKETS"):
+        bucket_shapes(1 << (MAX_BUCKETS + 1))
+
+
+# ---------------------------------------------------------------------------
+# Coalescing parity: bucketed == unbatched submit, every mode, ID + OOD.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_coalesced_parity_every_mode(env, mode):
+    ds, X, q_init, gvm, _ = env
+    if mode == "full":
+        model = None
+    elif mode.startswith("sphering"):
+        model = lvs.fit(jnp.asarray(ds.queries_learn), X[:N0], 8)
+    else:
+        model = gvm
+    arts = msearch.build_artifacts(mode, X[:N0], model)
+    eng = ServingEngine(msearch.make_state(arts), k=K, kappa=KAPPA,
+                        batch_size=BATCH, dim=D)
+    fe = ServingFrontend(eng, capacity=64, start=False, warmup=False)
+    # mixed traffic, deliberately NOT a bucket multiple (13 ID + 13 OOD)
+    Q = np.concatenate([q_init[:13], np.asarray(ds.queries_test)[:13]])
+    futs = [fe.enqueue(q) for q in Q]
+    drain_all(fe)
+    got = np.stack([f.result() for f in futs])
+    np.testing.assert_array_equal(got, eng.submit(Q))
+    assert fe.dispatched_shapes <= set(fe.buckets)
+
+
+def test_poisoned_request_isolated_from_bucket_mates(env, engine):
+    ds, *_ = env
+    fe = ServingFrontend(engine, capacity=64, start=False, warmup=False)
+    Q = np.asarray(ds.queries_test)[:8]
+    bad = Q[3].copy()
+    bad[0] = np.nan
+    n0 = engine.stats.n_sanitized
+    futs = [fe.enqueue(q) for q in Q[:3]] + [fe.enqueue(bad)] \
+        + [fe.enqueue(q) for q in Q[4:]]
+    drain_all(fe)
+    got = np.stack([f.result() for f in futs])
+    assert (got[3] == -1).all()
+    assert engine.stats.n_sanitized == n0 + 1
+    clean = engine.submit(Q)            # same queries, no poisoned row
+    np.testing.assert_array_equal(got[:3], clean[:3])
+    np.testing.assert_array_equal(got[4:], clean[4:])
+
+
+def test_enqueue_hardens_input(engine):
+    fe = ServingFrontend(engine, capacity=8, start=False, warmup=False)
+    with pytest.raises(ValueError, match="ONE query"):
+        fe.enqueue(np.zeros((2, D), np.float32))
+    with pytest.raises(ValueError, match=f"\\(n, {D}\\)"):
+        fe.enqueue(np.zeros(D - 1, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Bounded compiles: all buckets + guarded swaps, zero backend compiles.
+# ---------------------------------------------------------------------------
+
+
+def test_zero_recompiles_across_buckets_and_swaps(env, compile_counter):
+    ds, X, q_init, model, arts = env
+    eng = ServingEngine(msearch.make_state(arts), k=K, kappa=KAPPA,
+                        batch_size=BATCH, dim=D)
+    guarded = lifecycle.GuardedEngine(
+        eng, canary_queries=np.asarray(ds.queries_test)[:BATCH])
+    fe = ServingFrontend(guarded, capacity=64, start=False)   # warms buckets
+    # two legitimate refresh candidates, prepared BEFORE the counter
+    # resets (the eager refresh ops compile once, separately from the
+    # serving step); the first swap also warms the guard's validate path
+    stream = streaming.init_from_artifacts(arts, jnp.asarray(q_init),
+                                           refresh_every=64)
+    stream = streaming.observe_queries(
+        stream, jnp.asarray(ds.queries_test)[:64])
+    stream = streaming.refresh(stream)
+    cand1 = streaming.refresh_state(eng.state, stream, source="full")
+    guarded.swap(cand1)
+    stream2 = streaming.refresh(streaming.observe_queries(
+        stream, jnp.asarray(ds.queries_test)[64:128]))
+    # built AFTER the first swap so its version leaf is monotonic
+    cand2 = streaming.refresh_state(eng.state, stream2, source="full")
+    Q = np.asarray(ds.queries_test)
+
+    compile_counter.reset()
+    for size in fe.buckets:             # every declared bucket shape
+        for q in Q[:size]:
+            fe.enqueue(q)
+        fe.drain_once()
+    guarded.swap(cand2)                 # swap mid-traffic
+    for q in Q[:5]:
+        fe.enqueue(q)
+    drain_all(fe)
+    assert compile_counter.count == 0, \
+        f"{compile_counter.count} recompiles across the bucket set"
+    assert fe.dispatched_shapes == set(fe.buckets)
+    assert eng.n_compiles == len(fe.buckets)
+
+
+# ---------------------------------------------------------------------------
+# Admission control and load shedding: loud, counted, deterministic.
+# ---------------------------------------------------------------------------
+
+
+def test_queue_full_rejects_loudly(env, engine):
+    ds, *_ = env
+    fe = ServingFrontend(engine, capacity=2, start=False, warmup=False)
+    Q = np.asarray(ds.queries_test)
+    n0 = engine.stats.n_rejected
+    fe.enqueue(Q[0])
+    fe.enqueue(Q[1])
+    with pytest.raises(Rejected, match="queue-full") as ei:
+        fe.enqueue(Q[2])
+    assert ei.value.reason == "queue-full"
+    assert engine.stats.n_rejected == n0 + 1
+    drain_all(fe)                       # admitted requests still serve
+
+
+def test_deadline_admission_shed_and_miss_accounting(env, engine):
+    ds, *_ = env
+    Q = np.asarray(ds.queries_test)
+    s = engine.stats
+    base = (s.n_rejected, s.n_shed, s.n_deadline_miss)
+
+    # admission: predicted wait (1 batch x 100ms) exceeds a 50ms budget
+    fe = ServingFrontend(engine, capacity=8, start=False, warmup=False,
+                         est_batch_ms=100.0, ewma_alpha=0.0,
+                         clock=ScriptedClock(0.0))
+    with pytest.raises(Rejected, match="deadline") as ei:
+        fe.enqueue(Q[0], deadline_ms=50.0)
+    assert ei.value.reason == "deadline"
+    assert s.n_rejected == base[0] + 1
+
+    # shed: admitted at t=0 with a 500ms budget, drained at t=1.0
+    clk = ScriptedClock(0.0, 1.0)
+    fe = ServingFrontend(engine, capacity=8, start=False, warmup=False,
+                         est_batch_ms=100.0, ewma_alpha=0.0, clock=clk)
+    fut = fe.enqueue(Q[0], deadline_ms=500.0)
+    assert fe.drain_once() == 1
+    with pytest.raises(Rejected, match="shed"):
+        fut.result()
+    assert s.n_shed == base[1] + 1
+
+    # miss: admitted and dispatched in time, but the batch lands at
+    # t=0.1 -- past the 50ms budget; served anyway, counted as a miss
+    fe = ServingFrontend(engine, capacity=8, start=False, warmup=False,
+                         est_batch_ms=0.0, ewma_alpha=0.0,
+                         clock=ScriptedClock(0.0, 0.0, 0.0, 0.1))
+    fut = fe.enqueue(Q[0], deadline_ms=50.0)
+    fe.drain_once()
+    assert fut.result().shape == (K,)   # late, but answered
+    assert s.n_deadline_miss == base[2] + 1
+    assert s.shed_rate > 0.0
+
+
+def test_burst_overflow_accounting(env, engine):
+    ds, *_ = env
+    burst = faults.burst_overflow(D, 24, seed=3, poison_frac=0.25)
+    np.testing.assert_array_equal(burst,
+                                  faults.burst_overflow(D, 24, seed=3,
+                                                        poison_frac=0.25))
+    assert int((~np.isfinite(burst).all(axis=1)).sum()) == 6
+    fe = ServingFrontend(engine, capacity=8, start=False, warmup=False)
+    admitted, rejected = [], 0
+    for q in burst:
+        try:
+            admitted.append(fe.enqueue(q))
+        except Rejected as e:
+            assert e.reason == "queue-full"
+            rejected += 1
+    assert len(admitted) + rejected == len(burst)   # nothing silent
+    assert rejected == len(burst) - 8
+    drain_all(fe)
+    assert all(f.done() for f in admitted)
+
+
+def test_shutdown_drains_or_fails_backlog(env, engine):
+    ds, *_ = env
+    Q = np.asarray(ds.queries_test)
+    fe = ServingFrontend(engine, capacity=8, start=False, warmup=False)
+    futs = [fe.enqueue(q) for q in Q[:3]]
+    fe.close(drain=True)
+    assert all(f.result().shape == (K,) for f in futs)
+    with pytest.raises(Rejected, match="shutdown"):
+        fe.enqueue(Q[0])
+    fe2 = ServingFrontend(engine, capacity=8, start=False, warmup=False)
+    futs2 = [fe2.enqueue(q) for q in Q[:3]]
+    fe2.close(drain=False)
+    for f in futs2:
+        with pytest.raises(Rejected, match="shutdown"):
+            f.result()
+
+
+# ---------------------------------------------------------------------------
+# Supervised background refresh: swap off-thread, degrade, stick, recover.
+# ---------------------------------------------------------------------------
+
+
+def make_supervised(env, **kw):
+    ds, X, q_init, model, arts = env
+    eng = ServingEngine(msearch.make_state(arts), k=K, kappa=KAPPA,
+                        batch_size=BATCH, dim=D)
+    guarded = lifecycle.GuardedEngine(
+        eng, canary_queries=np.asarray(ds.queries_test)[:BATCH])
+    sup = lifecycle.RefreshSupervisor(guarded, backoff_s=0.0,
+                                      sleep=lambda s: None, **kw)
+    stream = streaming.init_from_artifacts(arts, jnp.asarray(q_init),
+                                           refresh_every=64)
+    return eng, guarded, sup, stream
+
+
+def _await(cond, timeout_s=30.0):
+    t0 = time.monotonic()
+    while not cond():
+        if time.monotonic() - t0 > timeout_s:
+            return False
+        time.sleep(0.01)
+    return True
+
+
+def test_background_worker_swaps_without_cache_growth(env):
+    ds, *_ = env
+    eng, guarded, sup, stream = make_supervised(env)
+    n_exec, v0 = eng.n_compiles, guarded.version
+    worker = RefreshWorker(sup, stream, source="stored").start()
+    try:
+        worker.observe(np.asarray(ds.queries_test)[:64])
+        worker.request_refresh()
+        assert _await(lambda: guarded.version > v0), "swap never landed"
+        assert worker.n_cycles >= 1 and worker.healthy
+        assert eng.n_compiles == n_exec     # serving-step cache frozen
+        assert eng.submit(np.asarray(ds.queries_test)[:4]).shape == (4, K)
+    finally:
+        assert worker.stop()
+
+
+def test_failing_refresh_degrades_then_recovers(env):
+    ds, *_ = env
+    eng, guarded, sup, stream = make_supervised(env, max_retries=1)
+    fn = faults.failing(streaming.refresh, n_failures=100)
+    worker = RefreshWorker(sup, stream, source="stored", refresh_fn=fn)
+    worker.observe(np.asarray(ds.queries_test)[:64])
+    rep = worker.run_cycle()            # synchronous: no thread needed
+    assert rep.outcome == "degraded"
+    assert sup.n_degraded >= 1
+    # stale-but-valid state keeps serving while degraded
+    assert not lifecycle.nonfinite_leaves(guarded.state)
+    assert eng.submit(np.asarray(ds.queries_test)[:4]).shape == (4, K)
+    v0 = guarded.version
+    fn.n_failures = 0                   # fault clears
+    worker.observe(np.asarray(ds.queries_test)[64:128])
+    rep2 = worker.run_cycle()
+    assert rep2.outcome == "ok" and guarded.version > v0
+    assert sup.n_recoveries >= 1 and not worker.degraded
+
+
+def test_stuck_worker_flags_serves_stale_then_swaps_on_release(env):
+    ds, *_ = env
+    eng, guarded, sup, stream = make_supervised(env)
+    release = threading.Event()
+    stuck = faults.stuck_worker(release, timeout_s=30.0)
+    worker = RefreshWorker(sup, stream, source="stored",
+                           refresh_fn=stuck).start()
+    try:
+        v0 = guarded.version
+        worker.observe(np.asarray(ds.queries_test)[:64])
+        worker.request_refresh()
+        assert _await(lambda: stuck.calls >= 1), "refresh never entered"
+        time.sleep(0.05)
+        assert worker.stuck(0.02)       # watchdog fires
+        assert guarded.version == v0    # no torn/partial swap
+        # serving continues on the stale-but-valid state
+        assert eng.submit(np.asarray(ds.queries_test)[:4]).shape == (4, K)
+        release.set()
+        assert _await(lambda: guarded.version > v0), \
+            "released worker never swapped"
+        assert stuck.releases == 1 and not worker.stuck(10.0)
+    finally:
+        release.set()
+        assert worker.stop()
+
+
+def test_slow_refresh_injector_counts_and_delegates(env):
+    _, _, q_init, _, arts = env
+    sleeps = []
+    slow = faults.slow_refresh(delay_s=0.123, sleep=sleeps.append)
+    stream = streaming.init_from_artifacts(arts, jnp.asarray(q_init),
+                                           refresh_every=64)
+    out = slow(stream)
+    assert slow.calls == 1 and sleeps == [0.123]
+    assert jax.tree_util.tree_structure(out) == \
+        jax.tree_util.tree_structure(stream)
